@@ -1,0 +1,73 @@
+"""Figs. 4/5 analog — FA2 vs FLASH-D datapath accounting.
+
+The paper synthesizes both kernels at 28 nm and reports −22.8% area / −20.3%
+power on average. Silicon synthesis isn't reproducible here; the underlying
+driver is the per-step datapath op inventory (paper §IV-A):
+
+  FA2      : two vector multipliers + adder, max unit, ℓ datapath
+             (2 mult + FMA), two exp units, final vector divider
+  FLASH-D  : ONE vector multiplier + adder + subtractor (Eq. 12 FMA form),
+             sigmoid + ln PWL units, no max, no ℓ, no divider
+
+We count per-(key,query)-step ops for hidden dims d ∈ {16, 64, 256} and
+weight them with standard relative FP-op area costs (mult = 1.0/elem,
+add/sub = 0.35, div = 3.0, cmp/max = 0.15, PWL nonlinearity = 1.35 —
+one mult + one add + segment select, per §IV-B's 8-segment design;
+weights from published FPU synthesis ratios — bf16 multiplier-relative).
+The derived column is FLASH-D's reduction vs FA2, the quantity Figs. 4/5
+measure post-synthesis. Also reported: the tile-level carried-state saving
+(FA2 carries (m, ℓ), FLASH-D carries Λ only) that drives the TPU kernel's
+VMEM/register footprint (DESIGN.md §2.2).
+"""
+
+from __future__ import annotations
+
+W_MULT, W_ADD, W_DIV, W_CMP, W_PWL = 1.0, 0.35, 3.0, 0.15, 1.35
+
+
+def _shared_dot(d: int) -> float:
+    return d * W_MULT + (d - 1) * W_ADD
+
+
+def fa2_step_cost(d: int, n_amortize: int = 1024) -> float:
+    c = _shared_dot(d)
+    c += W_CMP  # m update (max)
+    c += 2 * W_PWL  # exp(m−m'), exp(s−m')
+    c += 2 * W_MULT + W_ADD  # ℓ ← ℓα + p
+    c += 2 * d * W_MULT + d * W_ADD  # o ← o·α + v·p
+    c += (d * W_DIV) / n_amortize  # final o/ℓ, amortized over N steps
+    return c
+
+
+def flashd_step_cost(d: int) -> float:
+    c = _shared_dot(d)
+    c += 2 * W_ADD  # sigmoid argument s_i − s_{i−1} + ln w
+    c += W_PWL  # sigmoid PWL (division hidden inside)
+    c += W_PWL  # ln PWL for the next step's argument
+    c += d * W_ADD + d * W_MULT + d * W_ADD  # Eq. 12: o + (v − o)·w
+    return c
+
+
+def run(report):
+    for d in (16, 64, 256):
+        fa2 = fa2_step_cost(d)
+        fld = flashd_step_cost(d)
+        red = 100.0 * (1.0 - fld / fa2)
+        report(
+            f"fig4_area_proxy_d{d}", fld,
+            f"fa2={fa2:.1f} flashd={fld:.1f} reduction={red:.1f}% "
+            f"(paper: 20-28% across formats)",
+        )
+    # dynamic-power proxy: ops × activity; identical activity ⇒ same ratio,
+    # minus the ℓ/m register toggling FLASH-D removes (2 fewer live scalars)
+    for d in (16, 64, 256):
+        fa2 = fa2_step_cost(d) + 2 * W_ADD  # ℓ,m register writes/toggles
+        fld = flashd_step_cost(d) + 1 * W_ADD  # ln w register
+        red = 100.0 * (1.0 - fld / fa2)
+        report(
+            f"fig5_power_proxy_d{d}", fld,
+            f"reduction={red:.1f}% (paper: 16-27%)",
+        )
+    # tile-level carried state (TPU kernel, per q-row, f32 scalars)
+    report("tile_carry_fa2", 2.0, "m + l row-vectors in VMEM scratch")
+    report("tile_carry_flashd", 1.0, "Λ only — 50% scratch-row saving, no epilogue pass")

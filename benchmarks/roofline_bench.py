@@ -1,0 +1,52 @@
+"""§Roofline table — reads dryrun_results.json and emits per-cell terms.
+
+One row per (arch × shape × mesh): the three roofline times (seconds),
+dominant term, MODEL_FLOPS/HLO ratio, memory/device. This is the benchmark
+the §Perf hillclimb iterates against (EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+DEFAULT_PATHS = ("dryrun_results.json", "/root/repo/dryrun_results.json")
+
+
+def load_results(path=None):
+    for p in ([path] if path else DEFAULT_PATHS):
+        if p and os.path.exists(p):
+            with open(p) as f:
+                return json.load(f)
+    return []
+
+
+def run(report):
+    results = load_results()
+    if not results:
+        report("roofline_missing", 0.0,
+               "run `python -m repro.launch.dryrun` first to populate dryrun_results.json")
+        return
+    n_ok = n_skip = n_err = 0
+    for r in sorted(results, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        cell = f"{r['arch']}|{r['shape']}|{r['mesh']}"
+        if r["status"] == "skipped":
+            n_skip += 1
+            report(f"roofline_{cell}", 0.0, f"SKIPPED: {r['reason'][:90]}")
+            continue
+        if r["status"] != "ok":
+            n_err += 1
+            report(f"roofline_{cell}", 0.0, f"ERROR: {r.get('error','?')[:90]}")
+            continue
+        n_ok += 1
+        rl = r["roofline"]
+        t_dom = max(rl["t_compute"], rl["t_memory"], rl["t_collective"])
+        mem = (r.get("memory") or {}).get("total_bytes_per_device", 0) / 2 ** 30
+        report(
+            f"roofline_{cell}",
+            t_dom * 1e6,
+            f"tc={rl['t_compute']*1e3:.2f}ms tm={rl['t_memory']*1e3:.2f}ms "
+            f"tx={rl['t_collective']*1e3:.2f}ms dom={rl['dominant']} "
+            f"useful={rl['useful_flops_ratio']:.2f} mem={mem:.1f}GiB",
+        )
+    report("roofline_summary", float(n_ok), f"ok={n_ok} skipped={n_skip} errors={n_err}")

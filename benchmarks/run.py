@@ -1,0 +1,30 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (assignment contract):
+  fig45_opcounts  — Figs. 4/5 analog: FA2 vs FLASH-D datapath accounting
+  table1_skiprate — Table I analog: skip rates on a trained model
+  kernel_bench    — wall-time / HLO parity of the attention impls
+  roofline_bench  — §Roofline table from the dry-run artifacts
+"""
+
+import csv
+import io
+import sys
+
+
+def main() -> None:
+    out = csv.writer(sys.stdout)
+    out.writerow(["name", "us_per_call", "derived"])
+
+    def report(name, value, derived=""):
+        out.writerow([name, f"{value:.4f}", derived])
+        sys.stdout.flush()
+
+    from benchmarks import fig45_opcounts, kernel_bench, roofline_bench, table1_skiprate
+
+    for mod in (fig45_opcounts, kernel_bench, table1_skiprate, roofline_bench):
+        mod.run(report)
+
+
+if __name__ == "__main__":
+    main()

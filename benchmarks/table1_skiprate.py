@@ -1,0 +1,89 @@
+"""Table I analog — % of skipped output updates during real inference.
+
+The paper integrates FLASH-D into HF LLMs and measures how often the
+sigmoid argument falls outside [-6, 11] on PromptBench tasks (0.5–2.8%,
+always-win). Offline reproduction: we TRAIN a llama2.c-scale model on the
+synthetic grammar (the same model family the paper used for bit-exactness
+checks), then run inference and instrument both:
+
+  element-level  — the paper's exact counter (per key-step), via Alg. 3
+  tile-level     — the TPU kernel's whole-tile predication rate at
+                   B_k ∈ {16, 64}, the rate that matters for MXU-FLOP savings
+
+over three prompt regimes (in-distribution, uniform-random, repeated-token).
+An UNTRAINED model is also measured: random attention ⇒ near-zero skips,
+confirming skips are a property of LEARNED attention concentration (the
+paper's implicit claim).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import paper_llama
+from repro.core.blockwise import MaskSpec
+from repro.core.skipping import element_skip_stats, tile_skip_rate
+from repro.data import DataConfig, SyntheticLM
+from repro.models import get_model
+from repro.models.transformer import _qkv
+from repro.optim import AdamWConfig
+from repro.train.train_step import TrainConfig, init_train_state, make_train_step
+
+
+def _train_small(cfg, steps=120):
+    tc = TrainConfig(optimizer=AdamWConfig(lr=3e-3), warmup_steps=10, total_steps=steps)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, tc)
+    step = jax.jit(make_train_step(cfg, tc))
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8))
+    first = last = None
+    for i in range(steps):
+        state, m = step(state, jax.tree.map(jnp.asarray, data.batch(i)))
+        if i == 0:
+            first = float(m["loss"])
+    last = float(m["loss"])
+    return state.params, first, last
+
+
+def _qkv_of_layer(params, cfg, tokens):
+    """Project the first layer's q/k/v for instrumentation."""
+    from repro.models.layers import embed_lookup, rms_norm
+
+    h = embed_lookup(params["embed"], tokens, cfg.compute_dtype)
+    bp = jax.tree.map(lambda x: x[0], params["blocks"])["pos0"]
+    x = rms_norm(h, bp["norm1"], cfg.norm_eps)
+    q, k, v = _qkv(bp["mixer"], x, cfg, "attn", jnp.arange(tokens.shape[1]))
+    return q, k, v
+
+
+def _prompts(cfg, kind, b=4, s=64):
+    rng = np.random.default_rng(7)
+    if kind == "in_distribution":
+        data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=s, global_batch=b, seed=99))
+        return jnp.asarray(data.batch(0)["tokens"])
+    if kind == "uniform":
+        return jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    return jnp.tile(jnp.asarray(rng.integers(0, cfg.vocab_size, (b, 1)), jnp.int32), (1, s))
+
+
+def run(report):
+    cfg = paper_llama.CONFIG
+    params, loss0, loss1 = _train_small(cfg)
+    report("table1_train_loss", loss1, f"first={loss0:.3f} last={loss1:.3f} (trained probe model)")
+
+    rng_params = get_model(cfg).init(jax.random.PRNGKey(123), cfg)
+    for model_name, p in (("trained", params), ("untrained", rng_params)):
+        for kind in ("in_distribution", "uniform", "repeated"):
+            toks = _prompts(cfg, kind)
+            q, k, v = _qkv_of_layer(p, cfg, toks)
+            st = element_skip_stats(q, k, v)
+            lo = 100.0 * float(st.rate_low)
+            hi = 100.0 * float(st.rate_high)
+            t16 = 100.0 * float(tile_skip_rate(q, k, v, mask=MaskSpec("causal"), block_q=16, block_k=16))
+            t64 = 100.0 * float(tile_skip_rate(q, k, v, mask=MaskSpec("causal"), block_q=16, block_k=64))
+            report(
+                f"table1_skip_{model_name}_{kind}", lo,
+                f"elem_lo={lo:.2f}% elem_hi={hi:.2f}% tile16={t16:.2f}% "
+                f"tile64={t64:.2f}% (paper: 0.5-2.8% elem, always-win)",
+            )

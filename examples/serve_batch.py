@@ -1,0 +1,47 @@
+"""Batched serving example: continuous batching over a request queue.
+
+Trains nothing — initializes a small model, runs the slot-based engine:
+prefill per request, shared decode steps, queue refill on completion.
+Also demonstrates the FLASH-D split-K decode merge on a longer cache.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core.attention import decode_attention
+from repro.models import get_model
+from repro.serve import Engine, ServeConfig
+
+cfg = configs.get_smoke_config("qwen2-1.5b")  # GQA + QKV-bias smoke config
+api = get_model(cfg)
+params = api.init(jax.random.PRNGKey(0), cfg)
+
+eng = Engine(params, cfg, ServeConfig(max_batch=4, max_len=96, temperature=0.8,
+                                      top_k=20, seed=7))
+rng = np.random.default_rng(0)
+requests = [rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+            for n in (8, 12, 6, 10, 9, 7)]
+t0 = time.time()
+outs = eng.serve(requests, max_new_tokens=12)
+dt = time.time() - t0
+for i, o in enumerate(outs):
+    print(f"req[{i}] ({len(requests[i])} prompt toks) → {o.tolist()}")
+tok = sum(map(len, outs))
+print(f"{tok} tokens, {tok/dt:.1f} tok/s on {eng.sc.max_batch} slots")
+
+# split-K decode: one query over a long cache, partials merged by sigmoid
+b, s, hq, hkv, d = 2, 512, 8, 2, 64
+ks = jax.random.split(jax.random.PRNGKey(1), 3)
+q = jax.random.normal(ks[0], (b, 1, hq, d))
+kc = jax.random.normal(ks[1], (b, s, hkv, d))
+vc = jax.random.normal(ks[2], (b, s, hkv, d))
+o1 = decode_attention(q, kc, vc, jnp.asarray([512, 300]), n_splits=1)
+o8 = decode_attention(q, kc, vc, jnp.asarray([512, 300]), n_splits=8)
+print("split-K (8 partials, FLASH-D merge) vs single pass max|Δ|:",
+      float(jnp.max(jnp.abs(o1 - o8))))

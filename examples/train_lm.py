@@ -1,0 +1,81 @@
+"""End-to-end driver: train a llama2.c-scale LM with FLASH-D attention.
+
+This is deliverable (b)'s end-to-end example: a ~15M-param model (the
+paper's own llama2.c validation vehicle — use --full for the 110M config)
+for a few hundred steps on the synthetic grammar, with checkpointing,
+restart-on-failure, and a final FLASH-D == FA2 sanity comparison.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300] [--full]
+"""
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import paper_llama
+from repro.data import DataConfig, SyntheticLM
+from repro.models import get_model
+from repro.optim import AdamWConfig
+from repro.runtime import checkpoint as ckpt
+from repro.runtime.resilience import run_resilient
+from repro.train.train_step import TrainConfig, init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--full", action="store_true", help="110M-param config")
+    ap.add_argument("--ckpt-dir", default="/tmp/flashd_train_lm")
+    ap.add_argument("--fail-at", type=int, default=-1,
+                    help="simulate a node failure at this step (restart demo)")
+    args = ap.parse_args()
+
+    cfg = paper_llama.PAPER_110M if args.full else paper_llama.CONFIG
+    tc = TrainConfig(optimizer=AdamWConfig(lr=3e-3), warmup_steps=20,
+                     total_steps=args.steps)
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=128,
+                                  global_batch=8))
+    jit_step = jax.jit(make_train_step(cfg, tc))
+
+    def init_state():
+        return init_train_state(jax.random.PRNGKey(0), cfg, tc)
+
+    def step_fn(state, i):
+        state, m = jit_step(state, jax.tree.map(jnp.asarray, data.batch(i)))
+        if i % 25 == 0:
+            print(f"step {i:4d} loss {float(m['loss']):.4f}", flush=True)
+        return state, {"loss": m["loss"]}
+
+    failed = {"done": False}
+
+    def fail_at(step):
+        if step == args.fail_at and not failed["done"]:
+            failed["done"] = True
+            print(f"*** simulated node failure at step {step}; restarting from checkpoint")
+            return True
+        return False
+
+    state, history = run_resilient(
+        ckpt_dir=args.ckpt_dir, init_state_fn=init_state, step_fn=step_fn,
+        total_steps=args.steps, ckpt_every=50,
+        fail_at=fail_at if args.fail_at >= 0 else None,
+    )
+    losses = [h["loss"] for h in history]
+    print(f"loss: {losses[0]:.3f} → {np.mean(losses[-10:]):.3f} over {len(losses)} steps")
+
+    # the paper verified bit-matching llama2.c outputs; our equivalent check:
+    api = get_model(cfg)
+    batch = jax.tree.map(jnp.asarray, data.batch(10_000))
+    outs = {}
+    for impl in ("flashd", "fa2"):
+        c = dataclasses.replace(cfg, attn_impl=impl)
+        outs[impl], _ = get_model(c).apply(state.params, batch, c)
+    diff = float(jnp.max(jnp.abs(outs["flashd"] - outs["fa2"])))
+    print(f"trained-model logits, FLASH-D vs FA2 max|Δ| = {diff:.2e} (paper: identical replies)")
+
+
+if __name__ == "__main__":
+    main()

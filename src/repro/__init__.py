@@ -1,0 +1,3 @@
+"""repro — FLASH-D (FlashAttention with Hidden Softmax Division) framework."""
+
+__version__ = "1.0.0"

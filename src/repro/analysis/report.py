@@ -1,0 +1,72 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dryrun_results.json.
+
+    PYTHONPATH=src python -m repro.analysis.report dryrun_results.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import List
+
+
+def _fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def render(results: List[dict]) -> str:
+    lines = []
+    ok = [r for r in results if r["status"] == "ok"]
+    skipped = [r for r in results if r["status"] == "skipped"]
+    errors = [r for r in results if r["status"] == "error"]
+
+    lines.append(f"Cells: {len(ok)} compiled, {len(skipped)} skipped (documented), "
+                 f"{len(errors)} errors.\n")
+
+    lines.append("| arch | shape | mesh | compile s | mem/dev GiB | fits 16G | "
+                 "t_compute ms | t_memory ms | t_coll ms | dominant | useful |")
+    lines.append("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        rl = r["roofline"]
+        mem = (r.get("memory") or {}).get("total_bytes_per_device", 0)
+        fits = "yes" if mem <= 16 * 2**30 else "**NO**"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compile_s']:.0f} "
+            f"| {_fmt_bytes(mem)} | {fits} "
+            f"| {rl['t_compute']*1e3:.1f} | {rl['t_memory']*1e3:.1f} "
+            f"| {rl['t_collective']*1e3:.1f} | {rl['dominant']} "
+            f"| {rl['useful_flops_ratio']:.2f} |"
+        )
+    if skipped:
+        lines.append("\nSkipped cells:\n")
+        for r in sorted(skipped, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+            lines.append(f"* {r['arch']} × {r['shape']} × {r['mesh']} — {r['reason']}")
+    if errors:
+        lines.append("\nErrored cells:\n")
+        for r in errors:
+            lines.append(f"* {r['arch']} × {r['shape']} × {r['mesh']} — {r['error']}")
+    return "\n".join(lines)
+
+
+def render_collectives(results: List[dict], arch: str, shape: str, mesh: str) -> str:
+    for r in results:
+        if (r["arch"], r["shape"], r["mesh"]) == (arch, shape, mesh) and r["status"] == "ok":
+            rows = ["| collective | count | result GiB | wire GiB |", "|---|---|---|---|"]
+            for k, v in sorted(r["roofline"]["collectives"].items()):
+                rows.append(
+                    f"| {k} | {v['count']:.0f} | {v['bytes']/2**30:.2f} "
+                    f"| {v.get('wire_bytes', 0)/2**30:.2f} |"
+                )
+            return "\n".join(rows)
+    return "(cell not found)"
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    with open(path) as f:
+        results = json.load(f)
+    print(render(results))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Config registry: --arch <id> resolves here."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List, Tuple
+
+from repro.configs.shapes import SHAPES, ShapeCfg, cell_status, input_specs, cache_specs
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "deepseek-7b": "deepseek_7b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "yi-34b": "yi_34b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "mamba2-2.7b": "mamba2_2_7b",
+    "phi-3-vision-4.2b": "phi3_vision_4_2b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "paper-llama": "paper_llama",
+}
+
+ARCHS: List[str] = [a for a in _MODULES if a != "paper-llama"]
+
+
+def _module(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return _module(name).SMOKE
+
+
+def cells() -> List[Tuple[str, str, bool, str]]:
+    """All 40 (arch, shape) cells → (arch, shape, runnable, skip_reason)."""
+    out = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            ok, reason = cell_status(cfg, shape)
+            out.append((arch, shape.name, ok, reason))
+    return out
+
+
+__all__ = [
+    "ARCHS", "SHAPES", "ShapeCfg", "get_config", "get_smoke_config",
+    "cells", "cell_status", "input_specs", "cache_specs", "ModelConfig",
+]

@@ -1,0 +1,86 @@
+"""Assigned input-shape sets and the (arch × shape) cell matrix.
+
+Every LM arch pairs with four shapes; decode_*/long_* lower `serve_step`
+(one token against a cache of seq_len), train_4k lowers `train_step`,
+prefill_32k lowers the forward pass. long_500k runs only for sub-quadratic
+archs (assignment skip rule — skips recorded, not silently dropped).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+SHAPES: Dict[str, ShapeCfg] = {
+    "train_4k": ShapeCfg("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCfg("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_status(cfg: ModelConfig, shape: ShapeCfg) -> Tuple[bool, str]:
+    """(runnable, reason-if-skipped) for an (arch, shape) cell."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, (
+            "long_500k skipped: pure full-attention arch (assignment rule; "
+            "sub-quadratic attention required at 524k context)"
+        )
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCfg):
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    No device allocation — these feed `.lower()` for the dry-run and
+    `jax.eval_shape` everywhere else.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        if cfg.is_encdec:
+            batch = {
+                "frame_embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16),
+                "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            }
+        elif cfg.frontend == "vision":
+            n_patch = cfg.frontend_tokens
+            batch = {
+                "patch_embeds": jax.ShapeDtypeStruct((b, n_patch, cfg.d_model), jnp.bfloat16),
+                "tokens": jax.ShapeDtypeStruct((b, s - n_patch), i32),
+            }
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if shape.kind == "train":
+            label_len = batch["tokens"].shape[1]
+            batch["labels"] = jax.ShapeDtypeStruct((b, label_len), i32)
+        return batch
+    # decode: one token per sequence + absolute positions
+    return {
+        "token": jax.ShapeDtypeStruct((b,), i32),
+        "pos": jax.ShapeDtypeStruct((b,), i32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeCfg):
+    """Abstract decode-cache tree (ShapeDtypeStructs) for decode shapes."""
+    from repro.models import get_model
+
+    api = get_model(cfg)
+    return jax.eval_shape(
+        lambda: api.init_cache(shape.global_batch, shape.seq_len, cfg)
+    )

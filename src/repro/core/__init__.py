@@ -1,0 +1,27 @@
+"""FLASH-D core: the paper's contribution as composable JAX ops."""
+
+from repro.core.attention import MaskSpec, decode_attention, flash_attention
+from repro.core.blockwise import (
+    blockwise_fa2,
+    blockwise_flashd,
+    merge_partials,
+)
+from repro.core.flashd import (
+    flash_attention_alg1,
+    flash_attention2_alg2,
+    flashd_alg3,
+    naive_attention,
+)
+
+__all__ = [
+    "MaskSpec",
+    "flash_attention",
+    "decode_attention",
+    "blockwise_flashd",
+    "blockwise_fa2",
+    "merge_partials",
+    "flashd_alg3",
+    "flash_attention_alg1",
+    "flash_attention2_alg2",
+    "naive_attention",
+]

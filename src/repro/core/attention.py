@@ -1,0 +1,226 @@
+"""Public attention ops: batched, GQA-aware, differentiable FLASH-D.
+
+`flash_attention`  — training / prefill: [B, S, H, d] tensors, tiled scan.
+`decode_attention` — single-token decode against a KV cache with dynamic
+                     length; optional split-K with FLASH-D sigmoid merging.
+
+impl ∈ {'flashd', 'fa2', 'naive', 'flashd_pallas', 'fa2_pallas'}:
+  flashd / fa2  — pure-jnp tiled recurrences (run on any backend; these are
+                  what the CPU-hosted dry-run lowers).
+  *_pallas      — Pallas TPU kernels from repro.kernels (interpret mode on
+                  CPU; real kernels on TPU).
+  naive         — O(S²) softmax oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blockwise import (
+    MaskSpec,
+    NEG_INF,
+    blockwise_backward,
+    blockwise_fa2,
+    blockwise_flashd,
+    merge_partials,
+)
+
+__all__ = ["flash_attention", "decode_attention", "MaskSpec"]
+
+
+def _single_head_fwd(q, k, v, mask, scale, impl, block_q, block_k, skip):
+    if impl == "flashd":
+        return blockwise_flashd(
+            q, k, v, mask=mask, scale=scale, block_q=block_q, block_k=block_k, skip=skip
+        )
+    if impl == "fa2":
+        return blockwise_fa2(q, k, v, mask=mask, scale=scale, block_q=block_q, block_k=block_k)
+    if impl == "naive":
+        s = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) * scale
+        bias = mask.block_bias(jnp.arange(q.shape[0]), jnp.arange(k.shape[0]))
+        if bias is not None:
+            s = s + bias
+        lam = jax.nn.logsumexp(s, axis=-1)
+        p = jnp.exp(s - lam[:, None])
+        return p @ v.astype(jnp.float32), lam
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _attention_core(q, k, v, mask, scale, impl, block_q, block_k, skip):
+    o, _ = _attention_core_fwd(q, k, v, mask, scale, impl, block_q, block_k, skip)
+    return o
+
+
+def _attention_core_fwd(q, k, v, mask, scale, impl, block_q, block_k, skip):
+    """q [B,Sq,Hq,d], k/v [B,Skv,Hkv,d|dv] → o [B,Sq,Hq,dv]; saves Λ."""
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    if impl.endswith("_pallas"):
+        from repro.kernels import ops as kernel_ops  # lazy: avoid import cycle
+
+        o, lam = kernel_ops.pallas_attention_fwd_batched(
+            q, k, v, mask=mask, scale=scale, impl=impl.replace("_pallas", ""),
+            block_q=block_q, block_k=block_k, skip=skip,
+        )
+        return o, (q, k, v, o, lam.reshape(b, hkv, g, sq))
+    # group queries on their shared KV head: [B, Hkv, G, Sq, d]
+    qg = q.transpose(0, 2, 1, 3).reshape(b, hkv, g, sq, d)
+    kg = k.transpose(0, 2, 1, 3)  # [B, Hkv, Skv, d]
+    vg = v.transpose(0, 2, 1, 3)
+
+    fn = functools.partial(
+        _single_head_fwd, mask=mask, scale=scale, impl=impl,
+        block_q=block_q, block_k=block_k, skip=skip,
+    )
+    fn = jax.vmap(fn, in_axes=(0, None, None))  # over G
+    fn = jax.vmap(fn, in_axes=(0, 0, 0))  # over Hkv
+    fn = jax.vmap(fn, in_axes=(0, 0, 0))  # over B
+    o, lam = fn(qg, kg, vg)  # o [B,Hkv,G,Sq,dv], lam [B,Hkv,G,Sq]
+    dv_ = o.shape[-1]
+    o = o.reshape(b, hq, sq, dv_).transpose(0, 2, 1, 3).astype(q.dtype)
+    return o, (q, k, v, o, lam)
+
+
+def _attention_core_bwd(mask, scale, impl, block_q, block_k, skip, res, do):
+    q, k, v, o, lam = res
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    dv_ = v.shape[-1]
+    if impl.endswith("_pallas"):
+        from repro.kernels import ops as kernel_ops
+        from repro.kernels.flashd_bwd import flashd_bwd_pallas
+
+        dq, dk, dv = flashd_bwd_pallas(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), o.transpose(0, 2, 1, 3),
+            lam.reshape(b, hq, sq), do.transpose(0, 2, 1, 3),
+            mask=mask, scale=scale, block_q=block_q, block_k=block_k,
+            interpret=not kernel_ops.on_tpu(),
+        )
+        return (
+            dq.transpose(0, 2, 1, 3), dk.transpose(0, 2, 1, 3),
+            dv.transpose(0, 2, 1, 3),
+        )
+    qg = q.transpose(0, 2, 1, 3).reshape(b, hkv, g, sq, d)
+    og = o.transpose(0, 2, 1, 3).reshape(b, hkv, g, sq, dv_)
+    dog = do.transpose(0, 2, 1, 3).reshape(b, hkv, g, sq, dv_)
+    kg = k.transpose(0, 2, 1, 3)
+    vg = v.transpose(0, 2, 1, 3)
+
+    fn = functools.partial(blockwise_backward, mask=mask, scale=scale, block_k=block_k)
+    fn = jax.vmap(fn, in_axes=(0, None, None, 0, 0, 0))  # over G
+    fn = jax.vmap(fn)  # over Hkv
+    fn = jax.vmap(fn)  # over B
+    dq, dk, dv = fn(qg, kg, vg, og, lam, dog)
+    dq = dq.reshape(b, hq, sq, d).transpose(0, 2, 1, 3).astype(q.dtype)
+    dk = jnp.sum(dk, axis=2).transpose(0, 2, 1, 3).astype(k.dtype)  # sum over G
+    dv = jnp.sum(dv, axis=2).transpose(0, 2, 1, 3).astype(v.dtype)
+    return dq, dk, dv
+
+
+_attention_core.defvjp(
+    lambda q, k, v, mask, scale, impl, bq, bk, skip: _attention_core_fwd(
+        q, k, v, mask, scale, impl, bq, bk, skip
+    ),
+    _attention_core_bwd,
+)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    mask: MaskSpec = MaskSpec("causal"),
+    scale: Optional[float] = None,
+    impl: str = "flashd",
+    block_q: int = 512,
+    block_k: int = 512,
+    skip: bool = False,
+) -> jax.Array:
+    """Multi-head GQA attention. q [B,Sq,Hq,d]; k,v [B,Skv,Hkv,·]."""
+    if q.ndim != 4 or k.ndim != 4 or v.ndim != 4:
+        raise ValueError("expected [batch, seq, heads, dim] operands")
+    if q.shape[2] % k.shape[2] != 0:
+        raise ValueError(f"Hq={q.shape[2]} not a multiple of Hkv={k.shape[2]}")
+    if scale is None:
+        scale = float(1.0 / (q.shape[-1] ** 0.5))
+    block_q = min(block_q, max(q.shape[1], 1))
+    block_k = min(block_k, max(k.shape[1], 1))
+    return _attention_core(q, k, v, mask, scale, impl, block_q, block_k, skip)
+
+
+def decode_attention(
+    q: jax.Array,  # [B, 1, Hq, d] — one new token per sequence
+    k_cache: jax.Array,  # [B, S_max, Hkv, d]
+    v_cache: jax.Array,  # [B, S_max, Hkv, dv]
+    cache_len: jax.Array,  # [B] or scalar — number of valid cache entries
+    *,
+    scale: Optional[float] = None,
+    window: int = 0,  # >0: sliding-window (local) attention
+    chunk: int = 0,  # >0: llama4-style chunked attention
+    n_splits: int = 1,  # split-K partitions, merged with FLASH-D blend
+) -> jax.Array:
+    """Single-step decode against a (possibly sharded) KV cache.
+
+    Uses the einsum formulation (one query row ⇒ attention is linear in S and
+    memory-bound: the roofline term is the KV-cache read). With n_splits > 1
+    the cache is partitioned along S, each partition yields (o_p, Λ_p), and
+    partials are merged with the FLASH-D sigmoid blend (DESIGN.md §2.2) —
+    one FMA per merge instead of FA2's rescale/divide. The same merge
+    combines *cross-device* partials under context-parallel sharding.
+    """
+    b, _, hq, d = q.shape
+    s_max = k_cache.shape[1]
+    hkv = k_cache.shape[2]
+    g = hq // hkv
+    if scale is None:
+        scale = float(1.0 / (d ** 0.5))
+    cache_len = jnp.asarray(cache_len)
+    if cache_len.ndim == 0:
+        cache_len = jnp.broadcast_to(cache_len, (b,))
+
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, d)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+
+    pos = jnp.arange(s_max)
+    valid = pos[None, :] < cache_len[:, None]  # [B, S]
+    if window > 0:
+        valid &= pos[None, :] >= (cache_len[:, None] - window)
+    if chunk > 0:
+        cur_chunk = (cache_len[:, None] - 1) // chunk
+        valid &= (pos[None, :] // chunk) == cur_chunk
+
+    # scores: [B, Hkv, G, S]
+    s = jnp.einsum("bhgd,bshd->bhgs", qf, kf, preferred_element_type=jnp.float32)
+    s = s * scale
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+
+    if n_splits <= 1:
+        lam = jax.nn.logsumexp(s, axis=-1)
+        p = jnp.exp(s - lam[..., None])
+        o = jnp.einsum("bhgs,bshd->bhgd", p, vf)
+    else:
+        split = s_max // n_splits
+        sp = s.reshape(b, hkv, g, n_splits, split).transpose(3, 0, 1, 2, 4)
+        vp = vf.reshape(b, n_splits, split, hkv, d).transpose(1, 0, 2, 3, 4)
+        m_p = jnp.max(sp, axis=-1)
+        m_safe = jnp.maximum(m_p, NEG_INF / 2)
+        p = jnp.exp(sp - m_safe[..., None])
+        l_p = jnp.sum(p, axis=-1)
+        lam_p = jnp.where(
+            l_p > 0, m_safe + jnp.log(jnp.maximum(l_p, jnp.finfo(jnp.float32).tiny)), NEG_INF
+        )
+        o_p = jnp.einsum("pbhgs,pbshd->pbhgd", p, vp)
+        o_p = o_p / jnp.maximum(l_p, jnp.finfo(jnp.float32).tiny)[..., None]
+        o, lam = merge_partials(o_p, lam_p)  # FLASH-D split-K merge
+
+    return o.reshape(b, 1, hq, -1).astype(q.dtype)

@@ -1,0 +1,370 @@
+"""Blockwise (tiled) FLASH-D and FlashAttention2 — pure jnp, runs anywhere.
+
+This is the TPU-native generalization of the paper's per-element recurrence
+(DESIGN.md §2.1). A query tile scans KV tiles carrying only (O, Λ):
+
+    W_b = sigmoid(λ_b − Λ_{b−1})          tile weight (paper's w_i per tile)
+    Λ_b = λ_b − ln W_b                    running LSE, division-free
+    c_b = exp(m_b − Λ_b)                  ≤ 1 ⇒ overflow-impossible
+    O_b = O_{b−1}·(1−W_b) + (P_b V_b)·c_b
+
+vs. FlashAttention2's (m, ℓ, O) carry + final O/ℓ epilogue. Both are exact.
+
+These functions are single-(q-head) kernels on 2-D operands; batching over
+(batch, kv_head, q-group) happens in `repro.core.attention` via vmap. The
+Pallas TPU kernels in `repro.kernels` implement the same recurrence with
+explicit VMEM tiling; this module is their oracle and the CPU execution path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "MaskSpec",
+    "blockwise_flashd",
+    "blockwise_fa2",
+    "blockwise_backward",
+    "merge_partials",
+    "DEFAULT_SKIP_THETA",
+]
+
+NEG_INF = -1e30  # finite stand-in for -inf in masked scores (NaN-safe)
+DEFAULT_SKIP_THETA = 6.0  # paper §III-C active-region lower edge
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskSpec:
+    """Structural attention mask, evaluated per (q, k) position block.
+
+    kind:
+      'full'    — no mask (encoder / cross attention)
+      'causal'  — k_pos <= q_pos
+      'local'   — causal sliding window: 0 <= q_pos − k_pos < window
+      'chunked' — causal within chunks of `chunk` tokens (llama4-style)
+    q_offset: absolute position of q row 0 (decode: cache length).
+    """
+
+    kind: str = "causal"
+    window: int = 0
+    chunk: int = 0
+    q_offset: int = 0
+
+    def block_bias(self, q_pos: jax.Array, k_pos: jax.Array) -> Optional[jax.Array]:
+        """Additive bias [len(q_pos), len(k_pos)] or None when fully visible."""
+        if self.kind == "full":
+            return None
+        qp = (q_pos + self.q_offset)[:, None]
+        kp = k_pos[None, :]
+        if self.kind == "causal":
+            keep = kp <= qp
+        elif self.kind == "local":
+            keep = (kp <= qp) & (qp - kp < self.window)
+        elif self.kind == "chunked":
+            keep = (kp <= qp) & (qp // self.chunk == kp // self.chunk)
+        else:
+            raise ValueError(f"unknown mask kind {self.kind!r}")
+        return jnp.where(keep, 0.0, NEG_INF)
+
+    def block_fully_visible(self, q_lo: int, q_hi: int, k_lo: int, k_hi: int) -> bool:
+        """Static check: is the [q_lo:q_hi, k_lo:k_hi] tile unmasked?"""
+        if self.kind == "full":
+            return True
+        q_lo, q_hi = q_lo + self.q_offset, q_hi + self.q_offset
+        if self.kind == "causal":
+            return k_hi - 1 <= q_lo
+        if self.kind == "local":
+            return (k_hi - 1 <= q_lo) and (q_hi - 1 - k_lo < self.window)
+        if self.kind == "chunked":
+            return (k_hi - 1 <= q_lo) and (q_lo // self.chunk == (q_hi - 1) // self.chunk == k_lo // self.chunk == (k_hi - 1) // self.chunk)
+        raise ValueError(self.kind)
+
+    def block_fully_masked(self, q_lo: int, q_hi: int, k_lo: int, k_hi: int) -> bool:
+        """Static check: is the tile entirely masked (skippable at trace time)?"""
+        if self.kind == "full":
+            return False
+        q_lo, q_hi = q_lo + self.q_offset, q_hi + self.q_offset
+        if self.kind in ("causal", "local", "chunked"):
+            if k_lo > q_hi - 1:  # strictly future
+                return True
+        if self.kind == "local" and q_lo - (k_hi - 1) >= self.window:
+            return True
+        if self.kind == "chunked" and q_lo // self.chunk > (k_hi - 1) // self.chunk:
+            return True
+        return False
+
+
+def _pad_to_multiple(x: jax.Array, block: int, axis: int, value=0.0):
+    n = x.shape[axis]
+    pad = (-n) % block
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value), n
+
+
+def _tile_stats(s: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-row (m_b, l_b, λ_b) of a score tile with NaN-safe full-mask rows."""
+    m = jnp.max(s, axis=-1)
+    m_safe = jnp.maximum(m, NEG_INF / 2)  # fully-masked row ⇒ exp() = 0 below
+    p = jnp.exp(s - m_safe[:, None])
+    l = jnp.sum(p, axis=-1)
+    lam = m_safe + jnp.log(jnp.maximum(l, jnp.finfo(jnp.float32).tiny))
+    lam = jnp.where(l > 0, lam, NEG_INF)
+    return m_safe, p, lam
+
+
+def blockwise_flashd(
+    q: jax.Array,  # [Sq, d]
+    k: jax.Array,  # [Skv, d]
+    v: jax.Array,  # [Skv, dv]
+    *,
+    mask: MaskSpec = MaskSpec("full"),
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    skip: bool = False,
+    skip_theta: float = DEFAULT_SKIP_THETA,
+    return_skiprate: bool = False,
+):
+    """Tiled FLASH-D forward. Returns (O [Sq, dv], Λ [Sq]) in float32.
+
+    `skip=True` applies the tile-level analogue of the paper's [-6, 11]
+    criterion: tiles with m_b − Λ_{b−1} < −θ − ln(B_k) contribute < σ(−θ)
+    of weight and their update is suppressed (in the Pallas kernel the exp,
+    the P·V matmul and the blend are truly predicated off; here the update
+    is masked, which is bit-identical in output).
+    """
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    sq, d = q.shape
+    skv, dv = v.shape[0], v.shape[-1]
+
+    qf = q.astype(jnp.float32)
+    q_pad, sq0 = _pad_to_multiple(qf, block_q, 0)
+    k_pad, skv0 = _pad_to_multiple(k.astype(jnp.float32), block_k, 0)
+    v_pad, _ = _pad_to_multiple(v.astype(jnp.float32), block_k, 0)
+    n_qb = q_pad.shape[0] // block_q
+    n_kb = k_pad.shape[0] // block_k
+    kb = k_pad.reshape(n_kb, block_k, d)
+    vb = v_pad.reshape(n_kb, block_k, dv)
+    k_positions = jnp.arange(n_kb * block_k).reshape(n_kb, block_k)
+    kv_valid = (k_positions < skv0).astype(jnp.float32)  # mask padded keys
+
+    ln_bk = jnp.log(jnp.float32(block_k))
+
+    def one_q_block(qi: jax.Array, q_pos: jax.Array):
+        def step(carry, xs):
+            o_prev, lam_run, nskip, nlive = carry
+            k_b, v_b, k_pos, valid = xs
+            s = (qi @ k_b.T) * scale  # MXU matmul in the kernel
+            bias = mask.block_bias(q_pos, k_pos)
+            if bias is not None:
+                s = s + bias
+            s = jnp.where(valid[None, :] > 0, s, NEG_INF)
+            m_b, p, lam_b = _tile_stats(s)
+
+            # W_b = sigmoid(λ_b − Λ);  ln W_b = log_sigmoid (division hidden)
+            delta = lam_b - lam_run
+            w = jax.nn.sigmoid(delta)
+            ln_w = jax.nn.log_sigmoid(delta)
+            lam_new = lam_b - ln_w  # = logaddexp(Λ, λ_b), no division
+            # guards for ±inf-like sentinels
+            tile_dead = lam_b <= NEG_INF / 2
+            first = lam_run <= NEG_INF / 2
+            w = jnp.where(tile_dead, 0.0, jnp.where(first, 1.0, w))
+            lam_new = jnp.where(tile_dead, lam_run, jnp.where(first, lam_b, lam_new))
+
+            c = jnp.where(tile_dead, 0.0, jnp.exp(m_b - lam_new))  # ≤ 1 always
+            pv = p @ v_b
+            o_new = o_prev * (1.0 - w)[:, None] + pv * c[:, None]
+
+            if skip:
+                skip_tile = m_b - lam_run < -(skip_theta + ln_bk)
+                skip_tile = jnp.logical_and(skip_tile, ~first)
+                o_new = jnp.where(skip_tile[:, None], o_prev, o_new)
+                lam_new = jnp.where(skip_tile, lam_run, lam_new)
+                # count only dynamically-skipped live tiles — fully-masked
+                # (causal-future) tiles are pruned statically on TPU and
+                # would inflate the rate
+                counted = jnp.logical_and(skip_tile, ~tile_dead)
+                nskip = nskip + jnp.sum(counted.astype(jnp.int32))
+                nlive = nlive + jnp.sum((~tile_dead).astype(jnp.int32))
+            return (o_new, lam_new, nskip, nlive), None
+
+        init = (
+            jnp.zeros((block_q, dv), jnp.float32),
+            jnp.full((block_q,), NEG_INF, jnp.float32),
+            jnp.int32(0),
+            jnp.int32(0),
+        )
+        (o, lam, nskip, nlive), _ = jax.lax.scan(step, init, (kb, vb, k_positions, kv_valid))
+        return o, lam, nskip, nlive
+
+    q_blocks = q_pad.reshape(n_qb, block_q, d)
+    q_positions = jnp.arange(n_qb * block_q).reshape(n_qb, block_q)
+    o, lam, nskip, nlive = jax.vmap(one_q_block)(q_blocks, q_positions)
+    o = o.reshape(n_qb * block_q, dv)[:sq0]
+    lam = lam.reshape(n_qb * block_q)[:sq0]
+    if return_skiprate:
+        return o, lam, jnp.sum(nskip) / jnp.maximum(jnp.sum(nlive), 1)
+    return o, lam
+
+
+def blockwise_fa2(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    mask: MaskSpec = MaskSpec("full"),
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+):
+    """Tiled FlashAttention2 (the paper's baseline): (m, ℓ, O) carry +
+    exp-rescale per tile + final division. Returns (O, Λ) like flashd."""
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    sq, d = q.shape
+    dv = v.shape[-1]
+    q_pad, sq0 = _pad_to_multiple(q.astype(jnp.float32), block_q, 0)
+    k_pad, skv0 = _pad_to_multiple(k.astype(jnp.float32), block_k, 0)
+    v_pad, _ = _pad_to_multiple(v.astype(jnp.float32), block_k, 0)
+    n_qb = q_pad.shape[0] // block_q
+    n_kb = k_pad.shape[0] // block_k
+    kb = k_pad.reshape(n_kb, block_k, d)
+    vb = v_pad.reshape(n_kb, block_k, dv)
+    k_positions = jnp.arange(n_kb * block_k).reshape(n_kb, block_k)
+    kv_valid = (k_positions < skv0).astype(jnp.float32)
+
+    def one_q_block(qi, q_pos):
+        def step(carry, xs):
+            m_prev, l_prev, o_prev = carry
+            k_b, v_b, k_pos, valid = xs
+            s = (qi @ k_b.T) * scale
+            bias = mask.block_bias(q_pos, k_pos)
+            if bias is not None:
+                s = s + bias
+            s = jnp.where(valid[None, :] > 0, s, NEG_INF)
+            m_b = jnp.max(s, axis=-1)
+            m_new = jnp.maximum(m_prev, m_b)
+            m_safe = jnp.maximum(m_new, NEG_INF / 2)
+            alpha = jnp.exp(m_prev - m_safe)
+            alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, alpha)
+            p = jnp.exp(s - m_safe[:, None])
+            l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+            o_new = o_prev * alpha[:, None] + p @ v_b
+            return (m_new, l_new, o_new), None
+
+        init = (
+            jnp.full((block_q,), NEG_INF, jnp.float32),
+            jnp.zeros((block_q,), jnp.float32),
+            jnp.zeros((block_q, dv), jnp.float32),
+        )
+        (m, l, o), _ = jax.lax.scan(step, init, (kb, vb, k_positions, kv_valid))
+        l_safe = jnp.maximum(l, jnp.finfo(jnp.float32).tiny)
+        o = o / l_safe[:, None]  # the FA2 epilogue FLASH-D eliminates
+        lam = jnp.where(l > 0, m + jnp.log(l_safe), NEG_INF)
+        return o, lam
+
+    q_blocks = q_pad.reshape(n_qb, block_q, d)
+    q_positions = jnp.arange(n_qb * block_q).reshape(n_qb, block_q)
+    o, lam = jax.vmap(one_q_block)(q_blocks, q_positions)
+    return o.reshape(-1, dv)[:sq0], lam.reshape(-1)[:sq0]
+
+
+def blockwise_backward(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    o: jax.Array,
+    lam: jax.Array,
+    do: jax.Array,
+    *,
+    mask: MaskSpec = MaskSpec("full"),
+    scale: Optional[float] = None,
+    block_k: int = 128,
+):
+    """Memory-efficient attention backward from saved (O, Λ).
+
+    Probabilities are reconstructed as P = exp(s − Λ) — with FLASH-D's Λ the
+    argument is always ≤ 0, so the backward is overflow-free with no
+    max-subtraction, the same property as the forward (DESIGN.md §2.1).
+    Scans KV tiles carrying dQ and emitting (dK_b, dV_b).
+    """
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    sq, d = q.shape
+    dv = v.shape[-1]
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    of, dof = o.astype(jnp.float32), do.astype(jnp.float32)
+    k_pad, skv0 = _pad_to_multiple(kf, block_k, 0)
+    v_pad, _ = _pad_to_multiple(vf, block_k, 0)
+    n_kb = k_pad.shape[0] // block_k
+    kb = k_pad.reshape(n_kb, block_k, d)
+    vb = v_pad.reshape(n_kb, block_k, dv)
+    k_positions = jnp.arange(n_kb * block_k).reshape(n_kb, block_k)
+    kv_valid = (k_positions < skv0).astype(jnp.float32)
+    q_pos = jnp.arange(sq)
+
+    dsum = jnp.sum(dof * of, axis=-1)  # D = rowsum(dO ∘ O)
+
+    def step(dq_acc, xs):
+        k_b, v_b, k_pos, valid = xs
+        s = (qf @ k_b.T) * scale
+        bias = mask.block_bias(q_pos, k_pos)
+        if bias is not None:
+            s = s + bias
+        s = jnp.where(valid[None, :] > 0, s, NEG_INF)
+        p = jnp.exp(s - lam[:, None])  # exact probs; argument ≤ 0
+        p = jnp.where(lam[:, None] <= NEG_INF / 2, 0.0, p)
+        dv_b = p.T @ dof
+        dp = dof @ v_b.T
+        ds = p * (dp - dsum[:, None])
+        dq_acc = dq_acc + ds @ k_b * scale
+        dk_b = ds.T @ qf * scale
+        return dq_acc, (dk_b, dv_b)
+
+    dq, (dk, dv_out) = jax.lax.scan(
+        step, jnp.zeros((sq, d), jnp.float32), (kb, vb, k_positions, kv_valid)
+    )
+    dk = dk.reshape(-1, d)[:skv0]
+    dv_out = dv_out.reshape(-1, dv)[:skv0]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv_out.astype(v.dtype)
+
+
+def merge_partials(o_parts: jax.Array, lam_parts: jax.Array):
+    """FLASH-D merge of split-K partial attention results (beyond-paper).
+
+    o_parts [P, ..., dv], lam_parts [P, ...] → merged (o, Λ). Each pairwise
+    merge is one sigmoid + one FMA:  o = o_a + (o_b − o_a)·σ(Λ_b − Λ_a),
+    vs. FA2's two exp-rescales + division. Used by the decode kernel and by
+    context-parallel long-sequence serving.
+    """
+
+    def merge(a, b):
+        o_a, lam_a = a
+        o_b, lam_b = b
+        w = jax.nn.sigmoid(lam_b - lam_a)
+        dead_b = lam_b <= NEG_INF / 2
+        dead_a = lam_a <= NEG_INF / 2
+        w = jnp.where(dead_b, 0.0, jnp.where(dead_a, 1.0, w))
+        o = o_a + (o_b - o_a) * w[..., None]
+        ln_w1 = jax.nn.log_sigmoid(lam_a - lam_b)  # ln(1−w)
+        lam = jnp.where(
+            dead_b, lam_a, jnp.where(dead_a, lam_b, lam_a - ln_w1)
+        )
+        return o, lam
+
+    def scan_merge(carry, xs):
+        return merge(carry, xs), None
+
+    (o0, l0) = (o_parts[0], lam_parts[0])
+    (o, lam), _ = jax.lax.scan(scan_merge, (o0, l0), (o_parts[1:], lam_parts[1:]))
+    return o, lam

@@ -1,0 +1,222 @@
+"""Paper-faithful sequential FlashAttention variants (Algs. 1-3 of FLASH-D).
+
+These are the *reference* forms: one key/value pair consumed per scan step,
+exactly as written in the paper. They exist to (a) validate the paper's
+mathematical-equivalence claim, (b) serve as oracles for the tiled/blocked
+implementations, and (c) instrument element-level skip statistics (Table I).
+
+All functions take
+    q : [d]            a single query vector
+    k : [N, d]         key vectors
+    v : [N, dv]        value vectors
+and return the attention output [dv] (and auxiliary state where noted).
+Batched wrappers live in `repro.core.attention`.
+
+The recurrences are carried with `jax.lax.scan` so they stay `jit`- and
+`vmap`-compatible (no Python loops over sequence length).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "naive_attention",
+    "flash_attention_alg1",
+    "flash_attention2_alg2",
+    "flashd_alg3",
+    "flashd_alg3_skipstats",
+    "SKIP_LO",
+    "SKIP_HI",
+]
+
+# Paper §III-C: outside [-6, 11] the sigmoid saturates; w_i is set to 0/1
+# by default and the exponential (and the output update) is skipped.
+SKIP_LO = -6.0
+SKIP_HI = 11.0
+
+
+def naive_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Textbook softmax attention for one query (the ground-truth oracle)."""
+    s = k @ q  # [N]
+    f = jax.nn.softmax(s)
+    return f @ v
+
+
+def flash_attention_alg1(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Alg. 1 — baseline FlashAttention: incremental softmax division."""
+    d = q.shape[-1]
+    dv = v.shape[-1]
+
+    def step(carry, kv):
+        m_prev, l_prev, o_prev = carry
+        k_i, v_i = kv
+        s_i = jnp.dot(q, k_i)
+        m_i = jnp.maximum(m_prev, s_i)
+        alpha = jnp.exp(m_prev - m_i)
+        p_i = jnp.exp(s_i - m_i)
+        l_i = l_prev * alpha + p_i
+        o_i = o_prev * (l_prev * alpha / l_i) + v_i * (p_i / l_i)
+        return (m_i, l_i, o_i), None
+
+    init = (jnp.float32(-jnp.inf), jnp.float32(0.0), jnp.zeros((dv,), jnp.float32))
+    (_, _, o), _ = jax.lax.scan(step, init, (k.astype(jnp.float32), v.astype(jnp.float32)))
+    return o
+
+
+def flash_attention2_alg2(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Alg. 2 — FlashAttention2: lazy softmax division (one final divide)."""
+    dv = v.shape[-1]
+
+    def step(carry, kv):
+        m_prev, l_prev, o_prev = carry
+        k_i, v_i = kv
+        s_i = jnp.dot(q, k_i)
+        m_i = jnp.maximum(m_prev, s_i)
+        alpha = jnp.exp(m_prev - m_i)
+        p_i = jnp.exp(s_i - m_i)
+        l_i = l_prev * alpha + p_i
+        o_i = o_prev * alpha + v_i * p_i
+        return (m_i, l_i, o_i), None
+
+    init = (jnp.float32(-jnp.inf), jnp.float32(0.0), jnp.zeros((dv,), jnp.float32))
+    (_, l_n, o), _ = jax.lax.scan(step, init, (k.astype(jnp.float32), v.astype(jnp.float32)))
+    return o / l_n
+
+
+class _FlashDCarry(NamedTuple):
+    s_prev: jax.Array  # previous attention score s_{i-1}
+    ln_w_prev: jax.Array  # ln w_{i-1}  (w_1 = 1 -> ln w_1 = 0)
+    o: jax.Array  # running output vector
+
+
+def _flashd_step_weight(s_i, s_prev, ln_w_prev, *, saturate: bool):
+    """w_i = sigmoid(s_i - s_{i-1} + ln w_{i-1}), with the paper's
+    saturation rule applied when `saturate` (skip the exponential outside
+    the active region [-6, 11] and return the default 0/1 weight).
+
+    Also returns ln w_i computed EXACTLY in log space (log_sigmoid =
+    −softplus(−δ)): the carried (s, ln w) pair encodes the running LSE as
+    Λ = s − ln w, and round-tripping through w itself (ln(σ(δ)) after σ
+    saturates to 0 in f32) silently clamps Λ at ~87 — the hardware analogue
+    is the format-floor of the stored weight (§III-C). The fused log-space
+    form keeps Alg. 3 exact over the full f32 range."""
+    delta = s_i - s_prev + ln_w_prev
+    w = jax.nn.sigmoid(delta)
+    ln_w = jax.nn.log_sigmoid(delta)
+    if saturate:
+        w = jnp.where(
+            delta <= SKIP_LO,
+            0.0,
+            jnp.where(delta >= SKIP_HI, 1.0, w),
+        )
+        ln_w = jnp.where(delta >= SKIP_HI, 0.0, ln_w)
+    return w, ln_w, delta
+
+
+def flashd_alg3(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    saturate: bool = False,
+) -> jax.Array:
+    """Alg. 3 — FLASH-D: softmax division hidden in the sigmoid.
+
+    Carries (s_{i-1}, ln w_{i-1}, o) — note: *no running max, no running
+    sum-of-exponents*. With `saturate=True` the paper's [-6, 11] static
+    saturation/skip criterion is applied (still exact to ~sigmoid(-6)≈2e-3
+    of weight mass; the paper reports no application-level effect).
+    """
+    dv = v.shape[-1]
+
+    def step(carry: _FlashDCarry, xs):
+        k_i, v_i, is_first = xs
+        s_i = jnp.dot(q, k_i)
+        w_i, ln_w, delta = _flashd_step_weight(
+            s_i, carry.s_prev, carry.ln_w_prev, saturate=saturate
+        )
+        w_i = jnp.where(is_first, 1.0, w_i)  # Alg.3 line 7: w_1 = 1
+        ln_w = jnp.where(is_first, 0.0, ln_w)
+        # Eq. 12: o_i = o_{i-1} + (v_i - o_{i-1}) w_i  -- one FMA, no division
+        o_i = carry.o + (v_i - carry.o) * w_i
+        new = _FlashDCarry(s_i, ln_w, o_i)
+        if saturate:
+            # Skip semantics (§III-C): when w_i defaults to 0 nothing is
+            # computed or written — o AND the carried (s_prev, ln w_prev)
+            # registers stay put, so the next sigmoid argument is
+            # s_{i+1} − s_{i-1} + ln w_{i-1} = s_{i+1} − Λ, still exact.
+            skip = jnp.logical_and(~is_first, delta <= SKIP_LO)
+            new = jax.tree.map(lambda a, b: jnp.where(skip, a, b), carry, new)
+        return new, None
+
+    n = k.shape[0]
+    init = _FlashDCarry(jnp.float32(0.0), jnp.float32(0.0), jnp.zeros((dv,), jnp.float32))
+    is_first = jnp.arange(n) == 0
+    (carry), _ = jax.lax.scan(
+        step, init, (k.astype(jnp.float32), v.astype(jnp.float32), is_first)
+    )
+    return carry.o
+
+
+def flashd_alg3_skipstats(
+    q: jax.Array, k: jax.Array, v: jax.Array, n_valid=None
+):
+    """FLASH-D forward that also returns Table-I skip statistics.
+
+    Returns (o, n_skip_low, n_skip_high): `n_skip_low` counts steps with
+    sigmoid argument <= -6 (output update skipped entirely: no v_i load, no
+    FMA); `n_skip_high` counts >= 11 (output replaced by v_i: FMA skipped).
+    `n_valid` limits the scan to a key prefix (causal evaluation: query i
+    processes keys [0..i] exactly as an incremental decoder would).
+    """
+    dv = v.shape[-1]
+    n = k.shape[0]
+    if n_valid is None:
+        n_valid = n
+
+    def step(carry, xs):
+        (s_prev, ln_w_prev, o_prev, nlo, nhi) = carry
+        k_i, v_i, idx = xs
+        is_first = idx == 0
+        in_prefix = idx < n_valid
+        s_i = jnp.dot(q, k_i)
+        w_i, ln_w, delta = _flashd_step_weight(s_i, s_prev, ln_w_prev, saturate=True)
+        w_i = jnp.where(is_first, 1.0, w_i)
+        ln_w = jnp.where(is_first, 0.0, ln_w)
+        live = jnp.logical_and(~is_first, in_prefix)
+        skip_lo = jnp.logical_and(live, delta <= SKIP_LO)
+        skip_hi = jnp.logical_and(live, delta >= SKIP_HI)
+        o_i = o_prev + (v_i - o_prev) * w_i
+        # on skip (or past the prefix), registers stay put (see flashd_alg3)
+        hold = jnp.logical_or(skip_lo, ~in_prefix)
+        s_i = jnp.where(hold, s_prev, s_i)
+        ln_w = jnp.where(hold, ln_w_prev, ln_w)
+        o_i = jnp.where(hold, o_prev, o_i)
+        return (s_i, ln_w, o_i, nlo + skip_lo, nhi + skip_hi), None
+
+    init = (
+        jnp.float32(0.0),
+        jnp.float32(0.0),
+        jnp.zeros((dv,), jnp.float32),
+        jnp.int32(0),
+        jnp.int32(0),
+    )
+    (_, _, o, nlo, nhi), _ = jax.lax.scan(
+        step, init, (k.astype(jnp.float32), v.astype(jnp.float32), jnp.arange(n))
+    )
+    return o, nlo, nhi
+
+
+# Convenience batched forms (over heads/batch) used by tests and Table I.
+flashd_alg3_batched = jax.vmap(
+    jax.vmap(functools.partial(flashd_alg3), in_axes=(0, None, None)),
+    in_axes=(0, 0, 0),
+)
+naive_attention_batched = jax.vmap(
+    jax.vmap(naive_attention, in_axes=(0, None, None)), in_axes=(0, 0, 0)
+)

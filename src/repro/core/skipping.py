@@ -1,0 +1,93 @@
+"""Skip-rate instrumentation (paper §V-B, Table I).
+
+Element level: fraction of FLASH-D steps whose sigmoid argument falls outside
+the active region [-6, 11] — below ⇒ output update skipped entirely (no v_i
+load, no FMA); above ⇒ output replaced by v_i (FMA skipped). The paper
+measures 0.5–2.8 % on real LLM inference; `benchmarks/table1_skiprate.py`
+reproduces the measurement on a model trained by this repo.
+
+Tile level (beyond-paper, DESIGN.md §2.1): fraction of KV tiles whose whole
+update (exp + P·V matmul + blend) is predicated off by
+m_b − Λ < −θ − ln(B_k). This is the rate that matters on TPU.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blockwise import MaskSpec, blockwise_flashd
+from repro.core.flashd import flashd_alg3_skipstats
+
+__all__ = ["SkipStats", "element_skip_stats", "tile_skip_rate"]
+
+
+class SkipStats(NamedTuple):
+    skip_low: jax.Array  # updates skipped (w≈0) — paper's Table I number
+    skip_high: jax.Array  # outputs replaced (w≈1)
+    total: jax.Array
+
+    @property
+    def rate_low(self):
+        return self.skip_low / self.total
+
+    @property
+    def rate_high(self):
+        return self.skip_high / self.total
+
+
+def element_skip_stats(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True) -> SkipStats:
+    """Element-level Table-I statistics over a [B, S, H, d] attention batch.
+
+    Runs the sequential paper-faithful Alg. 3 per (batch, head, query) row;
+    causal queries process exactly their key prefix [0..i] — the realized
+    steps an incremental decoder executes. Totals count steps after the
+    first (w_1 = 1 is structural, not a skip opportunity).
+    """
+    b, s, h, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+
+    def per_head(qh, kh, vh):
+        prefix = (jnp.arange(s) + 1) if causal else jnp.full((s,), s)
+        o, lo, hi = jax.vmap(
+            lambda qi, n: flashd_alg3_skipstats(qi * scale, kh, vh, n_valid=n)
+        )(qh, prefix)
+        return jnp.sum(lo), jnp.sum(hi)
+
+    fn = jax.vmap(jax.vmap(per_head, in_axes=(1, 1, 1)), in_axes=(0, 0, 0))
+    lo, hi = fn(q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32))
+    steps_per_head = (s * (s - 1)) // 2 if causal else s * (s - 1)
+    total = jnp.int32(b * h * steps_per_head)
+    return SkipStats(jnp.sum(lo), jnp.sum(hi), total)
+
+
+def tile_skip_rate(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    mask: MaskSpec = MaskSpec("causal"),
+    block_q: int = 128,
+    block_k: int = 128,
+    theta: float = 6.0,
+) -> jax.Array:
+    """Tile-level skip rate of the blockwise FLASH-D kernel on [B,S,H,d]."""
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.transpose(0, 2, 1, 3).reshape(b, hkv, g, s, d)
+    kg = k.transpose(0, 2, 1, 3)
+    vg = v.transpose(0, 2, 1, 3)
+
+    def one(qi, ki, vi):
+        _, _, rate = blockwise_flashd(
+            qi, ki, vi, mask=mask, block_q=block_q, block_k=block_k,
+            skip=True, skip_theta=theta, return_skiprate=True,
+        )
+        return rate
+
+    fn = jax.vmap(jax.vmap(jax.vmap(one, in_axes=(0, None, None))))
+    rates = fn(qg, kg, vg)
+    return jnp.mean(rates)

@@ -1,0 +1,2 @@
+from repro.data.pipeline import DataConfig, SyntheticLM, make_batch
+__all__ = ["DataConfig", "SyntheticLM", "make_batch"]

@@ -1,0 +1,3 @@
+from repro.distributed import sharding
+from repro.distributed.pipeline import pipeline_apply, split_stages
+__all__ = ["sharding", "pipeline_apply", "split_stages"]

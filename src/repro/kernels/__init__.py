@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the FLASH-D attention hot spot.
+
+flashd_fwd    — blockwise FLASH-D prefill/training forward (tile-skip capable)
+fa2_fwd       — FlashAttention2 baseline (the paper's comparison point)
+flashd_decode — split-K decode with FLASH-D sigmoid merging of partials
+ops           — jit'd dispatch (TPU: compiled kernels; CPU: interpret mode)
+ref           — pure-jnp oracles
+"""

@@ -1,0 +1,155 @@
+"""Pallas TPU kernel: FLASH-D split-K decode (flash-decoding adapted).
+
+One new token per sequence attends a long KV cache. The cache is split along
+the sequence axis across the innermost grid dimension; each split emits a
+partial (o_p, λ_p) pair. Partials are merged with the FLASH-D sigmoid blend
+
+    o ← o_a + (o_b − o_a)·σ(λ_b − λ_a)
+
+— one sigmoid + one vector FMA per merge, where the FA2 merge needs two
+exp-rescales and a division (beyond-paper contribution, DESIGN.md §2.2).
+The same merge combines cross-device partials under context-parallel
+sharding of the cache (see repro.serve).
+
+Dynamic cache length enters as a scalar-prefetch-style operand (an i32 array
+indexed per batch row) and masks padded cache slots inside the kernel.
+Sliding-window / chunked masks for recurrentgemma / llama4 decode are also
+applied in-kernel, so only live splits do work (`pl.when` on split bounds).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+
+    _HAS_PLTPU = True
+except Exception:  # pragma: no cover
+    pltpu = None
+    _HAS_PLTPU = False
+
+from repro.core.blockwise import NEG_INF, merge_partials
+
+__all__ = ["flashd_decode_pallas"]
+
+
+def _decode_kernel(
+    cache_len_ref, q_ref, k_ref, v_ref,
+    o_ref, lam_ref,
+    *,
+    split: int,
+    window: int,
+    chunk: int,
+    scale: float,
+):
+    ib = pl.program_id(0)
+    ip = pl.program_id(2)
+    cache_len = cache_len_ref[0, 0]
+
+    # a split is live iff it overlaps [lo_bound, cache_len)
+    lo = ip * split
+    lo_bound = jnp.int32(0)
+    if window > 0:
+        lo_bound = jnp.maximum(lo_bound, cache_len - window)
+    if chunk > 0:
+        lo_bound = jnp.maximum(lo_bound, ((cache_len - 1) // chunk) * chunk)
+    live = jnp.logical_and(lo < cache_len, lo + split > lo_bound)
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)  # [G, d]
+        k = k_ref[0, 0].astype(jnp.float32)  # [split, d]
+        v = v_ref[0, 0].astype(jnp.float32)  # [split, dv]
+        pos = lo + jax.lax.broadcasted_iota(jnp.int32, (split,), 0)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [G, split]
+        keep = jnp.logical_and(pos >= lo_bound, pos < cache_len)
+        s = jnp.where(keep[None, :], s, NEG_INF)
+        m = jnp.max(s, axis=-1)
+        m_safe = jnp.maximum(m, NEG_INF / 2)
+        p = jnp.exp(s - m_safe[:, None])
+        l = jnp.sum(p, axis=-1)
+        lam = jnp.where(
+            l > 0,
+            m_safe + jnp.log(jnp.maximum(l, jnp.finfo(jnp.float32).tiny)),
+            NEG_INF,
+        )
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        c = jnp.where(l > 0, jnp.exp(m_safe - lam), 0.0)  # ⇒ pv·c = softmax·V
+        o_ref[0, 0, :, 0, :] = (pv * c[:, None]).astype(o_ref.dtype)
+        lam_ref[0, 0, :, 0] = lam
+
+    @pl.when(jnp.logical_not(live))
+    def _dead():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        lam_ref[...] = jnp.full_like(lam_ref, NEG_INF)
+
+
+def flashd_decode_pallas(
+    q: jax.Array,  # [B, Hq, d] — one token per sequence
+    k_cache: jax.Array,  # [B, Hkv, S_max, d]
+    v_cache: jax.Array,  # [B, Hkv, S_max, dv]
+    cache_len: jax.Array,  # [B] i32
+    *,
+    scale: Optional[float] = None,
+    n_splits: int = 8,
+    window: int = 0,
+    chunk: int = 0,
+    interpret: bool = False,
+):
+    """Returns o [B, Hq, dv]. Split partials merged with the FLASH-D blend."""
+    b, hq, d = q.shape
+    _, hkv, s_max, dv = v_cache.shape
+    g = hq // hkv
+    if scale is None:
+        scale = float(1.0 / (d ** 0.5))
+    n_splits = max(1, min(n_splits, s_max))
+    pad = (-s_max) % n_splits
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    split = (s_max + pad) // n_splits
+
+    qg = q.reshape(b, hkv, g, d)
+    cache_len = jnp.asarray(cache_len, jnp.int32).reshape(b, 1)
+
+    kernel = functools.partial(
+        _decode_kernel, split=split, window=window, chunk=chunk, scale=scale
+    )
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda b_, h, ip: (b_, 0)),
+        pl.BlockSpec((1, 1, g, d), lambda b_, h, ip: (b_, h, 0, 0)),
+        pl.BlockSpec((1, 1, split, d), lambda b_, h, ip: (b_, h, ip, 0)),
+        pl.BlockSpec((1, 1, split, dv), lambda b_, h, ip: (b_, h, ip, 0)),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, 1, g, 1, dv), lambda b_, h, ip: (b_, h, 0, ip, 0)),
+        pl.BlockSpec((1, 1, g, 1), lambda b_, h, ip: (b_, h, 0, ip)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((b, hkv, g, n_splits, dv), jnp.float32),
+        jax.ShapeDtypeStruct((b, hkv, g, n_splits), jnp.float32),
+    ]
+    call = pl.pallas_call(
+        kernel,
+        grid=(b, hkv, n_splits),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    o_p, lam_p = call(cache_len, qg, k_cache, v_cache)
+    # FLASH-D sigmoid merge over splits (axis moved to front for the scan)
+    o_p = jnp.moveaxis(o_p, 3, 0)  # [P, B, Hkv, G, dv]
+    lam_p = jnp.moveaxis(lam_p, 3, 0)
+    o, _ = merge_partials(o_p, lam_p)
+    return o.reshape(b, hq, dv).astype(q.dtype)

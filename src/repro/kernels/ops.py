@@ -1,0 +1,88 @@
+"""jit'd dispatch layer over the Pallas kernels.
+
+On TPU backends the real kernels run; everywhere else they execute in
+Pallas interpret mode (kernel body evaluated op-by-op on CPU) so every code
+path is exercised in CI. The models never import kernels directly — they go
+through `repro.core.attention`, which lands here for the `*_pallas` impls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blockwise import MaskSpec
+from repro.kernels.fa2_fwd import fa2_fwd_pallas
+from repro.kernels.flashd_decode import flashd_decode_pallas
+from repro.kernels.flashd_fwd import flashd_fwd_pallas
+
+__all__ = ["pallas_attention_fwd_batched", "pallas_decode", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def _interpret() -> bool:
+    return not on_tpu()
+
+
+def pallas_attention_fwd_batched(
+    q: jax.Array,  # [B, Sq, Hq, d]   (model layout)
+    k: jax.Array,  # [B, Skv, Hkv, d]
+    v: jax.Array,  # [B, Skv, Hkv, dv]
+    *,
+    mask: MaskSpec,
+    scale: float,
+    impl: str,
+    block_q: int,
+    block_k: int,
+    skip: bool,
+):
+    """Returns (o [B,Sq,Hq,dv], Λ [B,Hq,Sq]) — kernel layout handled here."""
+    qt = q.transpose(0, 2, 1, 3)  # [B, Hq, Sq, d]
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if impl == "flashd":
+        o, lam = flashd_fwd_pallas(
+            qt, kt, vt, mask=mask, scale=scale, block_q=block_q,
+            block_k=block_k, skip=skip, interpret=_interpret(),
+        )
+    elif impl == "fa2":
+        o, lam = fa2_fwd_pallas(
+            qt, kt, vt, mask=mask, scale=scale, block_q=block_q,
+            block_k=block_k, interpret=_interpret(),
+        )
+    else:
+        raise ValueError(f"unknown pallas impl {impl!r}")
+    return o.transpose(0, 2, 1, 3), lam
+
+
+def pallas_decode(
+    q: jax.Array,  # [B, 1, Hq, d]
+    k_cache: jax.Array,  # [B, S, Hkv, d]
+    v_cache: jax.Array,  # [B, S, Hkv, dv]
+    cache_len: jax.Array,
+    *,
+    scale=None,
+    n_splits: int = 8,
+    window: int = 0,
+    chunk: int = 0,
+):
+    o = flashd_decode_pallas(
+        q[:, 0].transpose(0, 1, 2) if q.ndim == 3 else q[:, 0],
+        k_cache.transpose(0, 2, 1, 3),
+        v_cache.transpose(0, 2, 1, 3),
+        jnp.asarray(cache_len, jnp.int32).reshape(-1),
+        scale=scale,
+        n_splits=n_splits,
+        window=window,
+        chunk=chunk,
+        interpret=_interpret(),
+    )
+    return o[:, None]  # [B, 1, Hq, dv]

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These deliberately use the O(S²) full-matrix softmax formulation — maximally
+simple, obviously correct — NOT the tiled recurrences (those live in
+repro.core.blockwise and are themselves validated against these oracles).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blockwise import MaskSpec, NEG_INF
+
+__all__ = ["attention_ref", "decode_ref"]
+
+
+def attention_ref(
+    q: jax.Array,  # [B, Hq, Sq, d]
+    k: jax.Array,  # [B, Hkv, Skv, d]
+    v: jax.Array,  # [B, Hkv, Skv, dv]
+    *,
+    mask: MaskSpec = MaskSpec("causal"),
+    scale: Optional[float] = None,
+):
+    """Full-matrix softmax attention with GQA. Returns (o, Λ)."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, dv = v.shape
+    g = hq // hkv
+    if scale is None:
+        scale = float(1.0 / (d ** 0.5))
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, sq, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * scale
+    bias = mask.block_bias(jnp.arange(sq), jnp.arange(skv))
+    if bias is not None:
+        s = s + bias
+    lam = jax.nn.logsumexp(s, axis=-1)
+    lam = jnp.where(jnp.isfinite(lam), lam, NEG_INF)
+    p = jnp.exp(s - lam[..., None])
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return (
+        o.reshape(b, hq, sq, dv).astype(q.dtype),
+        lam.reshape(b, hq, sq),
+    )
+
+
+def decode_ref(
+    q: jax.Array,  # [B, Hq, d]
+    k_cache: jax.Array,  # [B, Hkv, S, d]
+    v_cache: jax.Array,  # [B, Hkv, S, dv]
+    cache_len: jax.Array,  # [B]
+    *,
+    scale: Optional[float] = None,
+    window: int = 0,
+    chunk: int = 0,
+):
+    b, hq, d = q.shape
+    _, hkv, s_max, dv = v_cache.shape
+    g = hq // hkv
+    if scale is None:
+        scale = float(1.0 / (d ** 0.5))
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, d)
+    s = jnp.einsum("bhgd,bhsd->bhgs", qf, k_cache.astype(jnp.float32)) * scale
+    pos = jnp.arange(s_max)
+    cache_len = jnp.asarray(cache_len).reshape(b, 1)
+    keep = pos[None, :] < cache_len
+    if window > 0:
+        keep &= pos[None, :] >= cache_len - window
+    if chunk > 0:
+        keep &= (pos[None, :] // chunk) == ((cache_len - 1) // chunk)
+    s = jnp.where(keep[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bhsd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, hq, dv).astype(q.dtype)

@@ -1,0 +1,123 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+).strip()
+
+"""§Perf hillclimb driver: hypothesis → change → re-lower → validate.
+
+Runs a named list of variants for one (arch × shape × mesh) cell and
+records the three roofline terms per variant into hillclimb_results.json.
+Each variant is a combination of the framework's perf levers:
+
+  attn=fa2|flashd         kernel family (fa2 = the paper's baseline)
+  skip                    FLASH-D tile-skip predication
+  remat=dots|full|none    activation-checkpoint policy
+  nosp                    disable sequence-parallel residual sharding
+  cast1                   bf16 cast-before-FSDP-gather (halves gather bytes)
+  int8grad                error-feedback int8 gradient compression
+  accum=N                 microbatch count
+  bq=N / bk=N             attention tile sizes
+  cf=X                    MoE capacity factor
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.hillclimb --arch yi-34b \
+      --shape train_4k --variants baseline,cast1,cast1+int8grad
+"""
+
+import argparse
+import json
+import sys
+
+from repro.launch import dryrun as dr
+from repro.optim import CompressionConfig
+
+
+def parse_variant(spec: str):
+    """'cast1+int8grad+remat=dots' → kwargs for dr.run_cell."""
+    kw = dict(attn_impl=None, remat=None, extra_cfg={}, train_overrides={},
+              use_sp=True, use_tp=True)
+    if spec in ("baseline", ""):
+        return kw
+    for part in spec.split("+"):
+        if part.startswith("attn="):
+            kw["attn_impl"] = part.split("=", 1)[1]
+        elif part == "skip":
+            kw["extra_cfg"]["attn_skip"] = True
+        elif part.startswith("remat="):
+            kw["remat"] = part.split("=", 1)[1]
+        elif part == "nosp":
+            kw["use_sp"] = False
+        elif part == "notp":
+            kw["use_tp"] = False
+        elif part == "cast1":
+            kw["train_overrides"]["cast_params_once"] = True
+        elif part == "gradbf16":
+            kw["train_overrides"]["grad_dtype"] = "bfloat16"
+            kw["train_overrides"]["cast_params_once"] = True
+        elif part == "int8grad":
+            kw["train_overrides"]["compression"] = CompressionConfig(kind="int8")
+        elif part.startswith("accum="):
+            kw["train_overrides"]["accum_steps"] = int(part.split("=", 1)[1])
+        elif part.startswith("bq="):
+            kw["extra_cfg"]["attn_block_q"] = int(part.split("=", 1)[1])
+        elif part.startswith("bk="):
+            kw["extra_cfg"]["attn_block_k"] = int(part.split("=", 1)[1])
+        elif part.startswith("cf="):
+            kw["extra_cfg"]["capacity_factor"] = float(part.split("=", 1)[1])
+        else:
+            raise ValueError(f"unknown variant token {part!r}")
+    return kw
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--shape", required=True)
+    p.add_argument("--mesh", default="single", choices=["single", "multi"])
+    p.add_argument("--variants", required=True, help="comma-separated specs")
+    p.add_argument("--out", default="hillclimb_results.json")
+    args = p.parse_args(argv)
+
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    for spec in args.variants.split(","):
+        spec = spec.strip()
+        key = (args.arch, args.shape, args.mesh, spec)
+        if any((r["arch"], r["shape"], r["mesh_flag"], r["variant"]) == key
+               for r in results):
+            print(f"[skip existing] {spec}")
+            continue
+        kw = parse_variant(spec)
+        try:
+            rec = dr.run_cell(
+                args.arch, args.shape, args.mesh == "multi",
+                attn_impl=kw["attn_impl"], remat=kw["remat"],
+                extra_cfg=kw["extra_cfg"] or None,
+                train_overrides=kw["train_overrides"] or None,
+                use_sp=kw["use_sp"], use_tp=kw["use_tp"], verbose=False,
+            )
+            rl = rec["roofline"]
+            print(
+                f"[{spec:40s}] tc={rl['t_compute']*1e3:9.1f}ms "
+                f"tm={rl['t_memory']*1e3:9.1f}ms tx={rl['t_collective']*1e3:9.1f}ms "
+                f"dom={rl['dominant']:10s} useful={rl['useful_flops_ratio']:.2f} "
+                f"mem={rec['memory'].get('total_bytes_per_device',0)/2**30:.1f}GiB",
+                flush=True,
+            )
+        except Exception as e:
+            rec = {"status": "error", "error": str(e), "roofline": None, "memory": {}}
+            print(f"[{spec}] ERROR {e}", flush=True)
+        rec["variant"] = spec
+        rec["arch"], rec["shape"], rec["mesh_flag"] = args.arch, args.shape, args.mesh
+        results.append(rec)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,24 @@
+"""Production mesh construction (assignment-specified shapes).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state — the dry-run sets XLA_FLAGS before first jax init; everything else
+sees the host's single device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 (data, model) single pod; 2×16×16 (pod, data, model) multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (possibly forced-host) devices exist."""
+    return jax.make_mesh((data, model), ("data", "model"))

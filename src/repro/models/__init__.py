@@ -1,0 +1,41 @@
+"""Model zoo facade: uniform init/loss/decode API over all architectures."""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+from repro.models import encdec as _encdec
+from repro.models import transformer as _tf
+from repro.models.config import ModelConfig
+
+
+class ModelApi(NamedTuple):
+    init: Callable  # (key, cfg) -> params
+    apply: Callable  # (params, batch, cfg) -> (logits, aux)
+    loss: Callable  # (params, batch, cfg) -> (loss, metrics)
+    init_cache: Callable  # (batch, max_len, cfg) -> cache
+    decode_step: Callable  # (params, cache, token, pos, cfg) -> (logits, cache)
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+    if cfg.is_encdec:
+        return ModelApi(
+            init=_encdec.init_encdec,
+            apply=_encdec.apply_encdec,
+            loss=_encdec.encdec_loss,
+            # self-attn cache sized to the sequence; cross-attn memory is the
+            # encoder frame count — capped at 4096 (audio frontends emit
+            # ~O(1k) frames; a 32k cross memory would be modality-impossible)
+            init_cache=lambda b, s, c: _encdec.init_encdec_cache(b, s, min(s, 4096), c),
+            decode_step=_encdec.decode_step_encdec,
+        )
+    return ModelApi(
+        init=_tf.init_lm,
+        apply=_tf.apply_lm,
+        loss=_tf.lm_loss,
+        init_cache=_tf.init_decode_cache,
+        decode_step=_tf.decode_step_lm,
+    )
+
+
+__all__ = ["ModelConfig", "ModelApi", "get_model"]

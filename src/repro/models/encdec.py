@@ -1,0 +1,247 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+Encoder: bidirectional attention blocks over precomputed audio-frame
+embeddings (the modality frontend is a stub per the assignment — frames
+enter as [B, T, d_model]). Decoder: causal self-attention + cross-attention
+to the encoder output + SwiGLU, all through the FLASH-D kernels (cross
+attention uses the 'full' mask — no causal structure over memory).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention import decode_attention
+from repro.distributed.sharding import shard
+from repro.models.config import ModelConfig
+from repro.models.layers import embed_lookup, logits_from_hidden, rms_norm, dense_init
+from repro.models.transformer import (
+    _apply_attn,
+    _apply_swiglu,
+    _init_attn,
+    _init_swiglu,
+    _qkv,
+    _AUX_KEYS,
+    _remat,
+)
+
+
+
+def _maybe_scan(body, carry, xs, cfg, with_out=False):
+    """lax.scan or python unroll (dry-run cost probes; see ModelConfig)."""
+    import jax as _jax, jax.numpy as _jnp
+    if cfg.scan_layers:
+        return _jax.lax.scan(body, carry, xs)
+    nb = _jax.tree.leaves(xs)[0].shape[0]
+    outs = []
+    for i in range(nb):
+        carry, y = body(carry, _jax.tree.map(lambda x: x[i], xs))
+        outs.append(y)
+    if with_out and outs[0] is not None:
+        outs = _jax.tree.map(lambda *ys: _jnp.stack(ys), *outs)
+    else:
+        outs = None
+    return carry, outs
+
+__all__ = ["init_encdec", "apply_encdec", "encdec_loss", "init_encdec_cache", "decode_step_encdec"]
+
+
+def _init_enc_block(key, cfg):
+    return {
+        "norm1": jnp.zeros((cfg.d_model,), cfg.master_dtype),
+        "mixer": _init_attn(jax.random.fold_in(key, 1), cfg),
+        "norm2": jnp.zeros((cfg.d_model,), cfg.master_dtype),
+        "ffn": _init_swiglu(jax.random.fold_in(key, 2), cfg),
+    }
+
+
+def _init_dec_block(key, cfg):
+    p = _init_enc_block(key, cfg)
+    p["norm_cross"] = jnp.zeros((cfg.d_model,), cfg.master_dtype)
+    p["cross"] = _init_attn(jax.random.fold_in(key, 3), cfg)
+    return p
+
+
+def init_encdec(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 8)
+    dt = cfg.master_dtype
+
+    def stack(base, n, mk):
+        blocks = [mk(jax.random.fold_in(base, i), cfg) for i in range(n)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+
+    return {
+        "embed": dense_init(ks[0], (cfg.padded_vocab, cfg.d_model), scale=0.02, dtype=dt),
+        "frame_proj": dense_init(ks[1], (cfg.d_model, cfg.d_model), dtype=dt),
+        "enc_blocks": stack(ks[2], cfg.n_encoder_layers, _init_enc_block),
+        "dec_blocks": stack(ks[3], cfg.n_layers, _init_dec_block),
+        "enc_norm": jnp.zeros((cfg.d_model,), dt),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+        "lm_head": dense_init(ks[4], (cfg.d_model, cfg.padded_vocab), dtype=dt),
+    }
+
+
+def encode(params, frame_embeds: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """frame_embeds [B, T, D] (stub frontend output) → memory [B, T, D]."""
+    cdt = cfg.compute_dtype
+    h = jnp.einsum("btd,de->bte", frame_embeds.astype(cdt), params["frame_proj"].astype(cdt))
+    h = shard(h, "residual")
+    positions = jnp.arange(h.shape[1])
+
+    def body(h, bp):
+        x = rms_norm(h, bp["norm1"], cfg.norm_eps)
+        h = shard(h + _apply_attn(bp["mixer"], x, cfg, "attn_bidir", positions), "residual")
+        x = rms_norm(h, bp["norm2"], cfg.norm_eps)
+        h = shard(h + _apply_swiglu(bp["ffn"], x, cfg), "residual")
+        return h, None
+
+    h, _ = _maybe_scan(_remat(body, cfg), h, params["enc_blocks"], cfg)
+    return rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_body(cfg, memory, positions):
+    def body(carry, bp):
+        h, aux = carry
+        x = rms_norm(h, bp["norm1"], cfg.norm_eps)
+        h = shard(h + _apply_attn(bp["mixer"], x, cfg, "attn", positions), "residual")
+        x = rms_norm(h, bp["norm_cross"], cfg.norm_eps)
+        h = shard(h + _apply_attn(bp["cross"], x, cfg, "cross", positions, kv_x=memory), "residual")
+        x = rms_norm(h, bp["norm2"], cfg.norm_eps)
+        h = shard(h + _apply_swiglu(bp["ffn"], x, cfg), "residual")
+        return (h, aux), None
+
+    return body
+
+
+def apply_encdec(params: dict, batch: Dict, cfg: ModelConfig, *, last_only: bool = False):
+    """batch: frame_embeds [B,T,D], tokens [B,S] → (logits, aux)."""
+    memory = encode(params, batch["frame_embeds"], cfg)
+    h = embed_lookup(params["embed"], batch["tokens"], cfg.compute_dtype)
+    h = shard(h, "residual")
+    positions = jnp.arange(h.shape[1])
+    aux = {k: jnp.float32(0.0) for k in _AUX_KEYS}
+    (h, aux), _ = _maybe_scan(
+        _remat(_dec_body(cfg, memory, positions), cfg), (h, aux), params["dec_blocks"], cfg
+    )
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if last_only:
+        h = h[:, -1:]
+    logits = logits_from_hidden(h, params["lm_head"], cfg.vocab_size)
+    return shard(logits, "logits"), aux
+
+
+def encdec_loss(params: dict, batch: Dict, cfg: ModelConfig):
+    logits, aux = apply_encdec(params, batch, cfg)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    ce = jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce, {"ce": ce, **aux}
+
+
+# ---------------------------------------------------------------------------
+# decode (serve): cached self-attn KV + cached cross-attn KV
+# ---------------------------------------------------------------------------
+
+def init_encdec_cache(batch: int, max_len: int, mem_len: int, cfg: ModelConfig) -> dict:
+    hd = cfg.head_dim_
+    n = cfg.n_layers
+    kv = lambda s: jnp.zeros((n, batch, s, cfg.n_kv_heads, hd), cfg.compute_dtype)
+    return {
+        "self_k": kv(max_len), "self_v": kv(max_len),
+        "cross_k": kv(mem_len), "cross_v": kv(mem_len),
+    }
+
+
+def fill_cross_cache(params: dict, memory: jax.Array, cache: dict, cfg: ModelConfig):
+    """Project encoder memory through every decoder layer's cross K/V once."""
+    cdt = cfg.compute_dtype
+    b, t, _ = memory.shape
+    hd = cfg.head_dim_
+
+    def per_layer(bp):
+        k = jnp.einsum("btd,dh->bth", memory, bp["cross"]["wk"].astype(cdt))
+        v = jnp.einsum("btd,dh->bth", memory, bp["cross"]["wv"].astype(cdt))
+        if cfg.qkv_bias:
+            k, v = k + bp["cross"]["bk"].astype(cdt), v + bp["cross"]["bv"].astype(cdt)
+        return (
+            k.reshape(b, t, cfg.n_kv_heads, hd),
+            v.reshape(b, t, cfg.n_kv_heads, hd),
+        )
+
+    ks, vs = jax.vmap(per_layer)(params["dec_blocks"])
+    return {**cache, "cross_k": ks, "cross_v": vs}
+
+
+def decode_step_encdec(params: dict, cache: dict, token: jax.Array, pos: jax.Array, cfg: ModelConfig):
+    """One decoder step against cached cross-attention memory."""
+    b = token.shape[0]
+    hd = cfg.head_dim_
+    cdt = cfg.compute_dtype
+    h = embed_lookup(params["embed"], token[:, None], cdt)
+    mem_len = cache["cross_k"].shape[2]
+    bidx = jnp.arange(b)
+
+    def body(h, xs):
+        bp, sk, sv, ck, cv = xs
+        # self attention
+        x = rms_norm(h, bp["norm1"], cfg.norm_eps)
+        q, k, v = _qkv(bp["mixer"], x, cfg, "attn", pos[:, None])
+        sk = sk.at[bidx, pos].set(k[:, 0])
+        sv = sv.at[bidx, pos].set(v[:, 0])
+        o = decode_attention(q, sk, sv, pos + 1)
+        h = h + jnp.einsum(
+            "bsh,hd->bsd", o.reshape(b, 1, -1), bp["mixer"]["wo"].astype(cdt)
+        )
+        # cross attention against cached memory K/V
+        x = rms_norm(h, bp["norm_cross"], cfg.norm_eps)
+        qc = jnp.einsum("bsd,dh->bsh", x, bp["cross"]["wq"].astype(cdt))
+        if cfg.qkv_bias:
+            qc = qc + bp["cross"]["bq"].astype(cdt)
+        qc = qc.reshape(b, 1, cfg.n_heads, hd)
+        oc = decode_attention(qc, ck, cv, jnp.full((b,), mem_len))
+        h = h + jnp.einsum(
+            "bsh,hd->bsd", oc.reshape(b, 1, -1), bp["cross"]["wo"].astype(cdt)
+        )
+        # ffn
+        x = rms_norm(h, bp["norm2"], cfg.norm_eps)
+        h = h + _apply_swiglu(bp["ffn"], x, cfg)
+        return h, (sk, sv)
+
+    if cfg.scan_layers:
+        # fori_loop carrying the stacked self-cache, sliced/updated in place
+        # (same rationale as decode_step_lm: one cache buffer, donatable)
+        def loop_body(i, carry):
+            h, sk_all, sv_all = carry
+            xs = jax.tree.map(
+                lambda x: jax.lax.dynamic_index_in_dim(x, i, 0, keepdims=False),
+                (params["dec_blocks"], sk_all, sv_all,
+                 cache["cross_k"], cache["cross_v"]),
+            )
+            h, (sk_i, sv_i) = body(h, xs)
+            sk_all = jax.lax.dynamic_update_index_in_dim(sk_all, sk_i, i, 0)
+            sv_all = jax.lax.dynamic_update_index_in_dim(sv_all, sv_i, i, 0)
+            return (h, sk_all, sv_all)
+
+        n = cfg.n_layers
+        h, sk, sv = jax.lax.fori_loop(
+            0, n, loop_body, (h, cache["self_k"], cache["self_v"])
+        )
+    else:
+        h, out = _maybe_scan(
+            body,
+            h,
+            (params["dec_blocks"], cache["self_k"], cache["self_v"],
+             cache["cross_k"], cache["cross_v"]),
+            cfg,
+            with_out=True,
+        )
+        sk, sv = out
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(h, params["lm_head"], cfg.vocab_size)
+    return logits[:, 0], {**cache, "self_k": sk, "self_v": sv}

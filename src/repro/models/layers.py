@@ -1,0 +1,97 @@
+"""Shared neural-net layers: norms, rotary embeddings, initializers, embed.
+
+Pure-functional: params are nested dicts of jnp arrays; every `init_*`
+returns a pytree and the matching `apply` consumes it. Master weights live
+in `param_dtype` (f32); compute casts to `dtype` (bf16) at use sites.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_init",
+    "rms_norm",
+    "apply_rope",
+    "embed_lookup",
+    "logits_from_hidden",
+    "conv1d_causal",
+]
+
+
+def dense_init(key, shape, scale: Optional[float] = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (LLaMA-style 0.02 default cap)."""
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    std = scale if scale is not None else min(0.02, 1.0 / math.sqrt(fan_in))
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32) * std).astype(dtype)
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm in f32 (norm statistics never in bf16), output in x.dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+def _rope_angles(positions: jax.Array, head_dim: int, theta: float):
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., half]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding. x [B, S, H, hd]; positions [B, S] or [S]."""
+    hd = x.shape[-1]
+    cos, sin = _rope_angles(positions, hd, theta)  # [S, half] or [B, S, half]
+    if cos.ndim == 2:  # positions [S] → align to [1, S, 1, half]
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:  # positions [B, S] → [B, S, 1, half]
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def embed_lookup(table: jax.Array, ids: jax.Array, dtype) -> jax.Array:
+    """Token embedding with sqrt(d) scaling left to the caller's convention
+    (we follow LLaMA: no scaling)."""
+    return jnp.take(table, ids, axis=0).astype(dtype)
+
+
+def logits_from_hidden(
+    h: jax.Array, head: jax.Array, true_vocab: int
+) -> jax.Array:
+    """LM head on padded vocab; padded slots masked to a large negative so
+    softmax/CE ignore them. Computed in bf16 matmul, f32 logits."""
+    logits = jnp.einsum(
+        "bsd,dv->bsv", h, head.astype(h.dtype), preferred_element_type=jnp.float32
+    )
+    v_pad = head.shape[-1]
+    if v_pad > true_vocab:
+        mask = jnp.arange(v_pad) < true_vocab
+        logits = jnp.where(mask, logits, -1e30)
+    return logits
+
+
+def conv1d_causal(x: jax.Array, w: jax.Array, cache: Optional[jax.Array] = None):
+    """Depthwise causal 1-D conv. x [B, S, C], w [K, C].
+
+    Training/prefill: full-sequence (left-padded). Decode: pass `cache`
+    [B, K-1, C] of trailing inputs; returns (y [B, 1, C], new_cache).
+    """
+    k = w.shape[0]
+    if cache is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+        y = sum(
+            xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+        )
+        return y.astype(x.dtype), None
+    window = jnp.concatenate([cache, x], axis=1)  # [B, K, C]
+    y = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+    return y[:, None, :].astype(x.dtype), window[:, 1:, :]

@@ -1,0 +1,179 @@
+"""Mamba-2 (SSD — state-space duality) mixer, chunked matmul formulation.
+
+The SSD recurrence  h_t = exp(a·dt_t)·h_{t−1} + dt_t·B_t x_tᵀ,
+y_t = C_tᵀ h_t + D·x_t  is evaluated with the chunked algorithm of
+arXiv:2405.21060 §6: intra-chunk terms are a masked quadratic form (MXU
+matmuls), inter-chunk state is carried by a short `lax.scan` over chunks —
+TPU-native (no per-step scan over 4k..512k tokens).
+
+Decode: O(1) per token via the explicit recurrence on the carried state
+[B, H, P, N]. The attention-free path for the long_500k shape.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import conv1d_causal, dense_init, rms_norm
+
+__all__ = ["init_mamba2", "apply_mamba2", "init_mamba2_cache", "decode_mamba2"]
+
+
+def init_mamba2(key, cfg) -> dict:
+    d = cfg.d_model
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 5)
+    dt = cfg.master_dtype
+    # in_proj emits [z (di), x (di), B (n), C (n), dt (h)]
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * di + 2 * n + h), dtype=dt),
+        "conv_w": dense_init(ks[1], (cfg.conv_width, di + 2 * n), scale=0.1, dtype=dt),
+        "A_log": jnp.zeros((h,), dt) + jnp.log(jnp.linspace(1.0, 16.0, h)).astype(dt),
+        "D": jnp.ones((h,), dt),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((h,), 0.01))).astype(dt),  # softplus⁻¹
+        "gate_norm": jnp.zeros((di,), dt),
+        "w_out": dense_init(ks[2], (di, d), dtype=dt),
+    }
+
+
+def _split_in(proj, cfg):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z, xin, bmat, cmat, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1
+    )
+    return z, xin, bmat, cmat, dt
+
+
+def _segsum(x):
+    """Stable 'segment sum' producing the lower-triangular decay matrix:
+    L[i, j] = sum_{j < m <= i} x[m]  (i ≥ j), −inf above the diagonal."""
+    l = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_log, bmat, cmat, d_skip, chunk: int):
+    """SSD forward. x [B,S,H,P], dt [B,S,H], bmat/cmat [B,S,N]; returns y.
+
+    Single B/C group shared across heads (Mamba-2 default, G=1).
+    """
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    nc = s // chunk
+    a = -jnp.exp(a_log.astype(jnp.float32))  # [H], negative
+    da = (dt * a[None, None, :]).astype(jnp.float32)  # [B,S,H]
+    xdt = x * dt[..., None]
+
+    # chunked views: c = chunk index, l = position within chunk
+    xr = xdt.reshape(b, nc, chunk, h, p)
+    br = bmat.reshape(b, nc, chunk, n)
+    cr = cmat.reshape(b, nc, chunk, n)
+    dar = da.reshape(b, nc, chunk, h)
+
+    # 1) intra-chunk (quadratic, MXU): y_intra[l] = Σ_{m≤l} C_l·B_m decay(l,m) xdt_m
+    lmat = jnp.exp(_segsum(dar.transpose(0, 1, 3, 2)))  # [B,nc,H,L,L]
+    cb = jnp.einsum("bcln,bcmn->bclm", cr, br)  # [B,nc,L,L]
+    y_intra = jnp.einsum("bclm,bchlm,bcmhp->bclhp", cb, lmat, xr)
+
+    # 2) chunk-final states: states[c] = Σ_m decay(end,m) B_m xdt_mᵀ
+    decay_end = jnp.exp(jnp.cumsum(dar, axis=2)[:, :, -1:, :] - jnp.cumsum(dar, axis=2))
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", br, decay_end, xr)
+
+    # 3) inter-chunk recurrence over nc chunks (short scan)
+    chunk_decay = jnp.exp(jnp.sum(dar, axis=2))  # [B,nc,H]
+
+    def scan_fn(h_prev, inp):
+        st, dec = inp
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    _, h_prevs = jax.lax.scan(
+        scan_fn,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)  # [B,nc,H,P,N] state entering chunk
+
+    # 4) state→output within chunk: y_inter[l] = C_l · (decay(l,0⁻) h_prev)
+    decay_in = jnp.exp(jnp.cumsum(dar, axis=2))  # [B,nc,L,H]
+    y_inter = jnp.einsum("bcln,bclh,bchpn->bclhp", cr, decay_in, h_prevs)
+
+    y = (y_intra + y_inter).reshape(b, s, h, p) + x * d_skip[None, None, :, None]
+    return y.astype(x.dtype)
+
+
+def apply_mamba2(params: dict, x: jax.Array, cfg) -> jax.Array:
+    """Full-sequence (training / prefill) Mamba-2 block. x [B,S,D]."""
+    b, s, d = x.shape
+    cdt = cfg.compute_dtype
+    proj = jnp.einsum("bsd,de->bse", x, params["w_in"].astype(cdt))
+    z, xin, bmat, cmat, dt = _split_in(proj, cfg)
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    conv_out, _ = conv1d_causal(conv_in, params["conv_w"].astype(cdt))
+    conv_out = jax.nn.silu(conv_out)
+    di, n = cfg.d_inner, cfg.ssm_state
+    xin, bmat, cmat = jnp.split(conv_out, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+
+    pad = (-s) % cfg.ssm_chunk
+    if pad:
+        xin = jnp.pad(xin, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    h = cfg.ssm_heads
+    y = ssd_chunked(
+        xin.reshape(b, s + pad, h, cfg.ssm_head_dim).astype(jnp.float32),
+        dt,
+        params["A_log"],
+        bmat.astype(jnp.float32),
+        cmat.astype(jnp.float32),
+        params["D"].astype(jnp.float32),
+        cfg.ssm_chunk,
+    )[:, :s]
+    y = y.reshape(b, s, di).astype(cdt)
+    y = rms_norm(y * jax.nn.silu(z), params["gate_norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(cdt))
+
+
+def init_mamba2_cache(batch: int, cfg, dtype=jnp.float32) -> dict:
+    di, n = cfg.d_inner, cfg.ssm_state
+    return {
+        "ssm_state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, n), jnp.float32),
+        "conv_cache": jnp.zeros((batch, cfg.conv_width - 1, di + 2 * n), dtype),
+    }
+
+
+def decode_mamba2(params: dict, x: jax.Array, cache: dict, cfg):
+    """One-token decode. x [B, 1, D] → (y [B, 1, D], new cache). O(1)/token."""
+    b = x.shape[0]
+    cdt = cfg.compute_dtype
+    proj = jnp.einsum("bsd,de->bse", x, params["w_in"].astype(cdt))
+    z, xin, bmat, cmat, dt = _split_in(proj, cfg)
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    conv_out, conv_cache = conv1d_causal(
+        conv_in, params["conv_w"].astype(cdt), cache["conv_cache"]
+    )
+    conv_out = jax.nn.silu(conv_out)
+    di, n = cfg.d_inner, cfg.ssm_state
+    xin, bmat, cmat = jnp.split(conv_out, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    h, p = cfg.ssm_heads, cfg.ssm_head_dim
+
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    lam = jnp.exp(dt[:, 0, :] * a[None, :])  # [B, H]
+    xh = xin[:, 0].reshape(b, h, p).astype(jnp.float32)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt[:, 0, :], xh, bmat[:, 0].astype(jnp.float32))
+    state = cache["ssm_state"] * lam[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0].astype(jnp.float32), state)
+    y = y + xh * params["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, di).astype(cdt)
+    y = rms_norm(y * jax.nn.silu(z), params["gate_norm"], cfg.norm_eps)
+    y = jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(cdt))
+    return y, {"ssm_state": state, "conv_cache": conv_cache}

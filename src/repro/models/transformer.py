@@ -1,0 +1,535 @@
+"""Decoder LM composer: pattern-of-(mixer, ffn) blocks scanned with remat.
+
+One model class covers every assigned non-encdec architecture — dense GQA
+(deepseek/qwen2/yi/qwen3/phi3v), MoE (qwen3-moe, llama4), SSM (mamba2),
+hybrid (recurrentgemma) — by composing the mixer/ffn sublayers declared in
+`ModelConfig.pattern`. Layers are stacked per pattern position and scanned
+(`lax.scan`) over blocks; heterogeneous stacks stay compile-compact.
+
+Attention runs through `repro.core.flash_attention` (FLASH-D by default) for
+training/prefill and `repro.core.decode_attention` (FLASH-D split-K merge)
+for serving. Sharding constraints are logical (`repro.distributed.sharding`)
+and inert outside a mesh context.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention import MaskSpec, decode_attention, flash_attention
+from repro.distributed.sharding import shard
+from repro.models import mamba2 as m2
+from repro.models import moe as moe_mod
+from repro.models import rglru as rg
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    dense_init,
+    embed_lookup,
+    logits_from_hidden,
+    rms_norm,
+    apply_rope,
+)
+
+__all__ = [
+    "init_lm",
+    "apply_lm",
+    "lm_loss",
+    "init_decode_cache",
+    "decode_step_lm",
+    "prefill_lm",
+]
+
+_AUX_KEYS = ("moe_aux_loss", "moe_z_loss", "moe_dropped")
+
+
+# ---------------------------------------------------------------------------
+# sublayer init
+# ---------------------------------------------------------------------------
+
+def _init_attn(key, cfg: ModelConfig) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim_
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    dt = cfg.master_dtype
+    p = {
+        "wq": dense_init(ks[0], (d, hq * hd), dtype=dt),
+        "wk": dense_init(ks[1], (d, hkv * hd), dtype=dt),
+        "wv": dense_init(ks[2], (d, hkv * hd), dtype=dt),
+        "wo": dense_init(ks[3], (hq * hd, d), dtype=dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), dt)
+        p["bk"] = jnp.zeros((hkv * hd,), dt)
+        p["bv"] = jnp.zeros((hkv * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dt)
+        p["k_norm"] = jnp.zeros((hd,), dt)
+    return p
+
+
+def _init_swiglu(key, cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = cfg.master_dtype
+    return {
+        "wg": dense_init(ks[0], (d, f), dtype=dt),
+        "wu": dense_init(ks[1], (d, f), dtype=dt),
+        "wd": dense_init(ks[2], (f, d), dtype=dt),
+    }
+
+
+_MIXER_INIT = {
+    "attn": _init_attn,
+    "attn_bidir": _init_attn,
+    "attn_local": _init_attn,
+    "attn_chunked": _init_attn,
+    "attn_nope": _init_attn,
+    "ssm": m2.init_mamba2,
+    "rglru": rg.init_rglru,
+}
+_FFN_INIT = {"swiglu": _init_swiglu, "moe": moe_mod.init_moe}
+
+
+def _init_block(key, cfg: ModelConfig, spec) -> dict:
+    mixer, ffn = spec
+    dt = cfg.master_dtype
+    p: dict = {"norm1": jnp.zeros((cfg.d_model,), dt)}
+    p["mixer"] = _MIXER_INIT[mixer](jax.random.fold_in(key, 1), cfg)
+    if ffn != "none":
+        p["norm2"] = jnp.zeros((cfg.d_model,), dt)
+        p["ffn"] = _FFN_INIT[ffn](jax.random.fold_in(key, 2), cfg)
+    return p
+
+
+def init_lm(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    dt = cfg.master_dtype
+    params: dict = {
+        "embed": dense_init(ks[0], (cfg.padded_vocab, cfg.d_model), scale=0.02, dtype=dt),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[1], (cfg.d_model, cfg.padded_vocab), dtype=dt)
+    if cfg.frontend == "vision":
+        params["patch_proj"] = dense_init(ks[2], (cfg.d_model, cfg.d_model), dtype=dt)
+
+    def stack_blocks(base_key, n, pattern):
+        per_block = []
+        for i in range(n):
+            bk = jax.random.fold_in(base_key, i)
+            per_block.append(
+                {f"pos{j}": _init_block(jax.random.fold_in(bk, j), cfg, spec)
+                 for j, spec in enumerate(pattern)}
+            )
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *per_block)
+
+    if cfg.n_blocks > 0:
+        params["blocks"] = stack_blocks(ks[3], cfg.n_blocks, cfg.pattern)
+    if cfg.remainder:
+        params["rem_blocks"] = stack_blocks(ks[4], 1, cfg.remainder)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# sublayer apply (full sequence)
+# ---------------------------------------------------------------------------
+
+def _attn_mask(cfg: ModelConfig, kind: str) -> MaskSpec:
+    if kind == "attn_bidir":
+        return MaskSpec("full")
+    if kind == "attn_local":
+        return MaskSpec("local", window=cfg.attn_window)
+    if kind == "attn_chunked":
+        return MaskSpec("chunked", chunk=cfg.attn_chunk)
+    return MaskSpec("causal")
+
+
+def _qkv(p, x, cfg, kind, positions, kv_x=None):
+    cdt = cfg.compute_dtype
+    hd = cfg.head_dim_
+    b, s, _ = x.shape
+    src = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(cdt))
+    k = jnp.einsum("bsd,dh->bsh", src, p["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dh->bsh", src, p["wv"].astype(cdt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cdt)
+        k = k + p["bk"].astype(cdt)
+        v = v + p["bv"].astype(cdt)
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, src.shape[1], cfg.n_kv_heads, hd)
+    v = v.reshape(b, src.shape[1], cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if kind not in ("attn_nope", "cross"):
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions if kv_x is None else jnp.arange(src.shape[1]), cfg.rope_theta)
+    return q, k, v
+
+
+def _apply_attn(p, x, cfg: ModelConfig, kind: str, positions, kv_x=None):
+    q, k, v = _qkv(p, x, cfg, kind, positions, kv_x)
+    q, k, v = shard(q, "heads"), shard(k, "heads"), shard(v, "heads")
+    mask = MaskSpec("full") if kind == "cross" else _attn_mask(cfg, kind)
+    o = flash_attention(
+        q, k, v,
+        mask=mask,
+        impl=cfg.attn_impl,
+        block_q=cfg.attn_block_q,
+        block_k=cfg.attn_block_k,
+        skip=cfg.attn_skip,
+    )
+    o = shard(o, "heads")
+    b, s = x.shape[:2]
+    o = o.reshape(b, s, cfg.n_heads * cfg.head_dim_)
+    return jnp.einsum("bsh,hd->bsd", o, p["wo"].astype(cfg.compute_dtype))
+
+
+def _apply_swiglu(p, x, cfg: ModelConfig):
+    cdt = cfg.compute_dtype
+    g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(cdt))
+    u = jnp.einsum("bsd,df->bsf", x, p["wu"].astype(cdt))
+    h = shard(jax.nn.silu(g) * u, "ff")
+    return jnp.einsum("bsf,fd->bsd", h, p["wd"].astype(cdt))
+
+
+def _apply_block(bp: dict, h, cfg: ModelConfig, spec, positions, kv_x=None):
+    """One (mixer, ffn) block with pre-norms and residuals. Returns (h, aux)."""
+    mixer, ffn = spec
+    aux = {k: jnp.float32(0.0) for k in _AUX_KEYS}
+    x = rms_norm(h, bp["norm1"], cfg.norm_eps)
+    if mixer.startswith("attn") or mixer == "cross":
+        y = _apply_attn(bp["mixer"], x, cfg, mixer, positions, kv_x)
+    elif mixer == "ssm":
+        y = m2.apply_mamba2(bp["mixer"], x, cfg)
+    elif mixer == "rglru":
+        y = rg.apply_rglru(bp["mixer"], x, cfg)
+    else:
+        raise ValueError(mixer)
+    y = _shard_out(y)
+    h = shard(h + y, "residual")
+    if ffn != "none":
+        x = rms_norm(h, bp["norm2"], cfg.norm_eps)
+        if ffn == "swiglu":
+            y = _apply_swiglu(bp["ffn"], x, cfg)
+        else:
+            y, aux = moe_mod.apply_moe(bp["ffn"], x, cfg)
+            aux = {**{k: jnp.float32(0.0) for k in _AUX_KEYS}, **aux}
+        y = _shard_out(y)
+        h = shard(h + y, "residual")
+    return h, aux
+
+
+def _shard_out(y):
+    """Reduce-scatter placement: constraining the row-parallel output to the
+    seq-sharded residual spec makes GSPMD lower its partial-sum psum as
+    reduce-scatter (wire = size) instead of all-reduce (wire = 2·size)."""
+    from repro.distributed.sharding import active_ctx
+
+    ctx = active_ctx()
+    if ctx is not None and getattr(ctx, "rs_outputs", False):
+        return shard(y, "residual")
+    return y
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+def _scan_pattern(params_key, params, h, cfg, pattern, positions, kv_x=None):
+    """Scan stacked blocks of a repeating pattern. Returns (h, aux_sums)."""
+
+    def body(carry, block_params):
+        h, aux_acc = carry
+        for j, spec in enumerate(pattern):
+            h, aux = _apply_block(block_params[f"pos{j}"], h, cfg, spec, positions, kv_x)
+            aux_acc = {k: aux_acc[k] + aux[k] for k in _AUX_KEYS}
+        return (h, aux_acc), None
+
+    body = _remat(body, cfg)
+    init_aux = {k: jnp.float32(0.0) for k in _AUX_KEYS}
+    stacked = params[params_key]
+    if not cfg.scan_layers:
+        carry = (h, init_aux)
+        nb = jax.tree.leaves(stacked)[0].shape[0]
+        for i in range(nb):
+            bp = jax.tree.map(lambda x: x[i], stacked)
+            carry, _ = body(carry, bp)
+        return carry
+    (h, aux), _ = jax.lax.scan(body, (h, init_aux), stacked)
+    return h, aux
+
+
+def _embed_inputs(params, batch: Dict, cfg: ModelConfig):
+    """Token (+ modality-stub) embedding. Returns (h, positions)."""
+    tokens = batch["tokens"]
+    h = embed_lookup(params["embed"], tokens, cfg.compute_dtype)
+    if cfg.frontend == "vision" and "patch_embeds" in batch:
+        patches = jnp.einsum(
+            "bnd,de->bne",
+            batch["patch_embeds"].astype(cfg.compute_dtype),
+            params["patch_proj"].astype(cfg.compute_dtype),
+        )
+        h = jnp.concatenate([patches, h], axis=1)
+    positions = jnp.arange(h.shape[1])
+    return h, positions
+
+
+def apply_lm(params: dict, batch: Dict, cfg: ModelConfig, *, last_only: bool = False):
+    """Forward pass → (logits [B, S_total, Vpad] f32, aux dict).
+
+    last_only=True returns logits for the final position only — the prefill
+    serving path (next-token sampling) that avoids materializing [B, S, V].
+    """
+    h, positions = _embed_inputs(params, batch, cfg)
+    h = shard(h, "residual")
+    aux = {k: jnp.float32(0.0) for k in _AUX_KEYS}
+    if cfg.n_blocks > 0:
+        h, aux1 = _scan_pattern("blocks", params, h, cfg, cfg.pattern, positions)
+        aux = {k: aux[k] + aux1[k] for k in _AUX_KEYS}
+    if cfg.remainder:
+        h, aux2 = _scan_pattern("rem_blocks", params, h, cfg, cfg.remainder, positions)
+        aux = {k: aux[k] + aux2[k] for k in _AUX_KEYS}
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if last_only:
+        h = h[:, -1:]
+    head = params["lm_head"] if not cfg.tie_embeddings else params["embed"].T
+    logits = logits_from_hidden(h, head, cfg.vocab_size)
+    return shard(logits, "logits"), aux
+
+
+def lm_loss(params: dict, batch: Dict, cfg: ModelConfig):
+    """Causal-LM cross entropy (+ MoE aux). labels == -1 are masked."""
+    logits, aux = apply_lm(params, batch, cfg)
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:  # modality prefix (vision stub)
+        logits = logits[:, logits.shape[1] - labels.shape[1]:]
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    ce = jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    loss = ce + aux["moe_aux_loss"] + aux["moe_z_loss"]
+    metrics = {"ce": ce, **aux}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# serving: per-layer caches + one-token decode
+# ---------------------------------------------------------------------------
+
+def _layer_cache(spec, batch: int, max_len: int, cfg: ModelConfig):
+    mixer, _ = spec
+    hd = cfg.head_dim_
+    if mixer.startswith("attn"):
+        shape = (batch, max_len, cfg.n_kv_heads, hd)
+        return {
+            "k": jnp.zeros(shape, cfg.compute_dtype),
+            "v": jnp.zeros(shape, cfg.compute_dtype),
+        }
+    if mixer == "ssm":
+        return m2.init_mamba2_cache(batch, cfg, cfg.compute_dtype)
+    if mixer == "rglru":
+        return rg.init_rglru_cache(batch, cfg, cfg.compute_dtype)
+    raise ValueError(mixer)
+
+
+def init_decode_cache(batch: int, max_len: int, cfg: ModelConfig) -> dict:
+    """Stacked per-block caches matching the params tree structure.
+
+    Local/chunked attention layers allocate only a window-sized ring region
+    (window or chunk length), which is what makes long_500k serveable for
+    recurrentgemma/llama4 (DESIGN.md §5).
+    """
+
+    def cache_len_for(spec):
+        mixer, _ = spec
+        if mixer == "attn_local" and cfg.attn_window:
+            return min(max_len, cfg.attn_window)
+        if mixer == "attn_chunked" and cfg.attn_chunk:
+            return min(max_len, cfg.attn_chunk)
+        return max_len
+
+    cache: dict = {}
+    if cfg.n_blocks > 0:
+        per = {
+            f"pos{j}": _layer_cache(spec, batch, cache_len_for(spec), cfg)
+            for j, spec in enumerate(cfg.pattern)
+        }
+        cache["blocks"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_blocks,) + x.shape), per
+        )
+    if cfg.remainder:
+        per = {
+            f"pos{j}": _layer_cache(spec, batch, cache_len_for(spec), cfg)
+            for j, spec in enumerate(cfg.remainder)
+        }
+        cache["rem_blocks"] = jax.tree.map(lambda x: x[None], per)
+    return cache
+
+
+def _decode_attn(p, x, cfg: ModelConfig, kind: str, cache, pos):
+    """One-token attention against the cache. pos: [B] absolute position."""
+    b = x.shape[0]
+    hd = cfg.head_dim_
+    cdt = cfg.compute_dtype
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(cdt))
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"].astype(cdt))
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"].astype(cdt), k + p["bk"].astype(cdt), v + p["bv"].astype(cdt)
+    q = q.reshape(b, 1, cfg.n_heads, hd)
+    k = k.reshape(b, 1, cfg.n_kv_heads, hd)
+    v = v.reshape(b, 1, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if kind != "attn_nope":
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None], cfg.rope_theta)
+
+    max_len = cache["k"].shape[1]
+    write_idx = pos % max_len  # ring buffer (exact for local/chunked windows)
+    bidx = jnp.arange(b)
+    k_cache = cache["k"].at[bidx, write_idx].set(k[:, 0])
+    v_cache = cache["v"].at[bidx, write_idx].set(v[:, 0])
+    k_cache = shard(k_cache, "kv_cache")
+    v_cache = shard(v_cache, "kv_cache")
+
+    # Ring-buffer semantics: local caches hold exactly the last `window`
+    # positions (all slots valid once full); chunked caches map position
+    # p → slot p % chunk, so valid slots are 0..p%chunk — no extra masks.
+    if kind == "attn_local":
+        eff_len = jnp.minimum(pos + 1, max_len)
+    elif kind == "attn_chunked":
+        eff_len = write_idx + 1
+    else:
+        eff_len = pos + 1
+    o = decode_attention(q, k_cache, v_cache, eff_len)
+    o = o.reshape(b, 1, cfg.n_heads * hd)
+    y = jnp.einsum("bsh,hd->bsd", o, p["wo"].astype(cdt))
+    return y, {"k": k_cache, "v": v_cache}
+
+
+def _decode_block(bp, h, cfg, spec, cache, pos):
+    mixer, ffn = spec
+    x = rms_norm(h, bp["norm1"], cfg.norm_eps)
+    if mixer.startswith("attn"):
+        y, new_cache = _decode_attn(bp["mixer"], x, cfg, mixer, cache, pos)
+    elif mixer == "ssm":
+        y, new_cache = m2.decode_mamba2(bp["mixer"], x, cache, cfg)
+    elif mixer == "rglru":
+        y, new_cache = rg.decode_rglru(bp["mixer"], x, cache, cfg)
+    else:
+        raise ValueError(mixer)
+    h = h + y
+    if ffn != "none":
+        x = rms_norm(h, bp["norm2"], cfg.norm_eps)
+        if ffn == "swiglu":
+            y = _apply_swiglu(bp["ffn"], x, cfg)
+        else:
+            y, _ = moe_mod.apply_moe(bp["ffn"], x, cfg)
+        h = h + y
+    return h, new_cache
+
+
+def decode_step_lm(params: dict, cache: dict, token: jax.Array, pos: jax.Array, cfg: ModelConfig):
+    """One decode step. token [B], pos [B] → (logits [B, Vpad], new cache).
+
+    The layer loop is a `fori_loop` that CARRIES the stacked cache and
+    updates each layer's slice in place (`dynamic_update_index_in_dim`) —
+    passing caches through scan xs/ys would materialize input + output +
+    working copies (measured: 19 GiB temp vs ~0 on deepseek-7b decode_32k)
+    and defeat buffer donation.
+    """
+    h = embed_lookup(params["embed"], token[:, None], cfg.compute_dtype)
+
+    def block_step(bp, bc, h, pattern):
+        new_bc = {}
+        for j, spec in enumerate(pattern):
+            h, nc = _decode_block(bp[f"pos{j}"], h, cfg, spec, bc[f"pos{j}"], pos)
+            new_bc[f"pos{j}"] = nc
+        return h, new_bc
+
+    def run_group(key, pattern):
+        nonlocal h
+        stacked_p, stacked_c = params[key], cache[key]
+        nb = jax.tree.leaves(stacked_p)[0].shape[0]
+        if not cfg.scan_layers:
+            outs = []
+            for i in range(nb):
+                h, nc = block_step(
+                    jax.tree.map(lambda x: x[i], stacked_p),
+                    jax.tree.map(lambda x: x[i], stacked_c),
+                    h, pattern,
+                )
+                outs.append(nc)
+            return jax.tree.map(lambda *ys: jnp.stack(ys), *outs)
+
+        def body(i, carry):
+            h, cache_st = carry
+            bp = jax.tree.map(
+                lambda x: jax.lax.dynamic_index_in_dim(x, i, 0, keepdims=False),
+                stacked_p,
+            )
+            bc = jax.tree.map(
+                lambda x: jax.lax.dynamic_index_in_dim(x, i, 0, keepdims=False),
+                cache_st,
+            )
+            h, nc = block_step(bp, bc, h, pattern)
+            cache_st = jax.tree.map(
+                lambda c, n: jax.lax.dynamic_update_index_in_dim(c, n, i, 0),
+                cache_st, nc,
+            )
+            return (h, cache_st)
+
+        h, new_c = jax.lax.fori_loop(0, nb, body, (h, stacked_c))
+        return new_c
+
+    new_cache = {}
+    if cfg.n_blocks > 0:
+        new_cache["blocks"] = run_group("blocks", cfg.pattern)
+    if cfg.remainder:
+        new_cache["rem_blocks"] = run_group("rem_blocks", cfg.remainder)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    head = params["lm_head"] if not cfg.tie_embeddings else params["embed"].T
+    logits = logits_from_hidden(h, head, cfg.vocab_size)
+    return logits[:, 0], new_cache
+
+
+def prefill_lm(params: dict, tokens: jax.Array, cache: dict, cfg: ModelConfig):
+    """Prefill a decode cache by scanning `decode_step_lm` over the prompt.
+
+    Universal across mixer types (attention, SSM, RG-LRU) and exact: the
+    cache after prefill is bit-identical to incremental decoding. Returns
+    (logits of the LAST prompt token [B, Vpad], filled cache). Production
+    TPU serving would use the flash prefill kernel + batched cache writes;
+    this path favors exactness and works for every architecture (examples
+    and tests use it; dry-run decode shapes lower `decode_step_lm` itself).
+    """
+    b, s = tokens.shape
+
+    def body(carry, tok_pos):
+        cache, _ = carry
+        tok, p = tok_pos
+        logits, cache = decode_step_lm(params, cache, tok, jnp.full((b,), p), cfg)
+        return (cache, logits), None
+
+    positions = jnp.arange(s)
+    (cache, logits), _ = jax.lax.scan(
+        body,
+        (cache, jnp.zeros((b, cfg.padded_vocab), jnp.float32)),
+        (tokens.T, positions),
+    )
+    return logits, cache

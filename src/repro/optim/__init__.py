@@ -1,0 +1,8 @@
+from repro.optim.adamw import AdamWConfig, OptState, apply_updates, global_norm, init_opt
+from repro.optim.schedule import warmup_cosine
+from repro.optim.compress import CompressionConfig, compress_gradients
+
+__all__ = [
+    "AdamWConfig", "OptState", "apply_updates", "global_norm", "init_opt",
+    "warmup_cosine", "CompressionConfig", "compress_gradients",
+]

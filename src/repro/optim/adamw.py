@@ -1,0 +1,97 @@
+"""AdamW with decoupled weight decay + global-norm clipping, from scratch.
+
+Optimizer state is a pytree shaped like params (m, v), so it inherits the
+parameter sharding (FSDP shards optimizer state for free — ZeRO-3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "OptState", "init_opt", "apply_updates", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # names never decayed (norm scales, biases, per-channel gates)
+    no_decay_keywords: tuple = ("norm", "bias", "lam", "A_log", "D", "dt_bias")
+
+
+class OptState(NamedTuple):
+    m: dict
+    v: dict
+    step: jax.Array
+
+
+def init_opt(params, state_dtype=None) -> OptState:
+    """state_dtype='bfloat16' stores m/v at half width (math stays f32) —
+    the ZeRO-friendly option giant models (qwen3-moe-235b) need to fit a
+    256-chip pod; noted per cell in EXPERIMENTS.md."""
+    if state_dtype is None:
+        zeros = lambda p: jax.tree.map(jnp.zeros_like, p)
+    else:
+        dt = jnp.dtype(state_dtype)
+        zeros = lambda p: jax.tree.map(lambda x: jnp.zeros(x.shape, dt), p)
+    return OptState(m=zeros(params), v=zeros(params), step=jnp.int32(0))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def _decay_mask(params, cfg: AdamWConfig):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    mask = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        nd = any(k in name for k in cfg.no_decay_keywords) or leaf.ndim <= 1
+        mask.append(0.0 if nd else 1.0)
+    return jax.tree_util.tree_unflatten(treedef, mask)
+
+
+def apply_updates(
+    params,
+    grads,
+    opt: OptState,
+    cfg: AdamWConfig,
+    lr: Optional[jax.Array] = None,
+):
+    """One AdamW step. Returns (new_params, new_opt, metrics)."""
+    lr = cfg.lr if lr is None else lr
+    step = opt.step + 1
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    m_dt = jax.tree.leaves(opt.m)[0].dtype
+    new_m = jax.tree.map(
+        lambda m, g: (cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g).astype(m_dt),
+        opt.m, grads)
+    new_v = jax.tree.map(
+        lambda v, g: (cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g).astype(v.dtype),
+        opt.v, grads)
+    decay = _decay_mask(params, cfg)
+
+    def upd(p, m, v, d):
+        mhat = m.astype(jnp.float32) / b1c
+        vhat = v.astype(jnp.float32) / b2c
+        step_ = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * d * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step_).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, new_m, new_v, decay)
+    metrics = {"grad_norm": gnorm, "lr": jnp.float32(lr)}
+    return new_params, OptState(new_m, new_v, step), metrics

@@ -1,0 +1,3 @@
+from repro.runtime import checkpoint
+from repro.runtime.resilience import ElasticPlan, StragglerMonitor, plan_mesh, run_resilient
+__all__ = ["checkpoint", "ElasticPlan", "StragglerMonitor", "plan_mesh", "run_resilient"]

@@ -1,0 +1,154 @@
+"""Fault tolerance, straggler mitigation, elastic scaling.
+
+Three cooperating pieces, all exercised by tests:
+
+* `run_resilient` — the restart loop: train inside a supervisor that, on a
+  (simulated or real) failure, restores the latest checkpoint — including
+  the data-iterator step — and continues. Guarantees: loss curve is
+  identical to an uninterrupted run (bitwise, given deterministic data),
+  because all step-state lives in the checkpoint.
+
+* `StragglerMonitor` — per-step wall-time EWMA + robust z-score; flags
+  slow steps/pods and invokes a callback (in production: exclude the pod
+  from the next allocation / re-mesh; here: a recorded decision, so the
+  policy is unit-testable without real stragglers).
+
+* `ElasticPlan` — given a new device count, recompute the mesh shape and
+  produce (mesh, shardings) so a checkpoint written at one scale restores
+  at another (`repro.runtime.checkpoint.restore(..., shardings=...)`).
+  Policy: keep 'model' as large as TP divisibility allows, fold the rest
+  into 'data' (and 'pod' when >256 devices).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.runtime import checkpoint as ckpt
+
+__all__ = ["run_resilient", "StragglerMonitor", "ElasticPlan", "plan_mesh"]
+
+
+# ---------------------------------------------------------------------------
+# restart-driven fault tolerance
+# ---------------------------------------------------------------------------
+
+def run_resilient(
+    *,
+    ckpt_dir: str,
+    init_state_fn: Callable[[], object],
+    step_fn: Callable[[object, int], Tuple[object, Dict]],
+    total_steps: int,
+    ckpt_every: int = 50,
+    max_restarts: int = 10,
+    fail_at: Optional[Callable[[int], bool]] = None,
+) -> Tuple[object, List[Dict]]:
+    """Supervised training loop. `step_fn(state, data_step)` returns
+    (state, metrics). `fail_at(step)` raising simulates node failure."""
+    history: List[Dict] = []
+    restarts = 0
+    while True:
+        # (re)start: restore or init
+        last = ckpt.latest_step(ckpt_dir)
+        if last is not None:
+            template = init_state_fn()
+            state, extra = ckpt.restore(ckpt_dir, template, step=last)
+            step = int(extra["data_step"])
+        else:
+            state = init_state_fn()
+            step = 0
+        try:
+            while step < total_steps:
+                if fail_at is not None and fail_at(step):
+                    raise RuntimeError(f"simulated node failure at step {step}")
+                state, metrics = step_fn(state, step)
+                history.append({"step": step, **{k: float(v) for k, v in metrics.items()}})
+                step += 1
+                if step % ckpt_every == 0 or step == total_steps:
+                    ckpt.save(ckpt_dir, step, state, extra={"data_step": step})
+            return state, history
+        except RuntimeError:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            # truncate unpersisted history (those steps will be replayed)
+            persisted = ckpt.latest_step(ckpt_dir) or 0
+            history = [h for h in history if h["step"] < persisted]
+
+
+# ---------------------------------------------------------------------------
+# straggler mitigation
+# ---------------------------------------------------------------------------
+
+class StragglerMonitor:
+    """EWMA + MAD-based step-time anomaly detector with an action hook."""
+
+    def __init__(
+        self,
+        *,
+        threshold: float = 3.0,
+        warmup: int = 5,
+        ewma_alpha: float = 0.2,
+        on_straggler: Optional[Callable[[int, float, float], None]] = None,
+    ):
+        self.threshold = threshold
+        self.warmup = warmup
+        self.alpha = ewma_alpha
+        self.on_straggler = on_straggler
+        self.ewma: Optional[float] = None
+        self.deviations: List[float] = []
+        self.flagged: List[int] = []
+        self._n = 0
+        self._t0: Optional[float] = None
+
+    def start_step(self):
+        self._t0 = time.monotonic()
+
+    def end_step(self, step: int, elapsed: Optional[float] = None):
+        dt = elapsed if elapsed is not None else time.monotonic() - self._t0
+        self.observe(step, dt)
+
+    def observe(self, step: int, dt: float):
+        self._n += 1
+        if self.ewma is None:
+            self.ewma = dt
+            return
+        dev = abs(dt - self.ewma)
+        self.deviations.append(dev)
+        mad = float(np.median(self.deviations[-100:])) if self.deviations else 0.0
+        if self._n > self.warmup and mad > 0 and (dt - self.ewma) / (1.4826 * mad) > self.threshold:
+            self.flagged.append(step)
+            if self.on_straggler:
+                self.on_straggler(step, dt, self.ewma)
+        # EWMA updated with clipped sample so one straggler doesn't poison it
+        clipped = min(dt, self.ewma * 3)
+        self.ewma = (1 - self.alpha) * self.ewma + self.alpha * clipped
+
+
+# ---------------------------------------------------------------------------
+# elastic scaling
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+
+
+def plan_mesh(n_devices: int, *, prefer_model: int = 16, pod_size: int = 256) -> ElasticPlan:
+    """Largest power-of-two model axis ≤ prefer_model that divides n_devices;
+    remaining factor → data; >1 pod_size multiples get an explicit pod axis."""
+    model = prefer_model
+    while model > 1 and n_devices % model:
+        model //= 2
+    rest = n_devices // model
+    if n_devices > pod_size and rest % (n_devices // pod_size) == 0:
+        pods = n_devices // pod_size
+        data = rest // pods
+        return ElasticPlan((pods, data, model), ("pod", "data", "model"))
+    return ElasticPlan((rest, model), ("data", "model"))

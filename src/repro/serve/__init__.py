@@ -1,0 +1,2 @@
+from repro.serve.engine import Engine, ServeConfig, sample_token
+__all__ = ["Engine", "ServeConfig", "sample_token"]

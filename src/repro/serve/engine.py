@@ -1,0 +1,160 @@
+"""Batched serving engine: prefill → decode with per-sequence state.
+
+A deliberately small but real continuous-batching engine: requests join a
+fixed-width slot array; each slot carries its own cache region and length;
+finished slots are refilled from the queue. Decode steps are one jitted
+`decode_step` over the whole slot batch (the production pattern). Sampling:
+greedy / temperature / top-k.
+
+The caches come from the model API (`init_cache`) — attention layers hold
+KV rings, SSM/RG-LRU layers hold recurrent state — so the same engine
+serves every assigned architecture.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import ModelConfig, get_model
+from repro.models.transformer import prefill_lm
+
+__all__ = ["ServeConfig", "Engine", "sample_token"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 8
+    max_len: int = 256
+    temperature: float = 0.0  # 0 → greedy
+    top_k: int = 0
+    eos_id: int = -1  # <0: run to max_new_tokens
+    seed: int = 0
+
+
+def sample_token(logits: jax.Array, key, cfg: ServeConfig) -> jax.Array:
+    """logits [B, V] → token [B]."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / cfg.temperature
+    if cfg.top_k > 0:
+        kth = jax.lax.top_k(logits, cfg.top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+class Engine:
+    def __init__(self, params, model_cfg: ModelConfig, serve_cfg: ServeConfig):
+        self.params = params
+        self.mc = model_cfg
+        self.sc = serve_cfg
+        self.api = get_model(model_cfg)
+        self._decode = jax.jit(
+            lambda p, c, t, pos: self.api.decode_step(p, c, t, pos, model_cfg)
+        )
+        self._key = jax.random.PRNGKey(serve_cfg.seed)
+
+    # ---- single-prompt-batch generation (prefill + n decode steps) ----
+    def generate(
+        self, prompts: np.ndarray, max_new_tokens: int
+    ) -> np.ndarray:
+        """prompts [B, S_prompt] int32 (right-aligned, no padding support in
+        this minimal path) → generated tokens [B, max_new_tokens]."""
+        b, s = prompts.shape
+        cache = self.api.init_cache(b, self.sc.max_len, self.mc)
+        logits, cache = prefill_lm(
+            self.params, jnp.asarray(prompts, jnp.int32), cache, self.mc
+        )
+        out = []
+        pos = jnp.full((b,), s, jnp.int32)
+        self._key, k = jax.random.split(self._key)
+        tok = sample_token(logits, k, self.sc)
+        for i in range(max_new_tokens):
+            out.append(np.asarray(tok))
+            logits, cache = self._decode(self.params, cache, tok, pos)
+            pos = pos + 1
+            self._key, k = jax.random.split(self._key)
+            tok = sample_token(logits, k, self.sc)
+        return np.stack(out, axis=1)
+
+    # ---- continuous batching over a request queue ----
+    def serve(self, requests: List[np.ndarray], max_new_tokens: int) -> List[np.ndarray]:
+        """Each request: 1-D prompt array. Returns generated arrays, in order.
+
+        Slot-parallel: up to max_batch requests decode together; finished
+        slots immediately take the next queued request (its prefill runs as
+        a batch-1 prefill into that slot's cache region — kept simple here;
+        a production engine would chunk prefills into the decode batch).
+        """
+        results: List[Optional[np.ndarray]] = [None] * len(requests)
+        queue = list(enumerate(requests))
+        active: List[dict] = []
+        b = self.sc.max_batch
+        cache = self.api.init_cache(b, self.sc.max_len, self.mc)
+        tok = jnp.zeros((b,), jnp.int32)
+        pos = jnp.zeros((b,), jnp.int32)
+        slot_req = [-1] * b
+        slot_out: List[List[int]] = [[] for _ in range(b)]
+
+        def _write_slot(c, o, slot):
+            # caches are stacked [n_blocks, batch, ...]: batch is axis 1
+            return c.at[:, slot].set(o[:, 0])
+
+        def assign(slot: int):
+            """Prefill the next queued request into `slot`. The prefill's
+            sampled token is output token 0 (same as `generate`); requests
+            that complete immediately are finalized and the next is taken."""
+            nonlocal cache, tok, pos
+            while queue:
+                rid, prompt = queue.pop(0)
+                one_cache = self.api.init_cache(1, self.sc.max_len, self.mc)
+                logits, one_cache = prefill_lm(
+                    self.params, jnp.asarray(prompt[None], jnp.int32), one_cache, self.mc
+                )
+                self._key, k = jax.random.split(self._key)
+                t0 = int(sample_token(logits, k, self.sc)[0])
+                done = max_new_tokens <= 1 or (self.sc.eos_id >= 0 and t0 == self.sc.eos_id)
+                if done:
+                    results[rid] = np.asarray([t0], np.int32)
+                    continue
+                slot_req[slot] = rid
+                slot_out[slot] = [t0]
+                cache = jax.tree.map(lambda c, o: _write_slot(c, o, slot), cache, one_cache)
+                tok = tok.at[slot].set(t0)
+                pos = pos.at[slot].set(len(prompt))
+                return
+            slot_req[slot] = -1
+
+        for s in range(b):
+            assign(s)
+
+        while any(r >= 0 for r in slot_req):
+            logits, cache = self._decode(self.params, cache, tok, pos)
+            self._key, k = jax.random.split(self._key)
+            nxt = sample_token(logits, k, self.sc)
+            pos = pos + 1
+            refilled = []
+            for s in range(b):
+                rid = slot_req[s]
+                if rid < 0:
+                    continue
+                t = int(nxt[s])
+                slot_out[s].append(t)
+                done = len(slot_out[s]) >= max_new_tokens or (
+                    self.sc.eos_id >= 0 and t == self.sc.eos_id
+                )
+                if done:
+                    results[rid] = np.asarray(slot_out[s], np.int32)
+                    assign(s)  # sets tok[s]/pos[s] for the incoming request
+                    refilled.append(s)
+            # advance continuing slots to their sampled token; refilled slots
+            # keep the token/pos `assign` just installed (prefill output)
+            keep_assigned = tok
+            tok = nxt
+            for s in refilled:
+                tok = tok.at[s].set(keep_assigned[s])
+        return [r if r is not None else np.zeros((0,), np.int32) for r in results]

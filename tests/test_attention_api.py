@@ -1,0 +1,99 @@
+"""Public attention op: GQA batching, gradients, decode, PWL variant."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.attention import MaskSpec, decode_attention, flash_attention
+from repro.kernels.ref import attention_ref, decode_ref
+
+
+def _inputs(seed, b, sq, skv, hq, hkv, d, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (
+        jax.random.normal(ks[0], (b, sq, hq, d)).astype(dtype),
+        jax.random.normal(ks[1], (b, skv, hkv, d)).astype(dtype),
+        jax.random.normal(ks[2], (b, skv, hkv, d)).astype(dtype),
+    )
+
+
+@pytest.mark.parametrize("impl", ["flashd", "fa2", "naive", "flashd_pallas", "fa2_pallas"])
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2), (6, 1)])
+def test_impls_agree(impl, hq, hkv):
+    q, k, v = _inputs(0, 2, 24, 24, hq, hkv, 16)
+    o = flash_attention(q, k, v, mask=MaskSpec("causal"), impl=impl, block_q=8, block_k=8)
+    o_ref, _ = attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        mask=MaskSpec("causal"),
+    )
+    np.testing.assert_allclose(o, o_ref.transpose(0, 2, 1, 3), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("impl", ["flashd", "flashd_pallas"])
+def test_gradients_match_autodiff(impl):
+    q, k, v = _inputs(1, 2, 16, 16, 4, 2, 8)
+
+    def loss_impl(q, k, v):
+        o = flash_attention(q, k, v, mask=MaskSpec("causal"), impl=impl,
+                            block_q=8, block_k=8)
+        return jnp.sum(jnp.sin(o))
+
+    def loss_ref(q, k, v):
+        o, _ = attention_ref(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), mask=MaskSpec("causal"),
+        )
+        return jnp.sum(jnp.sin(o.transpose(0, 2, 1, 3)))
+
+    g1 = jax.grad(loss_impl, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_grad_under_jit_and_vmapped_batch():
+    q, k, v = _inputs(2, 3, 12, 12, 4, 4, 8)
+    f = jax.jit(jax.grad(lambda q: jnp.sum(
+        flash_attention(q, k, v, impl="flashd", block_q=4, block_k=4) ** 2
+    )))
+    g = f(q)
+    assert g.shape == q.shape and bool(jnp.all(jnp.isfinite(g)))
+
+
+@pytest.mark.parametrize("n_splits", [1, 4])
+def test_decode_attention_matches_ref(n_splits):
+    rng = np.random.default_rng(0)
+    b, s, hq, hkv, d = 3, 40, 8, 2, 16
+    q = jnp.asarray(rng.normal(size=(b, 1, hq, d)), jnp.float32)
+    kc = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+    cl = jnp.asarray([40, 13, 27], jnp.int32)
+    o = decode_attention(q, kc, vc, cl, n_splits=n_splits)
+    o_ref = decode_ref(
+        q[:, 0], kc.transpose(0, 2, 1, 3), vc.transpose(0, 2, 1, 3), cl
+    )
+    np.testing.assert_allclose(o[:, 0], o_ref, rtol=2e-5, atol=2e-5)
+
+
+def test_decode_equals_prefill_last_row():
+    """Decoding token t against cache == causal prefill row t."""
+    q, k, v = _inputs(3, 2, 9, 9, 4, 4, 8)
+    o_all = flash_attention(q, k, v, mask=MaskSpec("causal"), impl="flashd",
+                            block_q=4, block_k=4)
+    o_last = decode_attention(
+        q[:, -1:], k, v, jnp.full((2,), 9, jnp.int32)
+    )
+    np.testing.assert_allclose(o_last[:, 0], o_all[:, -1], rtol=2e-5, atol=2e-5)
+
+
+def test_pwl_sigmoid_close_to_exact():
+    from repro.core.pwl import pwl_ln, pwl_sigmoid
+
+    x = jnp.linspace(-6.0, 11.0, 4001)
+    assert float(jnp.max(jnp.abs(pwl_sigmoid(x) - jax.nn.sigmoid(x)))) < 0.05
+    w = jnp.linspace(0.05, 1.0, 1001)
+    assert float(jnp.max(jnp.abs(pwl_ln(w) - jnp.log(w)))) < 0.08
+    # saturation defaults outside the active region
+    assert float(pwl_sigmoid(jnp.float32(-6.5))) == 0.0
+    assert float(pwl_sigmoid(jnp.float32(11.5))) == 1.0

@@ -1,0 +1,160 @@
+"""Per-architecture smoke tests (assignment requirement): every assigned
+arch instantiates a REDUCED config, runs one forward + one train step on
+CPU, asserts output shapes and no NaNs; plus decode-vs-forward consistency.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import get_model
+from repro.train.train_step import TrainConfig, init_train_state, make_train_step
+
+
+def _smoke_batch(cfg, b=2, s=24, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)}
+    if cfg.is_encdec:
+        batch["frame_embeds"] = jnp.asarray(
+            rng.normal(size=(b, s, cfg.d_model)), jnp.bfloat16
+        )
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(b, cfg.frontend_tokens, cfg.d_model)), jnp.bfloat16
+        )
+        batch["tokens"] = batch["tokens"][:, : s - cfg.frontend_tokens]
+    batch["labels"] = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, batch["tokens"].shape), jnp.int32
+    )
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_arch_smoke_forward_and_shapes(arch):
+    cfg = configs.get_smoke_config(arch)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    batch = _smoke_batch(cfg)
+    logits, aux = api.apply(params, batch, cfg)
+    b, s = batch["tokens"].shape
+    s_total = logits.shape[1]
+    assert logits.shape == (b, s_total, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits[..., : cfg.vocab_size])))
+    # padded vocab slots are masked off
+    if cfg.padded_vocab > cfg.vocab_size:
+        assert float(jnp.max(logits[..., cfg.vocab_size:])) <= -1e29
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_arch_smoke_train_step(arch):
+    cfg = configs.get_smoke_config(arch)
+    tc = TrainConfig(warmup_steps=2, total_steps=10)
+    state = init_train_state(jax.random.PRNGKey(1), cfg, tc)
+    step = make_train_step(cfg, tc)
+    batch = _smoke_batch(cfg)
+    state, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    assert int(state.step) == 1
+    for leaf in jax.tree.leaves(state.params):
+        assert bool(jnp.all(jnp.isfinite(leaf))), "non-finite param after update"
+
+
+@pytest.mark.parametrize("arch", ["deepseek-7b", "qwen2-1.5b", "llama4-scout-17b-a16e",
+                                  "mamba2-2.7b", "recurrentgemma-9b", "qwen3-moe-235b-a22b"])
+def test_decode_matches_forward(arch):
+    """Token-by-token decode reproduces the full forward's next-token logits
+    (the serving-equivalence guarantee, incl. ring caches + SSM states)."""
+    cfg = configs.get_smoke_config(arch)
+    # capacity_factor high enough that no token drops: capacity-based MoE
+    # legitimately differs between joint (prefill) and per-token (decode)
+    # routing when tokens drop — the equivalence claim is for the no-drop
+    # regime (drops are a training-efficiency tradeoff, not a serving one)
+    cfg = dataclasses.replace(
+        cfg, dtype="float32", param_dtype="float32", capacity_factor=16.0
+    )
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(2), cfg)
+    b, s = 2, 16
+    rng = np.random.default_rng(3)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+
+    logits_full, _ = api.apply(params, {"tokens": tokens}, cfg)
+
+    cache = api.init_cache(b, s, cfg)
+    got = []
+    for i in range(s):
+        logit, cache = api.decode_step(
+            params, cache, tokens[:, i], jnp.full((b,), i, jnp.int32), cfg
+        )
+        got.append(logit)
+    got = jnp.stack(got, axis=1)
+    np.testing.assert_allclose(
+        got[..., : cfg.vocab_size],
+        logits_full[..., : cfg.vocab_size],
+        rtol=2e-3, atol=2e-3,
+    )
+
+
+def test_encdec_decode_consistency():
+    cfg = configs.get_smoke_config("seamless-m4t-medium")
+    cfg = dataclasses.replace(cfg, dtype="float32", param_dtype="float32")
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(4), cfg)
+    b, s = 2, 12
+    rng = np.random.default_rng(5)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    frames = jnp.asarray(rng.normal(size=(b, s, cfg.d_model)), jnp.float32)
+    batch = {"tokens": tokens, "frame_embeds": frames}
+    logits_full, _ = api.apply(params, batch, cfg)
+
+    from repro.models.encdec import encode, fill_cross_cache, init_encdec_cache
+
+    memory = encode(params, frames, cfg)
+    cache = init_encdec_cache(b, s, s, cfg)
+    cache = fill_cross_cache(params, memory, cache, cfg)
+    got = []
+    for i in range(s):
+        logit, cache = api.decode_step(
+            params, cache, tokens[:, i], jnp.full((b,), i, jnp.int32), cfg
+        )
+        got.append(logit)
+    got = jnp.stack(got, axis=1)
+    np.testing.assert_allclose(
+        got[..., : cfg.vocab_size], logits_full[..., : cfg.vocab_size],
+        rtol=2e-3, atol=2e-3,
+    )
+
+
+def test_flashd_vs_fa2_model_equivalence():
+    """Whole-model logits identical whichever kernel family runs attention —
+    the system-level statement of the paper's equivalence claim."""
+    cfg = configs.get_smoke_config("deepseek-7b")
+    cfg32 = dataclasses.replace(cfg, dtype="float32", param_dtype="float32")
+    api = get_model(cfg32)
+    params = api.init(jax.random.PRNGKey(6), cfg32)
+    batch = _smoke_batch(cfg32)
+    outs = {}
+    for impl in ("flashd", "fa2", "naive", "flashd_pallas"):
+        c = dataclasses.replace(cfg32, attn_impl=impl)
+        outs[impl], _ = get_model(c).apply(params, batch, c)
+    for impl in ("fa2", "naive", "flashd_pallas"):
+        np.testing.assert_allclose(
+            outs["flashd"][..., : cfg.vocab_size],
+            outs[impl][..., : cfg.vocab_size],
+            rtol=1e-4, atol=1e-4,
+        )
+
+
+def test_param_count_analytic_close_to_actual():
+    for arch in ["deepseek-7b", "qwen3-moe-235b-a22b", "mamba2-2.7b"]:
+        cfg = configs.get_smoke_config(arch)
+        api = get_model(cfg)
+        params = api.init(jax.random.PRNGKey(0), cfg)
+        actual = sum(x.size for x in jax.tree.leaves(params))
+        analytic = cfg.param_count()
+        assert abs(actual - analytic) / actual < 0.25, (arch, actual, analytic)
