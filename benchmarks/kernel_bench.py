@@ -10,11 +10,21 @@ measured here:
      out of scope for this container and come from the roofline instead);
   2. compiled HLO flops/bytes of each impl at equal shapes (XLA's view of
      the datapath — FLASH-D must not add work);
-  3. skip-mode wall-time effect at a concentration-heavy input.
+  3. skip-mode wall-time effect at a concentration-heavy input;
+  4. the decode fast path: fused vs unfused split-K kernel and the jitted
+     scan engine vs the per-token host loop (the seed serving path).
+
+Besides the CSV `report` contract, this module emits machine-readable
+``BENCH_prefill.json`` / ``BENCH_decode.json`` (into $BENCH_DIR, default
+cwd) so the perf trajectory is tracked across PRs. Set BENCH_SMOKE=1 for
+CI-sized shapes.
 """
 
 from __future__ import annotations
 
+import dataclasses
+import json
+import os
 import time
 
 import jax
@@ -34,11 +44,26 @@ def _bench(fn, *args, iters=5):
     return best * 1e6
 
 
+def _emit_json(filename: str, payload: dict) -> None:
+    path = os.path.join(os.environ.get("BENCH_DIR", "."), filename)
+    payload = {
+        "backend": jax.devices()[0].platform,
+        "smoke": bool(os.environ.get("BENCH_SMOKE")),
+        **payload,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+
+
 def run(report):
+    smoke = bool(os.environ.get("BENCH_SMOKE"))
+    prefill_rows = []
     shapes = [
         ("train-ish", 2, 512, 8, 64),
         ("prefill-ish", 1, 2048, 4, 64),
     ]
+    if smoke:
+        shapes = [("train-ish", 1, 128, 2, 32)]
     for name, b, s, h, d in shapes:
         ks = jax.random.split(jax.random.PRNGKey(0), 3)
         q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
@@ -60,6 +85,11 @@ def run(report):
                 ca = ca[0]
             results[impl] = (us, float(ca.get("flops", 0)))
             report(f"kernel_{name}_{impl}", us, f"hlo_flops={results[impl][1]:.3e}")
+            prefill_rows.append({
+                "name": name, "impl": impl, "batch": b, "seq": s,
+                "heads": h, "head_dim": d, "us_per_call": us,
+                "hlo_flops": results[impl][1],
+            })
         ratio = results["flashd"][0] / results["fa2"][0]
         report(
             f"kernel_{name}_flashd_vs_fa2", ratio,
@@ -85,3 +115,94 @@ def run(report):
         report(f"kernel_skip_{'on' if skip else 'off'}", us,
                "jnp path computes the predicate only; true FLOP skip is the "
                "Pallas @pl.when path (TPU)")
+
+    _emit_json("BENCH_prefill.json", {"rows": prefill_rows})
+    _emit_json("BENCH_decode.json", _bench_decode(report, smoke))
+
+
+def _bench_decode(report, smoke: bool) -> dict:
+    """Decode fast path: fused vs unfused split-K kernel, and the jitted
+    scan engine vs the seed-style per-token host loop."""
+    from repro.kernels.flashd_decode import flashd_decode_pallas
+
+    out: dict = {"kernel": [], "engine": {}}
+
+    # --- kernel: fused (in-VMEM merge) vs unfused (HBM partials + host merge)
+    b, hq, hkv, s, d = (1, 2, 1, 64, 16) if smoke else (2, 8, 2, 512, 64)
+    n_splits = 2 if smoke else 8
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(b, hq, d)), jnp.float32)
+    kc = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    cl = jnp.full((b,), s, jnp.int32)
+    for fused in (True, False):
+        f = jax.jit(
+            lambda q, k, v, c, fused=fused: flashd_decode_pallas(
+                q, k, v, c, n_splits=n_splits, fused=fused,
+                interpret=jax.devices()[0].platform != "tpu",
+            )
+        )
+        us = _bench(f, q, kc, vc, cl)
+        tag = "fused" if fused else "unfused"
+        report(f"decode_kernel_{tag}", us, f"b={b} s={s} splits={n_splits}")
+        out["kernel"].append({
+            "variant": tag, "batch": b, "heads": hq, "kv_heads": hkv,
+            "cache_len": s, "head_dim": d, "n_splits": n_splits,
+            "us_per_call": us,
+        })
+
+    # --- engine: jitted scan loop vs per-token host loop (the seed path)
+    from repro.configs import paper_llama
+    from repro.models import get_model
+    from repro.models.transformer import prefill_lm
+    from repro.serve import Engine, ServeConfig, sample_token
+
+    cfg = dataclasses.replace(
+        paper_llama.CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, head_dim=16, vocab_size=128, vocab_pad_multiple=64,
+    )
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    bsz, n_new = (2, 8) if smoke else (4, 32)
+    sc = ServeConfig(max_len=64, temperature=0.0)
+    eng = Engine(params, cfg, sc)
+    prompts = np.random.default_rng(1).integers(
+        0, cfg.vocab_size, (bsz, 8)
+    ).astype(np.int32)
+
+    scan_s = _bench(lambda: eng.generate(prompts, n_new), iters=3) * 1e-6
+
+    prefill_j = jax.jit(lambda p, t, c: prefill_lm(p, t, c, cfg))
+
+    def legacy_generate():
+        """The seed engine's loop: one dispatch + one blocking np.asarray
+        host sync per token."""
+        cache = api.init_cache(bsz, sc.max_len, cfg)
+        logits, cache = prefill_j(params, jnp.asarray(prompts, jnp.int32), cache)
+        pos = jnp.full((bsz,), prompts.shape[1], jnp.int32)
+        key = jax.random.PRNGKey(0)
+        tok = sample_token(logits, key, sc)
+        outs = []
+        for _ in range(n_new):
+            outs.append(np.asarray(tok))  # per-token host sync
+            logits, cache = eng._decode(params, cache, tok, pos)
+            pos = pos + 1
+            key, k = jax.random.split(key)
+            tok = sample_token(logits, k, sc)
+        return np.stack(outs, axis=1)
+
+    loop_s = _bench(legacy_generate, iters=3) * 1e-6
+
+    tok_scan = bsz * n_new / scan_s
+    tok_loop = bsz * n_new / loop_s
+    report("decode_engine_scan_tok_per_s", tok_scan, f"b={bsz} T={n_new}")
+    report("decode_engine_loop_tok_per_s", tok_loop, "seed per-token path")
+    report("decode_engine_speedup", tok_scan / tok_loop,
+           "jitted scan vs per-token host loop (>1 is a win)")
+    out["engine"] = {
+        "batch": bsz, "new_tokens": n_new,
+        "tokens_per_sec_scan": tok_scan,
+        "tokens_per_sec_seed_loop": tok_loop,
+        "speedup": tok_scan / tok_loop,
+    }
+    return out

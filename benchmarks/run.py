@@ -12,7 +12,7 @@ import io
 import sys
 
 
-def main() -> None:
+def main(argv=None) -> None:
     out = csv.writer(sys.stdout)
     out.writerow(["name", "us_per_call", "derived"])
 
@@ -22,8 +22,17 @@ def main() -> None:
 
     from benchmarks import fig45_opcounts, kernel_bench, roofline_bench, table1_skiprate
 
-    for mod in (fig45_opcounts, kernel_bench, table1_skiprate, roofline_bench):
-        mod.run(report)
+    mods = {
+        "fig45_opcounts": fig45_opcounts,
+        "kernel_bench": kernel_bench,
+        "table1_skiprate": table1_skiprate,
+        "roofline_bench": roofline_bench,
+    }
+    names = (argv if argv is not None else sys.argv[1:]) or list(mods)
+    for name in names:
+        if name not in mods:
+            raise SystemExit(f"unknown benchmark {name!r}; options: {list(mods)}")
+        mods[name].run(report)
 
 
 if __name__ == "__main__":

@@ -141,17 +141,28 @@ def flash_attention(
     mask: MaskSpec = MaskSpec("causal"),
     scale: Optional[float] = None,
     impl: str = "flashd",
-    block_q: int = 512,
-    block_k: int = 512,
+    block_q: Optional[int] = None,
+    block_k: Optional[int] = None,
     skip: bool = False,
 ) -> jax.Array:
-    """Multi-head GQA attention. q [B,Sq,Hq,d]; k,v [B,Skv,Hkv,·]."""
+    """Multi-head GQA attention. q [B,Sq,Hq,d]; k,v [B,Skv,Hkv,·].
+
+    block_q / block_k = None resolves the tiling from the VMEM-budget
+    heuristics in repro.kernels.tuning (shape-static, so jit-stable)."""
     if q.ndim != 4 or k.ndim != 4 or v.ndim != 4:
         raise ValueError("expected [batch, seq, heads, dim] operands")
     if q.shape[2] % k.shape[2] != 0:
         raise ValueError(f"Hq={q.shape[2]} not a multiple of Hkv={k.shape[2]}")
     if scale is None:
         scale = float(1.0 / (q.shape[-1] ** 0.5))
+    if block_q is None or block_k is None:
+        from repro.kernels.tuning import choose_prefill_blocks  # lazy: no cycle
+
+        tiling = choose_prefill_blocks(
+            q.shape[1], k.shape[1], q.shape[-1], v.shape[-1]
+        )
+        block_q = tiling.block_q if block_q is None else block_q
+        block_k = tiling.block_k if block_k is None else block_k
     block_q = min(block_q, max(q.shape[1], 1))
     block_k = min(block_k, max(k.shape[1], 1))
     return _attention_core(q, k, v, mask, scale, impl, block_q, block_k, skip)
@@ -166,7 +177,7 @@ def decode_attention(
     scale: Optional[float] = None,
     window: int = 0,  # >0: sliding-window (local) attention
     chunk: int = 0,  # >0: llama4-style chunked attention
-    n_splits: int = 1,  # split-K partitions, merged with FLASH-D blend
+    n_splits: Optional[int] = None,  # split-K partitions; None → tuned
 ) -> jax.Array:
     """Single-step decode against a (possibly sharded) KV cache.
 
@@ -176,6 +187,9 @@ def decode_attention(
     partials are merged with the FLASH-D sigmoid blend (DESIGN.md §2.2) —
     one FMA per merge instead of FA2's rescale/divide. The same merge
     combines *cross-device* partials under context-parallel sharding.
+    n_splits=None asks repro.kernels.tuning for a split count; the cache
+    is zero-padded up to a multiple of it (padded slots are masked), the
+    same convention as the pallas kernel.
     """
     b, _, hq, d = q.shape
     s_max = k_cache.shape[1]
@@ -183,6 +197,13 @@ def decode_attention(
     g = hq // hkv
     if scale is None:
         scale = float(1.0 / (d ** 0.5))
+    if n_splits is None:
+        from repro.kernels.tuning import choose_decode_split  # lazy: no cycle
+
+        n_splits = choose_decode_split(
+            s_max, d, v_cache.shape[-1], group=g, window=window, chunk=chunk
+        ).n_splits
+    n_splits = max(1, min(n_splits, s_max))
     cache_len = jnp.asarray(cache_len)
     if cache_len.ndim == 0:
         cache_len = jnp.broadcast_to(cache_len, (b,))
@@ -209,9 +230,14 @@ def decode_attention(
         p = jnp.exp(s - lam[..., None])
         o = jnp.einsum("bhgs,bshd->bhgd", p, vf)
     else:
-        split = s_max // n_splits
+        dv = v_cache.shape[-1]
+        pad = (-s_max) % n_splits  # padded slots score NEG_INF ⇒ dead
+        if pad:
+            s = jnp.pad(s, ((0, 0), (0, 0), (0, 0), (0, pad)), constant_values=NEG_INF)
+            vf = jnp.pad(vf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        split = (s_max + pad) // n_splits
         sp = s.reshape(b, hkv, g, n_splits, split).transpose(3, 0, 1, 2, 4)
-        vp = vf.reshape(b, n_splits, split, hkv, d).transpose(1, 0, 2, 3, 4)
+        vp = vf.reshape(b, n_splits, split, hkv, dv).transpose(1, 0, 2, 3, 4)
         m_p = jnp.max(sp, axis=-1)
         m_safe = jnp.maximum(m_p, NEG_INF / 2)
         p = jnp.exp(sp - m_safe[..., None])

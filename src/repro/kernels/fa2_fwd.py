@@ -119,8 +119,8 @@ def fa2_fwd_pallas(
     *,
     mask: MaskSpec = MaskSpec("causal"),
     scale: Optional[float] = None,
-    block_q: int = 512,
-    block_k: int = 512,
+    block_q: Optional[int] = None,
+    block_k: Optional[int] = None,
     interpret: bool = False,
 ):
     """Returns (o [B, Hq, Sq, dv], Λ [B, Hq, Sq] f32). Same contract as
@@ -130,6 +130,12 @@ def fa2_fwd_pallas(
     if scale is None:
         scale = float(1.0 / (d ** 0.5))
     group = hq // hkv
+    if block_q is None or block_k is None:
+        from repro.kernels.tuning import choose_prefill_blocks  # lazy: no cycle
+
+        tiling = choose_prefill_blocks(sq, skv, d, dv)
+        block_q = tiling.block_q if block_q is None else block_q
+        block_k = tiling.block_k if block_k is None else block_k
     block_q = min(block_q, sq)
     block_k = min(block_k, skv)
     pad_q = (-sq) % block_q

@@ -1,20 +1,35 @@
 """Pallas TPU kernel: FLASH-D split-K decode (flash-decoding adapted).
 
 One new token per sequence attends a long KV cache. The cache is split along
-the sequence axis across the innermost grid dimension; each split emits a
-partial (o_p, λ_p) pair. Partials are merged with the FLASH-D sigmoid blend
+the sequence axis; each split yields a partial (o_p, λ_p) pair and partials
+are merged with the FLASH-D sigmoid blend
 
     o ← o_a + (o_b − o_a)·σ(λ_b − λ_a)
 
 — one sigmoid + one vector FMA per merge, where the FA2 merge needs two
 exp-rescales and a division (beyond-paper contribution, DESIGN.md §2.2).
-The same merge combines cross-device partials under context-parallel
-sharding of the cache (see repro.serve).
 
-Dynamic cache length enters as a scalar-prefetch-style operand (an i32 array
-indexed per batch row) and masks padded cache slots inside the kernel.
-Sliding-window / chunked masks for recurrentgemma / llama4 decode are also
-applied in-kernel, so only live splits do work (`pl.when` on split bounds).
+Two execution modes:
+
+fused=True (default) — the split axis is the innermost sequential
+  ("arbitrary") grid dimension and the merge carry (acc, Λ) lives in VMEM
+  scratch, exactly the `flashd_fwd_pallas` carry pattern. The kernel emits
+  the final [B, Hq, dv] output directly: zero per-split HBM partials, no
+  host-side moveaxis / merge scan. This is the decode hot path.
+
+fused=False — the historical multi-output form: every split writes its
+  (o_p, λ_p) to HBM and the merge runs on the host graph via
+  `merge_partials`. Kept as the oracle for the fused kernel (the fused
+  carry performs the same operations in the same order, so the two paths
+  agree to ~2 f32 ulps — separately compiled XLA programs may contract
+  FMAs differently, so strict bitwise equality is not guaranteed) and as
+  the cross-device merge building block for context-parallel caches
+  (see repro.serve).
+
+Dynamic cache length enters as a scalar operand (an i32 array indexed per
+batch row) and masks padded cache slots inside the kernel. Sliding-window /
+chunked masks for recurrentgemma / llama4 decode are applied in-kernel, so
+only live splits do work (`pl.when` on split bounds).
 """
 
 from __future__ import annotations
@@ -39,7 +54,96 @@ from repro.core.blockwise import NEG_INF, merge_partials
 __all__ = ["flashd_decode_pallas"]
 
 
-def _decode_kernel(
+def _split_partial(cache_len, q_ref, k_ref, v_ref, *, lo, split, window, chunk, scale):
+    """Per-split normalized partial (o_p [G, dv], λ_p [G]) — shared by the
+    fused and unfused kernels so their per-split arithmetic is identical."""
+    q = q_ref[0, 0].astype(jnp.float32)  # [G, d]
+    k = k_ref[0, 0].astype(jnp.float32)  # [split, d]
+    v = v_ref[0, 0].astype(jnp.float32)  # [split, dv]
+    lo_bound = _lo_bound(cache_len, window=window, chunk=chunk)
+    pos = lo + jax.lax.broadcasted_iota(jnp.int32, (split,), 0)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [G, split]
+    keep = jnp.logical_and(pos >= lo_bound, pos < cache_len)
+    s = jnp.where(keep[None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    m_safe = jnp.maximum(m, NEG_INF / 2)
+    p = jnp.exp(s - m_safe[:, None])
+    l = jnp.sum(p, axis=-1)
+    lam = jnp.where(
+        l > 0,
+        m_safe + jnp.log(jnp.maximum(l, jnp.finfo(jnp.float32).tiny)),
+        NEG_INF,
+    )
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    c = jnp.where(l > 0, jnp.exp(m_safe - lam), 0.0)  # ⇒ pv·c = softmax·V
+    return pv * c[:, None], lam
+
+
+def _lo_bound(cache_len, *, window: int, chunk: int):
+    lo_bound = jnp.int32(0)
+    if window > 0:
+        lo_bound = jnp.maximum(lo_bound, cache_len - window)
+    if chunk > 0:
+        lo_bound = jnp.maximum(lo_bound, ((cache_len - 1) // chunk) * chunk)
+    return lo_bound
+
+
+def _split_live(cache_len, lo, split, *, window: int, chunk: int):
+    """A split is live iff it overlaps [lo_bound, cache_len)."""
+    lo_bound = _lo_bound(cache_len, window=window, chunk=chunk)
+    return jnp.logical_and(lo < cache_len, lo + split > lo_bound)
+
+
+def _decode_fused_kernel(
+    cache_len_ref, q_ref, k_ref, v_ref,
+    o_ref,
+    acc_ref, lam_scratch,  # VMEM carry across splits
+    *,
+    split: int,
+    n_splits: int,
+    window: int,
+    chunk: int,
+    scale: float,
+):
+    ip = pl.program_id(2)  # innermost, sequential
+    cache_len = cache_len_ref[0, 0]
+    lo = ip * split
+
+    @pl.when(ip == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        lam_scratch[...] = jnp.full_like(lam_scratch, NEG_INF)
+
+    @pl.when(_split_live(cache_len, lo, split, window=window, chunk=chunk))
+    def _body():
+        o_p, lam_p = _split_partial(
+            cache_len, q_ref, k_ref, v_ref,
+            lo=lo, split=split, window=window, chunk=chunk, scale=scale,
+        )
+        # FLASH-D sigmoid merge into the carry — the same op sequence as
+        # blockwise.merge_partials, so fused tracks unfused to ~2 ulps.
+        lam_run = lam_scratch[0]
+        w = jax.nn.sigmoid(lam_p - lam_run)
+        dead_b = lam_p <= NEG_INF / 2
+        dead_a = lam_run <= NEG_INF / 2
+        w = jnp.where(dead_b, 0.0, jnp.where(dead_a, 1.0, w))
+        acc = acc_ref[...]
+        acc_ref[...] = acc + (o_p - acc) * w[:, None]
+        ln_w1 = jax.nn.log_sigmoid(lam_run - lam_p)  # ln(1−w)
+        lam_scratch[0] = jnp.where(
+            dead_b, lam_run, jnp.where(dead_a, lam_p, lam_run - ln_w1)
+        )
+
+    @pl.when(ip == n_splits - 1)
+    def _finalize():
+        o_ref[0, 0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _decode_unfused_kernel(
     cache_len_ref, q_ref, k_ref, v_ref,
     o_ref, lam_ref,
     *,
@@ -48,44 +152,18 @@ def _decode_kernel(
     chunk: int,
     scale: float,
 ):
-    ib = pl.program_id(0)
     ip = pl.program_id(2)
     cache_len = cache_len_ref[0, 0]
-
-    # a split is live iff it overlaps [lo_bound, cache_len)
     lo = ip * split
-    lo_bound = jnp.int32(0)
-    if window > 0:
-        lo_bound = jnp.maximum(lo_bound, cache_len - window)
-    if chunk > 0:
-        lo_bound = jnp.maximum(lo_bound, ((cache_len - 1) // chunk) * chunk)
-    live = jnp.logical_and(lo < cache_len, lo + split > lo_bound)
+    live = _split_live(cache_len, lo, split, window=window, chunk=chunk)
 
     @pl.when(live)
     def _body():
-        q = q_ref[0, 0].astype(jnp.float32)  # [G, d]
-        k = k_ref[0, 0].astype(jnp.float32)  # [split, d]
-        v = v_ref[0, 0].astype(jnp.float32)  # [split, dv]
-        pos = lo + jax.lax.broadcasted_iota(jnp.int32, (split,), 0)
-        s = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-        ) * scale  # [G, split]
-        keep = jnp.logical_and(pos >= lo_bound, pos < cache_len)
-        s = jnp.where(keep[None, :], s, NEG_INF)
-        m = jnp.max(s, axis=-1)
-        m_safe = jnp.maximum(m, NEG_INF / 2)
-        p = jnp.exp(s - m_safe[:, None])
-        l = jnp.sum(p, axis=-1)
-        lam = jnp.where(
-            l > 0,
-            m_safe + jnp.log(jnp.maximum(l, jnp.finfo(jnp.float32).tiny)),
-            NEG_INF,
+        o_p, lam = _split_partial(
+            cache_len, q_ref, k_ref, v_ref,
+            lo=lo, split=split, window=window, chunk=chunk, scale=scale,
         )
-        pv = jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-        )
-        c = jnp.where(l > 0, jnp.exp(m_safe - lam), 0.0)  # ⇒ pv·c = softmax·V
-        o_ref[0, 0, :, 0, :] = (pv * c[:, None]).astype(o_ref.dtype)
+        o_ref[0, 0, :, 0, :] = o_p.astype(o_ref.dtype)
         lam_ref[0, 0, :, 0] = lam
 
     @pl.when(jnp.logical_not(live))
@@ -101,17 +179,30 @@ def flashd_decode_pallas(
     cache_len: jax.Array,  # [B] i32
     *,
     scale: Optional[float] = None,
-    n_splits: int = 8,
+    n_splits: Optional[int] = None,
     window: int = 0,
     chunk: int = 0,
+    fused: bool = True,
     interpret: bool = False,
 ):
-    """Returns o [B, Hq, dv]. Split partials merged with the FLASH-D blend."""
+    """Returns o [B, Hq, dv]. Split partials merged with the FLASH-D blend.
+
+    n_splits=None picks the split count from the tuning heuristics
+    (repro.kernels.tuning). fused=True merges in VMEM (single HBM output);
+    fused=False emits per-split HBM partials and merges on the host graph
+    (the oracle path).
+    """
     b, hq, d = q.shape
     _, hkv, s_max, dv = v_cache.shape
     g = hq // hkv
     if scale is None:
         scale = float(1.0 / (d ** 0.5))
+    if n_splits is None:
+        from repro.kernels.tuning import choose_decode_split  # lazy: no cycle
+
+        n_splits = choose_decode_split(
+            s_max, d, dv, group=g, window=window, chunk=chunk
+        ).n_splits
     n_splits = max(1, min(n_splits, s_max))
     pad = (-s_max) % n_splits
     if pad:
@@ -122,15 +213,46 @@ def flashd_decode_pallas(
     qg = q.reshape(b, hkv, g, d)
     cache_len = jnp.asarray(cache_len, jnp.int32).reshape(b, 1)
 
-    kernel = functools.partial(
-        _decode_kernel, split=split, window=window, chunk=chunk, scale=scale
-    )
     in_specs = [
         pl.BlockSpec((1, 1), lambda b_, h, ip: (b_, 0)),
         pl.BlockSpec((1, 1, g, d), lambda b_, h, ip: (b_, h, 0, 0)),
         pl.BlockSpec((1, 1, split, d), lambda b_, h, ip: (b_, h, ip, 0)),
         pl.BlockSpec((1, 1, split, dv), lambda b_, h, ip: (b_, h, ip, 0)),
     ]
+    grid = (b, hkv, n_splits)
+
+    if fused and _HAS_PLTPU:
+        kernel = functools.partial(
+            _decode_fused_kernel, split=split, n_splits=n_splits,
+            window=window, chunk=chunk, scale=scale,
+        )
+        try:
+            compiler_params = pltpu.CompilerParams(
+                dimension_semantics=("parallel", "parallel", "arbitrary")
+            )
+        except Exception:  # older/newer API name drift
+            compiler_params = None
+        call = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=in_specs,
+            # one output block revisited across splits — written once, at the
+            # last split, from the VMEM carry: no per-split HBM partials
+            out_specs=pl.BlockSpec((1, 1, g, dv), lambda b_, h, ip: (b_, h, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((b, hkv, g, dv), q.dtype),
+            scratch_shapes=[
+                pltpu.VMEM((g, dv), jnp.float32),
+                pltpu.VMEM((1, g), jnp.float32),
+            ],
+            interpret=interpret,
+            **({"compiler_params": compiler_params} if compiler_params else {}),
+        )
+        o = call(cache_len, qg, k_cache, v_cache)
+        return o.reshape(b, hq, dv)
+
+    kernel = functools.partial(
+        _decode_unfused_kernel, split=split, window=window, chunk=chunk, scale=scale
+    )
     out_specs = [
         pl.BlockSpec((1, 1, g, 1, dv), lambda b_, h, ip: (b_, h, 0, ip, 0)),
         pl.BlockSpec((1, 1, g, 1), lambda b_, h, ip: (b_, h, 0, ip)),
@@ -141,7 +263,7 @@ def flashd_decode_pallas(
     ]
     call = pl.pallas_call(
         kernel,
-        grid=(b, hkv, n_splits),
+        grid=grid,
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,

@@ -73,6 +73,7 @@ def _flashd_kernel(
     scale: float,
     block_q: int,
     block_k: int,
+    q_len: int,
     kv_len: int,
     n_kv_blocks: int,
     skip: bool,
@@ -107,6 +108,9 @@ def _flashd_kernel(
             )
     else:
         compute = ik * block_k < kv_len
+    # fully-padded q tiles (from pad_q) have no live rows: skip their whole
+    # kv loop rather than running it into masked-out scores
+    compute = jnp.logical_and(compute, iq * block_q < q_len)
 
     @pl.when(compute)
     def _body():
@@ -180,19 +184,28 @@ def flashd_fwd_pallas(
     *,
     mask: MaskSpec = MaskSpec("causal"),
     scale: Optional[float] = None,
-    block_q: int = 512,
-    block_k: int = 512,
+    block_q: Optional[int] = None,
+    block_k: Optional[int] = None,
     skip: bool = False,
     skip_theta: float = DEFAULT_SKIP_THETA,
     interpret: bool = False,
 ):
-    """Returns (o [B, Hq, Sq, dv] in q.dtype, Λ [B, Hq, Sq] f32)."""
+    """Returns (o [B, Hq, Sq, dv] in q.dtype, Λ [B, Hq, Sq] f32).
+
+    block_q / block_k = None picks the tiling from the VMEM-budget
+    heuristics in repro.kernels.tuning."""
     b, hq, sq, d = q.shape
     _, hkv, skv, dv = v.shape
     if scale is None:
         scale = float(1.0 / (d ** 0.5))
     group = hq // hkv
 
+    if block_q is None or block_k is None:
+        from repro.kernels.tuning import choose_prefill_blocks  # lazy: no cycle
+
+        tiling = choose_prefill_blocks(sq, skv, d, dv)
+        block_q = tiling.block_q if block_q is None else block_q
+        block_k = tiling.block_k if block_k is None else block_k
     block_q = min(block_q, sq)
     block_k = min(block_k, skv)
     pad_q = (-sq) % block_q
@@ -212,6 +225,7 @@ def flashd_fwd_pallas(
         scale=scale,
         block_q=block_q,
         block_k=block_k,
+        q_len=sq,
         kv_len=skv,
         n_kv_blocks=n_k,
         skip=skip,

@@ -70,12 +70,13 @@ def pallas_decode(
     cache_len: jax.Array,
     *,
     scale=None,
-    n_splits: int = 8,
+    n_splits: int | None = None,  # None → tuned (repro.kernels.tuning)
     window: int = 0,
     chunk: int = 0,
+    fused: bool = True,
 ):
     o = flashd_decode_pallas(
-        q[:, 0].transpose(0, 1, 2) if q.ndim == 3 else q[:, 0],
+        q[:, 0] if q.ndim == 4 else q,  # accept [B,1,Hq,d] or [B,Hq,d]
         k_cache.transpose(0, 2, 1, 3),
         v_cache.transpose(0, 2, 1, 3),
         jnp.asarray(cache_len, jnp.int32).reshape(-1),
@@ -83,6 +84,7 @@ def pallas_decode(
         n_splits=n_splits,
         window=window,
         chunk=chunk,
+        fused=fused,
         interpret=_interpret(),
     )
     return o[:, None]  # [B, 1, Hq, dv]

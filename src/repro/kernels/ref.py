@@ -73,6 +73,10 @@ def decode_ref(
     if chunk > 0:
         keep &= (pos[None, :] // chunk) == ((cache_len - 1) // chunk)
     s = jnp.where(keep[:, None, None, :], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
+    lam = jax.nn.logsumexp(s, axis=-1)
+    p = jnp.exp(s - lam[..., None])
+    # rows with no visible key (cache_len == 0) are zero, not uniform —
+    # matching the kernel's dead-partial convention
+    p = jnp.where(keep[:, None, None, :], p, 0.0)
     o = jnp.einsum("bhgs,bhsd->bhgd", p, v_cache.astype(jnp.float32))
     return o.reshape(b, hq, dv).astype(q.dtype)

@@ -1,0 +1,235 @@
+"""Tile/split autotuner for the FLASH-D kernels (DESIGN.md §3).
+
+Every kernel entry point (and the jnp tiled recurrences behind
+`repro.core.attention`) routes its tiling through this module when the
+caller does not pin one explicitly:
+
+  prefill / training fwd — (block_q, block_k) per (Sq, Skv, d, dv), sized
+      so the per-step VMEM working set (q, k, v, acc, Λ, scores tiles)
+      fits a configurable budget, preferring MXU-friendly multiples of 128;
+  decode — (n_splits, split) per (S_max, d, dv, G), sized so one split's
+      KV block (+ the [G, split] score tile) fits the budget with splits
+      long enough to amortize DMA issue overhead.
+
+Two modes:
+  heuristic (default) — closed-form from the shape and the VMEM budget;
+      pure Python on static shapes, so decisions are jit-stable.
+  measured — `measure_best` times a candidate set on the current backend
+      and caches the winner per shape key (process-lifetime cache). The
+      benchmark harness and power users opt in; unit tests pin it down.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Iterable, Optional, Sequence, Tuple
+
+import jax
+
+__all__ = [
+    "PrefillTiling",
+    "DecodeSplit",
+    "choose_prefill_blocks",
+    "choose_decode_split",
+    "prefill_vmem_bytes",
+    "decode_vmem_bytes",
+    "measure_best",
+    "clear_measure_cache",
+    "VMEM_BUDGET_BYTES",
+]
+
+# ~16 MB VMEM per TPU core (v4/v5e); leave headroom for double buffering,
+# spills and the compiler's own scratch.
+VMEM_BYTES_PER_CORE = 16 * 1024 * 1024
+VMEM_BUDGET_BYTES = VMEM_BYTES_PER_CORE // 2
+
+_LANE = 128  # MXU/VPU lane width — tiles want multiples of this
+_MIN_BLOCK = 8  # f32 sublane minimum
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefillTiling:
+    block_q: int
+    block_k: int
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeSplit:
+    n_splits: int
+    split: int
+
+
+def prefill_vmem_bytes(block_q: int, block_k: int, d: int, dv: int) -> int:
+    """f32 working set of one fwd grid step: q + k + v + acc + Λ + scores."""
+    words = (
+        block_q * d          # q tile
+        + block_k * d        # k tile
+        + block_k * dv       # v tile
+        + block_q * dv       # acc scratch
+        + block_q            # Λ scratch
+        + block_q * block_k  # score tile
+    )
+    return 4 * words
+
+
+def decode_vmem_bytes(split: int, d: int, dv: int, group: int) -> int:
+    """f32 working set of one decode grid step: q + k + v + carry + scores."""
+    words = (
+        group * d            # q block
+        + split * d          # k split
+        + split * dv         # v split
+        + group * dv         # acc carry
+        + group              # Λ carry
+        + group * split      # score tile
+    )
+    return 4 * words
+
+
+def _shrink_to_lane(n: int) -> int:
+    """Largest multiple of _LANE ≤ n (or n itself when already below one lane)."""
+    if n <= _LANE:
+        return max(n, 1)
+    return (n // _LANE) * _LANE
+
+
+def choose_prefill_blocks(
+    sq: int,
+    skv: int,
+    d: int,
+    dv: Optional[int] = None,
+    *,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+) -> PrefillTiling:
+    """Heuristic (block_q, block_k) for the tiled forward.
+
+    Starts from the 512×512 sweet spot (MXU-saturating, small Λ overhead)
+    and halves the larger block until the working set fits the budget.
+    Blocks are clamped to the sequence lengths (short sequences should not
+    pad to a full tile)."""
+    dv = d if dv is None else dv
+    block_q = min(512, max(sq, 1))
+    block_k = min(512, max(skv, 1))
+    while (
+        prefill_vmem_bytes(block_q, block_k, d, dv) > vmem_budget
+        and max(block_q, block_k) > _MIN_BLOCK
+    ):
+        if block_q >= block_k:
+            block_q = max(_MIN_BLOCK, _shrink_to_lane(block_q // 2))
+        else:
+            block_k = max(_MIN_BLOCK, _shrink_to_lane(block_k // 2))
+    return PrefillTiling(block_q=block_q, block_k=block_k)
+
+
+def choose_decode_split(
+    s_max: int,
+    d: int,
+    dv: Optional[int] = None,
+    *,
+    group: int = 1,
+    window: int = 0,
+    chunk: int = 0,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+) -> DecodeSplit:
+    """Heuristic (n_splits, split) for split-K decode.
+
+    The fused kernel walks splits sequentially with a VMEM carry, so the
+    split length trades DMA pipelining granularity against VMEM footprint:
+    long splits amortize issue overhead, short splits let masked (dead)
+    regions be skipped at finer grain. Target 512 positions per split —
+    shrunk until the KV block fits the budget, and never longer than the
+    live mask region (window / chunk caches only ever attend that many)."""
+    dv = d if dv is None else dv
+    s_max = max(s_max, 1)
+    live = s_max
+    if window > 0:
+        live = min(live, window)
+    if chunk > 0:
+        live = min(live, chunk)
+
+    split = min(512, s_max)
+    while decode_vmem_bytes(split, d, dv, group) > vmem_budget and split > _MIN_BLOCK:
+        split = max(_MIN_BLOCK, _shrink_to_lane(split // 2))
+    # a split longer than the live region wastes masked work at its edges
+    if live < split:
+        split = max(_MIN_BLOCK, min(split, _shrink_to_lane(live) or live))
+    n_splits = max(1, -(-s_max // split))
+    split = -(-s_max // n_splits)  # actual padded split length
+    return DecodeSplit(n_splits=n_splits, split=split)
+
+
+# ---------------------------------------------------------------------------
+# measured mode
+# ---------------------------------------------------------------------------
+
+_MEASURE_CACHE: Dict[Tuple, object] = {}
+
+
+def clear_measure_cache() -> None:
+    _MEASURE_CACHE.clear()
+
+
+def measure_best(
+    key: Tuple,
+    candidates: Sequence,
+    build: Callable[[object], Callable[[], jax.Array]],
+    *,
+    iters: int = 3,
+):
+    """Time `build(candidate)()` for each candidate; cache the winner by key.
+
+    `build` returns a zero-arg thunk whose result is blocked on. The first
+    call per candidate warms compilation; the best of `iters` timed calls
+    wins. Failures (e.g. a block shape the backend rejects) disqualify the
+    candidate rather than raising."""
+    if key in _MEASURE_CACHE:
+        return _MEASURE_CACHE[key]
+    best = None
+    best_t = float("inf")
+    for cand in candidates:
+        try:
+            thunk = build(cand)
+            jax.block_until_ready(thunk())  # warm-up / compile
+            t = float("inf")
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                jax.block_until_ready(thunk())
+                t = min(t, time.perf_counter() - t0)
+        except Exception:
+            continue
+        if t < best_t:
+            best, best_t = cand, t
+    if best is None:
+        raise RuntimeError(f"no measurable candidate for {key}")
+    _MEASURE_CACHE[key] = best
+    return best
+
+
+def measured_decode_split(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cache_len: jax.Array,
+    *,
+    candidates: Iterable[int] = (1, 2, 4, 8, 16, 32),
+    interpret: bool = False,
+) -> DecodeSplit:
+    """Measured-mode decode tuning: times the fused kernel at each split
+    count on the live backend and returns the winner (cached per shape)."""
+    from repro.kernels.flashd_decode import flashd_decode_pallas
+
+    s_max = k_cache.shape[2]
+    cands = sorted({max(1, min(int(c), s_max)) for c in candidates})
+    key = ("decode", q.shape, k_cache.shape, v_cache.shape, q.dtype.name,
+           tuple(cands), interpret)
+
+    def build(n_splits):
+        f = jax.jit(
+            lambda q, k, v, cl: flashd_decode_pallas(
+                q, k, v, cl, n_splits=n_splits, interpret=interpret
+            )
+        )
+        return lambda: f(q, k_cache, v_cache, cache_len)
+
+    n = measure_best(key, cands, build)
+    return DecodeSplit(n_splits=n, split=-(-s_max // n))

@@ -165,13 +165,14 @@ def _compile_once(arch, shape_name, mesh, *, attn_impl=None, remat=None,
     ctx = shd.ShardingCtx(mesh, fsdp_axis=fsdp, use_sp=use_sp)
     ctx.tp_activations = use_tp
     with shd.activate(ctx):
-        with jax.set_mesh(mesh):
+        with shd.mesh_ctx(mesh):
             step, args, in_specs, out_specs, donate, model_flops, cfg = build_cell(
                 arch, shape_name, attn_impl=attn_impl, remat=remat,
                 extra_cfg=extra_cfg, train_overrides=train_overrides,
             )
-            jitted = jax.jit(step, in_shardings=in_specs, out_shardings=out_specs,
-                             donate_argnums=donate)
+            jitted = shd.sharded_jit(step, in_shardings=in_specs,
+                                     out_shardings=out_specs,
+                                     donate_argnums=donate)
             lowered = jitted.lower(*args)
             compiled = lowered.compile()
 

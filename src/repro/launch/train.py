@@ -76,14 +76,15 @@ def main(argv=None):
         step_raw = make_train_step(cfg, tc)
         if ctx is None:
             return state, jax.jit(step_raw, donate_argnums=(0,))
-        with shd.activate(ctx), jax.set_mesh(mesh):
+        with shd.activate(ctx), shd.mesh_ctx(mesh):
             pspecs = shd.param_specs(state.params)
             sspec = TrainState(params=pspecs,
                                opt=OptState(m=pspecs, v=pspecs, step=P()),
                                residual=(pspecs if state.residual is not None else None),
                                step=P())
             state = jax.device_put(state, shd.to_named(sspec))
-            step = jax.jit(step_raw, in_shardings=(sspec, None), donate_argnums=(0,))
+            step = shd.sharded_jit(step_raw, in_shardings=(sspec, None),
+                                   donate_argnums=(0,))
             return state, step
 
     state, step_fn = build()
@@ -109,7 +110,7 @@ def main(argv=None):
             batch = jax.tree.map(jnp.asarray, data.batch(i))
             monitor.start_step()
             with (shd.activate(ctx) if ctx else _null()), \
-                 (jax.set_mesh(mesh) if mesh else _null()):
+                 (shd.mesh_ctx(mesh) if mesh else _null()):
                 state, metrics = step_fn(state, batch)
             jax.block_until_ready(metrics["loss"])
             monitor.end_step(i)

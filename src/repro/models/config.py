@@ -46,8 +46,8 @@ class ModelConfig:
     attn_chunk: int = 0  # attn_chunked chunk length
     rope_theta: float = 10000.0
     attn_impl: str = "flashd"  # flashd | fa2 | naive | flashd_pallas | fa2_pallas
-    attn_block_q: int = 512
-    attn_block_k: int = 512
+    attn_block_q: Optional[int] = None  # None → repro.kernels.tuning picks
+    attn_block_k: Optional[int] = None
     attn_skip: bool = False  # FLASH-D tile-skip predication
     # MoE
     n_experts: int = 0

@@ -416,7 +416,13 @@ def _decode_attn(p, x, cfg: ModelConfig, kind: str, cache, pos):
         eff_len = write_idx + 1
     else:
         eff_len = pos + 1
-    o = decode_attention(q, k_cache, v_cache, eff_len)
+    if cfg.attn_impl.endswith("_pallas"):
+        # fused split-K decode kernel: in-VMEM sigmoid merge, no HBM partials
+        from repro.kernels import ops as kernel_ops  # lazy: avoid import cycle
+
+        o = kernel_ops.pallas_decode(q, k_cache, v_cache, eff_len)
+    else:
+        o = decode_attention(q, k_cache, v_cache, eff_len)
     o = o.reshape(b, 1, cfg.n_heads * hd)
     y = jnp.einsum("bsh,hd->bsd", o, p["wo"].astype(cdt))
     return y, {"k": k_cache, "v": v_cache}

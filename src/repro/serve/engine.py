@@ -2,18 +2,35 @@
 
 A deliberately small but real continuous-batching engine: requests join a
 fixed-width slot array; each slot carries its own cache region and length;
-finished slots are refilled from the queue. Decode steps are one jitted
-`decode_step` over the whole slot batch (the production pattern). Sampling:
-greedy / temperature / top-k.
+finished slots are refilled from the queue. Sampling: greedy / temperature /
+top-k.
+
+The decode hot loop is fully on-device (DESIGN.md §3.3):
+
+  * `generate` runs prefill + the entire token loop as ONE jitted
+    `lax.scan` — sampling, cache updates, position advance and early-EOS
+    masking all happen inside the scan, so a whole generation costs one
+    dispatch and exactly ONE device→host sync (the final token fetch).
+    The engine counts its host syncs in `self.host_syncs`; tests pin the
+    one-sync contract.
+  * `serve` (continuous batching) decodes in jitted multi-token chunks
+    (`ServeConfig.decode_chunk` steps per dispatch): one host sync per
+    chunk instead of per token, with completions / slot refills resolved
+    between chunks. Tokens a slot produced after its EOS inside a chunk
+    are discarded on the host; the refill prefill then overwrites that
+    slot's cache region, so the speculative steps are harmless.
 
 The caches come from the model API (`init_cache`) — attention layers hold
 KV rings, SSM/RG-LRU layers hold recurrent state — so the same engine
-serves every assigned architecture.
+serves every assigned architecture. When `cfg.attn_impl` is a `*_pallas`
+impl, decode attention inside the scan runs the fused split-K kernel
+(`repro.kernels.flashd_decode`) with tuned splits.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -34,6 +51,7 @@ class ServeConfig:
     top_k: int = 0
     eos_id: int = -1  # <0: run to max_new_tokens
     seed: int = 0
+    decode_chunk: int = 8  # tokens per device dispatch in `serve`
 
 
 def sample_token(logits: jax.Array, key, cfg: ServeConfig) -> jax.Array:
@@ -57,39 +75,78 @@ class Engine:
             lambda p, c, t, pos: self.api.decode_step(p, c, t, pos, model_cfg)
         )
         self._key = jax.random.PRNGKey(serve_cfg.seed)
+        self.host_syncs = 0  # device→host transfers issued by this engine
+        self._gen = jax.jit(self._gen_fn, static_argnums=(4,))
+        self._chunk = jax.jit(self._chunk_fn, static_argnums=(5,))
+
+    def _to_host(self, x) -> np.ndarray:
+        """The engine's ONLY device→host sync point (counted for tests)."""
+        self.host_syncs += 1
+        return np.asarray(x)
+
+    # ---- jitted device loops ----
+    def _gen_fn(self, params, prompts, cache, key, max_new_tokens: int):
+        """Prefill + full decode loop as one device program → tokens [B, T].
+
+        Early-EOS masking: once a sequence has emitted eos_id, subsequent
+        positions emit eos_id (the decode steps still run — a lax.scan has
+        static trip count — but their tokens are masked in the output)."""
+        b, s = prompts.shape
+        logits, cache = prefill_lm(params, prompts, cache, self.mc)
+        pos0 = jnp.full((b,), s, jnp.int32)
+        done0 = jnp.zeros((b,), bool)
+        eos = self.sc.eos_id
+
+        def body(carry, k_i):
+            logits, cache, pos, done = carry
+            tok = sample_token(logits, k_i, self.sc)
+            if eos >= 0:
+                emit = jnp.where(done, jnp.int32(eos), tok)
+                done = jnp.logical_or(done, tok == eos)
+            else:
+                emit = tok
+            logits, cache = self.api.decode_step(params, cache, tok, pos, self.mc)
+            return (logits, cache, pos + 1, done), emit
+
+        keys = jax.random.split(key, max_new_tokens)
+        _, toks = jax.lax.scan(body, (logits, cache, pos0, done0), keys)
+        return toks.T  # [B, T]
+
+    def _chunk_fn(self, params, cache, tok, pos, key, n: int):
+        """`n` decode+sample steps as one device program (continuous batching)."""
+
+        def body(carry, k_i):
+            cache, tok, pos = carry
+            logits, cache = self.api.decode_step(params, cache, tok, pos, self.mc)
+            nxt = sample_token(logits, k_i, self.sc)
+            return (cache, nxt, pos + 1), nxt
+
+        keys = jax.random.split(key, n)
+        (cache, tok, pos), toks = jax.lax.scan(body, (cache, tok, pos), keys)
+        return cache, tok, pos, toks  # toks [n, B]
 
     # ---- single-prompt-batch generation (prefill + n decode steps) ----
-    def generate(
-        self, prompts: np.ndarray, max_new_tokens: int
-    ) -> np.ndarray:
+    def generate(self, prompts: np.ndarray, max_new_tokens: int) -> np.ndarray:
         """prompts [B, S_prompt] int32 (right-aligned, no padding support in
         this minimal path) → generated tokens [B, max_new_tokens]."""
         b, s = prompts.shape
         cache = self.api.init_cache(b, self.sc.max_len, self.mc)
-        logits, cache = prefill_lm(
-            self.params, jnp.asarray(prompts, jnp.int32), cache, self.mc
-        )
-        out = []
-        pos = jnp.full((b,), s, jnp.int32)
         self._key, k = jax.random.split(self._key)
-        tok = sample_token(logits, k, self.sc)
-        for i in range(max_new_tokens):
-            out.append(np.asarray(tok))
-            logits, cache = self._decode(self.params, cache, tok, pos)
-            pos = pos + 1
-            self._key, k = jax.random.split(self._key)
-            tok = sample_token(logits, k, self.sc)
-        return np.stack(out, axis=1)
+        toks = self._gen(
+            self.params, jnp.asarray(prompts, jnp.int32), cache, k,
+            int(max_new_tokens),
+        )
+        return self._to_host(toks)
 
     # ---- continuous batching over a request queue ----
     def serve(self, requests: List[np.ndarray], max_new_tokens: int) -> List[np.ndarray]:
         """Each request: 1-D prompt array. Returns generated arrays, in order.
 
         Slot-parallel: up to max_batch requests decode together; finished
-        slots immediately take the next queued request (its prefill runs as
-        a batch-1 prefill into that slot's cache region — kept simple here;
-        a production engine would chunk prefills into the decode batch).
-        """
+        slots take the next queued request between chunks (its prefill runs
+        as a batch-1 prefill into that slot's cache region — kept simple
+        here; a production engine would chunk prefills into the decode
+        batch)."""
         results: List[Optional[np.ndarray]] = [None] * len(requests)
         queue = list(enumerate(requests))
         active: List[dict] = []
@@ -99,6 +156,7 @@ class Engine:
         pos = jnp.zeros((b,), jnp.int32)
         slot_req = [-1] * b
         slot_out: List[List[int]] = [[] for _ in range(b)]
+        chunk_n = max(1, min(self.sc.decode_chunk, max_new_tokens))
 
         def _write_slot(c, o, slot):
             # caches are stacked [n_blocks, batch, ...]: batch is axis 1
@@ -116,7 +174,7 @@ class Engine:
                     self.params, jnp.asarray(prompt[None], jnp.int32), one_cache, self.mc
                 )
                 self._key, k = jax.random.split(self._key)
-                t0 = int(sample_token(logits, k, self.sc)[0])
+                t0 = int(self._to_host(sample_token(logits, k, self.sc))[0])
                 done = max_new_tokens <= 1 or (self.sc.eos_id >= 0 and t0 == self.sc.eos_id)
                 if done:
                     results[rid] = np.asarray([t0], np.int32)
@@ -133,28 +191,26 @@ class Engine:
             assign(s)
 
         while any(r >= 0 for r in slot_req):
-            logits, cache = self._decode(self.params, cache, tok, pos)
             self._key, k = jax.random.split(self._key)
-            nxt = sample_token(logits, k, self.sc)
-            pos = pos + 1
-            refilled = []
+            cache, tok, pos, toks = self._chunk(
+                self.params, cache, tok, pos, k, chunk_n
+            )
+            toks_np = self._to_host(toks)  # one sync per chunk
+            finished = []
             for s in range(b):
                 rid = slot_req[s]
                 if rid < 0:
                     continue
-                t = int(nxt[s])
-                slot_out[s].append(t)
-                done = len(slot_out[s]) >= max_new_tokens or (
-                    self.sc.eos_id >= 0 and t == self.sc.eos_id
-                )
-                if done:
-                    results[rid] = np.asarray(slot_out[s], np.int32)
-                    assign(s)  # sets tok[s]/pos[s] for the incoming request
-                    refilled.append(s)
-            # advance continuing slots to their sampled token; refilled slots
-            # keep the token/pos `assign` just installed (prefill output)
-            keep_assigned = tok
-            tok = nxt
-            for s in refilled:
-                tok = tok.at[s].set(keep_assigned[s])
+                for step in range(chunk_n):
+                    t = int(toks_np[step, s])
+                    slot_out[s].append(t)
+                    done = len(slot_out[s]) >= max_new_tokens or (
+                        self.sc.eos_id >= 0 and t == self.sc.eos_id
+                    )
+                    if done:  # later tokens in this chunk are speculative garbage
+                        results[rid] = np.asarray(slot_out[s], np.int32)
+                        finished.append(s)
+                        break
+            for s in finished:
+                assign(s)  # refill overwrites the slot's cache / tok / pos
         return [r if r is not None else np.zeros((0,), np.int32) for r in results]

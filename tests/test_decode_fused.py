@@ -1,0 +1,116 @@
+"""Fused split-K decode kernel vs the naive oracle and the unfused path.
+
+The fused kernel carries the FLASH-D sigmoid merge in VMEM scratch across
+splits (single [B, Hq, dv] output, no HBM partials); the unfused path emits
+per-split partials and merges on the host graph. Both execute the same
+per-split arithmetic and the same merge op sequence, so they agree to a
+couple of f32 ulps — they are separately compiled XLA programs, so strict
+bitwise equality is not guaranteed (FMA contraction may differ), and the
+tolerance below is a 2-ulp bound at the observed output scale.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flashd_decode import flashd_decode_pallas
+from repro.kernels.ref import decode_ref
+
+_ULP2 = 2.5e-7  # two f32 ulps at magnitude ~1
+
+
+def _inputs(seed, b, hq, hkv, s, d, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, hq, d)), dtype)
+    kc = jnp.asarray(rng.normal(size=(b, hkv, s, d)), dtype)
+    vc = jnp.asarray(rng.normal(size=(b, hkv, s, d)), dtype)
+    return q, kc, vc
+
+
+@pytest.mark.parametrize("group", [1, 4, 8])
+@pytest.mark.parametrize("n_splits", [1, 4, 8])
+def test_fused_gqa_groups(group, n_splits):
+    hkv = 2
+    q, kc, vc = _inputs(0, 3, hkv * group, hkv, 64, 16)
+    cl = jnp.asarray([64, 17, 33], jnp.int32)
+    o = flashd_decode_pallas(q, kc, vc, cl, n_splits=n_splits, fused=True,
+                             interpret=True)
+    o_ref = decode_ref(q, kc, vc, cl)
+    assert o.shape == (3, hkv * group, 16)
+    np.testing.assert_allclose(o, o_ref, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("w,c", [(12, 0), (7, 0), (0, 16), (0, 8)])
+@pytest.mark.parametrize("n_splits", [2, 8])
+def test_fused_structured_masks(w, c, n_splits):
+    q, kc, vc = _inputs(1, 3, 8, 2, 64, 16)
+    cl = jnp.asarray([64, 17, 33], jnp.int32)
+    o = flashd_decode_pallas(q, kc, vc, cl, n_splits=n_splits, window=w,
+                             chunk=c, fused=True, interpret=True)
+    o_ref = decode_ref(q, kc, vc, cl, window=w, chunk=c)
+    np.testing.assert_allclose(o, o_ref, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("n_splits", [1, 4])
+def test_fused_ragged_and_edge_lengths(n_splits):
+    """cache_len ∈ {0, 1, mid, full}: the 0-length row must come out ZERO
+    (the dead-partial convention — no visible key ⇒ no contribution)."""
+    q, kc, vc = _inputs(2, 4, 4, 4, 32, 8)
+    cl = jnp.asarray([0, 1, 15, 32], jnp.int32)
+    o = flashd_decode_pallas(q, kc, vc, cl, n_splits=n_splits, fused=True,
+                             interpret=True)
+    o_ref = decode_ref(q, kc, vc, cl)
+    np.testing.assert_allclose(o, o_ref, rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(np.asarray(o[0]), np.zeros_like(o[0]))
+    # cache_len == 1 attends exactly the first key ⇒ o = v[:, 0] (G = 1 here)
+    np.testing.assert_allclose(o[1], vc[1, :, 0], rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("n_splits", [1, 2, 4, 8])
+@pytest.mark.parametrize("w,c", [(0, 0), (12, 0), (0, 16)])
+def test_fused_matches_unfused(n_splits, w, c):
+    """Fused (in-VMEM merge) vs unfused (HBM partials + host merge):
+    identical op sequences ⇒ agreement within 2 f32 ulps."""
+    q, kc, vc = _inputs(3, 3, 8, 2, 64, 16)
+    cl = jnp.asarray([64, 17, 33], jnp.int32)
+    kw = dict(n_splits=n_splits, window=w, chunk=c, interpret=True)
+    o_f = flashd_decode_pallas(q, kc, vc, cl, fused=True, **kw)
+    o_u = flashd_decode_pallas(q, kc, vc, cl, fused=False, **kw)
+    scale = max(1.0, float(jnp.max(jnp.abs(o_u))))
+    np.testing.assert_allclose(o_f, o_u, rtol=0, atol=_ULP2 * scale)
+
+
+def test_fused_single_output_no_partials():
+    """The fused call's jaxpr must contain no [.., n_splits, ..] partial
+    outputs — one pallas_call, one [B, Hq, dv] result."""
+    q, kc, vc = _inputs(4, 2, 4, 2, 64, 16)
+    cl = jnp.asarray([64, 33], jnp.int32)
+    jaxpr = jax.make_jaxpr(
+        lambda *a: flashd_decode_pallas(*a, n_splits=8, fused=True, interpret=True)
+    )(q, kc, vc, cl)
+    [call] = [e for e in jaxpr.eqns if e.primitive.name == "pallas_call"]
+    out_shapes = [tuple(v.aval.shape) for v in call.outvars]
+    assert out_shapes == [(2, 2, 2, 16)]  # [B, Hkv, G, dv] — no split axis
+    # and the whole function returns exactly the reshaped single output
+    assert [tuple(v.aval.shape) for v in jaxpr.jaxpr.outvars] == [(2, 4, 16)]
+
+
+def test_fused_bf16():
+    q, kc, vc = _inputs(5, 2, 4, 4, 32, 32, jnp.bfloat16)
+    cl = jnp.asarray([32, 9], jnp.int32)
+    o = flashd_decode_pallas(q, kc, vc, cl, n_splits=4, fused=True, interpret=True)
+    assert o.dtype == jnp.bfloat16
+    o_ref = decode_ref(q, kc, vc, cl)
+    np.testing.assert_allclose(
+        o.astype(jnp.float32), o_ref.astype(jnp.float32), rtol=3e-2, atol=3e-2
+    )
+
+
+def test_fused_tuned_splits_default():
+    """n_splits=None routes through repro.kernels.tuning and stays exact."""
+    q, kc, vc = _inputs(6, 2, 4, 2, 96, 16)
+    cl = jnp.asarray([96, 41], jnp.int32)
+    o = flashd_decode_pallas(q, kc, vc, cl, fused=True, interpret=True)
+    o_ref = decode_ref(q, kc, vc, cl)
+    np.testing.assert_allclose(o, o_ref, rtol=2e-5, atol=2e-5)

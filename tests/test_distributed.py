@@ -118,7 +118,7 @@ def test_sharded_train_step_matches_single_device():
     # 4x2 (data, model) mesh with full rules engine
     mesh = jax.make_mesh((4, 2), ("data", "model"))
     ctx = shd.ShardingCtx(mesh)
-    with shd.activate(ctx), jax.set_mesh(mesh):
+    with shd.activate(ctx), shd.mesh_ctx(mesh):
         state = init_train_state(jax.random.PRNGKey(0), cfg, tc)
         pspecs = shd.param_specs(state.params)
         from repro.train.train_step import TrainState
@@ -127,7 +127,8 @@ def test_sharded_train_step_matches_single_device():
                            residual=None, step=P())
         state = jax.device_put(state, shd.to_named(sspec))
         batch_sh = jax.device_put(batch, shd.to_named(shd.batch_specs(batch)))
-        step = jax.jit(make_train_step(cfg, tc), in_shardings=(sspec, shd.batch_specs(batch)))
+        step = shd.sharded_jit(make_train_step(cfg, tc),
+                               in_shardings=(sspec, shd.batch_specs(batch)))
         s1, m1 = step(state, batch_sh)
 
     np.testing.assert_allclose(float(mref["loss"]), float(m1["loss"]), rtol=1e-4)
@@ -152,10 +153,10 @@ def test_moe_expert_parallel_matches():
 
     mesh = jax.make_mesh((2, 4), ("data", "model"))
     ctx = shd.ShardingCtx(mesh)
-    with shd.activate(ctx), jax.set_mesh(mesh):
+    with shd.activate(ctx), shd.mesh_ctx(mesh):
         pspecs = shd.param_specs(params)
-        f = jax.jit(lambda p, xx: m.apply_moe(p, xx, cfg)[0],
-                    in_shardings=(pspecs, P(("data",), None, None)))
+        f = shd.sharded_jit(lambda p, xx: m.apply_moe(p, xx, cfg)[0],
+                            in_shardings=(pspecs, P(("data",), None, None)))
         y1 = f(params, x)
     np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), rtol=3e-3, atol=3e-3)
     print("EP OK")

@@ -1,0 +1,133 @@
+"""Split/block autotuner: budget adherence, clamping, measured mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import tuning
+from repro.kernels.tuning import (
+    DecodeSplit,
+    PrefillTiling,
+    choose_decode_split,
+    choose_prefill_blocks,
+    decode_vmem_bytes,
+    prefill_vmem_bytes,
+)
+
+
+def test_prefill_defaults_to_sweet_spot():
+    t = choose_prefill_blocks(4096, 4096, 128)
+    assert t == PrefillTiling(512, 512)
+    assert prefill_vmem_bytes(t.block_q, t.block_k, 128, 128) <= tuning.VMEM_BUDGET_BYTES
+
+
+def test_prefill_shrinks_for_fat_heads():
+    """Large head dims must shrink tiles until the working set fits."""
+    t = choose_prefill_blocks(8192, 8192, 1024, 1024)
+    assert prefill_vmem_bytes(t.block_q, t.block_k, 1024, 1024) <= tuning.VMEM_BUDGET_BYTES
+    assert t.block_q < 512 or t.block_k < 512
+
+
+def test_prefill_clamps_to_short_sequences():
+    t = choose_prefill_blocks(33, 57, 64)
+    assert t.block_q == 33 and t.block_k == 57
+
+
+def test_prefill_respects_tiny_budget():
+    t = choose_prefill_blocks(4096, 4096, 64, vmem_budget=256 * 1024)
+    assert prefill_vmem_bytes(t.block_q, t.block_k, 64, 64) <= 256 * 1024
+    assert t.block_q >= 8 and t.block_k >= 8
+
+
+def test_decode_split_covers_cache():
+    for s_max in (1, 7, 64, 500, 4096, 100_000):
+        ds = choose_decode_split(s_max, 128, group=8)
+        assert ds.n_splits >= 1
+        assert ds.n_splits * ds.split >= s_max  # splits tile the padded cache
+        assert decode_vmem_bytes(ds.split, 128, 128, 8) <= tuning.VMEM_BUDGET_BYTES
+
+
+def test_decode_split_small_cache_single_pass():
+    assert choose_decode_split(64, 16).n_splits == 1
+
+
+def test_decode_split_caps_at_live_window():
+    """A window-masked cache only ever attends `window` positions — splits
+    longer than that waste masked work."""
+    ds = choose_decode_split(65536, 128, window=1024)
+    assert ds.split <= 1024
+
+
+def test_decode_split_respects_budget():
+    ds = choose_decode_split(65536, 256, 256, group=16,
+                             vmem_budget=512 * 1024)
+    assert decode_vmem_bytes(ds.split, 256, 256, 16) <= 512 * 1024
+
+
+def test_measure_best_caches_and_skips_failures():
+    tuning.clear_measure_cache()
+    calls = []
+
+    def build(c):
+        if c == "bad":
+            raise RuntimeError("unbuildable")
+
+        def thunk():
+            calls.append(c)
+            return jnp.zeros(())
+
+        return thunk
+
+    best = tuning.measure_best(("k",), ["bad", "a", "b"], build, iters=1)
+    assert best in ("a", "b")
+    n_calls = len(calls)
+    assert tuning.measure_best(("k",), ["bad", "a", "b"], build) == best
+    assert len(calls) == n_calls  # cached: no re-measurement
+    tuning.clear_measure_cache()
+
+
+def test_measured_decode_split_runs():
+    tuning.clear_measure_cache()
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(2, 4, 16)), jnp.float32)
+    kc = jnp.asarray(rng.normal(size=(2, 2, 32, 16)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(2, 2, 32, 16)), jnp.float32)
+    cl = jnp.asarray([32, 9], jnp.int32)
+    ds = tuning.measured_decode_split(q, kc, vc, cl, candidates=(1, 2),
+                                      interpret=True)
+    assert isinstance(ds, DecodeSplit) and ds.n_splits in (1, 2)
+    tuning.clear_measure_cache()
+
+
+def test_decode_attention_pads_non_divisor_splits():
+    """Tuned split-K must not collapse to one split when S_max is prime —
+    the jnp path zero-pads the cache like the pallas kernel does."""
+    from repro.core.attention import decode_attention
+
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(2, 1, 4, 16)), jnp.float32)
+    kc = jnp.asarray(rng.normal(size=(2, 31, 2, 16)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(2, 31, 2, 16)), jnp.float32)
+    cl = jnp.asarray([31, 7], jnp.int32)
+    o1 = decode_attention(q, kc, vc, cl, n_splits=1)
+    for ns in (2, 4, 5):  # none divide 31
+        o = decode_attention(q, kc, vc, cl, n_splits=ns)
+        np.testing.assert_allclose(o, o1, rtol=1e-5, atol=1e-6)
+
+
+def test_decode_attention_split_path_dv_neq_d():
+    """Split-K decode must handle v head dim != q/k head dim (the reshape
+    historically hard-coded d)."""
+    from repro.core.attention import decode_attention
+
+    rng = np.random.default_rng(4)
+    d, dv = 16, 8
+    q = jnp.asarray(rng.normal(size=(2, 1, 4, d)), jnp.float32)
+    kc = jnp.asarray(rng.normal(size=(2, 64, 2, d)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(2, 64, 2, dv)), jnp.float32)
+    cl = jnp.asarray([64, 21], jnp.int32)
+    o1 = decode_attention(q, kc, vc, cl, n_splits=1)
+    o4 = decode_attention(q, kc, vc, cl, n_splits=4)
+    assert o4.shape == (2, 1, 4, dv)
+    np.testing.assert_allclose(o4, o1, rtol=1e-5, atol=1e-6)
