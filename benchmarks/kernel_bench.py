@@ -14,10 +14,14 @@ measured here:
   4. the decode fast path: fused vs unfused split-K kernel and the jitted
      scan engine vs the per-token host loop (the seed serving path).
 
+  5. context parallelism on a simulated 8-device host mesh (subprocess —
+     this process must keep its single device): ring prefill vs the
+     replicated single-device baseline, and cp_decode, in tokens/sec.
+
 Besides the CSV `report` contract, this module emits machine-readable
-``BENCH_prefill.json`` / ``BENCH_decode.json`` (into $BENCH_DIR, default
-cwd) so the perf trajectory is tracked across PRs. Set BENCH_SMOKE=1 for
-CI-sized shapes.
+``BENCH_prefill.json`` / ``BENCH_decode.json`` / ``BENCH_ring.json`` (into
+$BENCH_DIR, default cwd) so the perf trajectory is tracked across PRs. Set
+BENCH_SMOKE=1 for CI-sized shapes.
 """
 
 from __future__ import annotations
@@ -25,6 +29,8 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -118,6 +124,93 @@ def run(report):
 
     _emit_json("BENCH_prefill.json", {"rows": prefill_rows})
     _emit_json("BENCH_decode.json", _bench_decode(report, smoke))
+    _emit_json("BENCH_ring.json", _bench_ring(report, smoke))
+
+
+_RING_PROG = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys, time
+import jax, jax.numpy as jnp, numpy as np
+
+smoke = bool(int(sys.argv[1]))
+from repro.core.attention import MaskSpec, flash_attention
+from repro.distributed.context import cp_decode, ring_prefill
+from repro.kernels.tuning import choose_ring_schedule
+
+def bench(fn, iters=3):
+    jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+mesh = jax.make_mesh((8,), ("data",))
+rng = np.random.default_rng(0)
+b, s, h, d = (1, 256, 2, 32) if smoke else (1, 2048, 4, 64)
+q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+k = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+v = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+out = {"n_devices": 8, "prefill": [], "decode": {}}
+for kind, window in [("causal", 0), ("local", s // 4)]:
+    mask = MaskSpec(kind, window=window)
+    ring = jax.jit(lambda q, k, v, m=mask: ring_prefill(
+        q, k, v, axis="data", mesh=mesh, mask=m, impl="flashd"))
+    base = jax.jit(lambda q, k, v, m=mask: flash_attention(
+        q, k, v, mask=m, impl="flashd"))
+    t_ring = bench(lambda: ring(q, k, v))
+    t_base = bench(lambda: base(q, k, v))
+    sched = choose_ring_schedule(s // 8, s // 8, d, d, n_devices=8, mask=mask)
+    out["prefill"].append({
+        "mask": kind, "window": window, "batch": b, "seq": s, "heads": h,
+        "head_dim": d, "live_hops": sched.n_hops,
+        "tokens_per_sec_ring": b * s / t_ring,
+        "tokens_per_sec_replicated": b * s / t_base,
+    })
+
+bd, S = (2, 256) if smoke else (2, 4096)
+qd = jnp.asarray(rng.normal(size=(bd, h, d)), jnp.float32)
+kc = jnp.asarray(rng.normal(size=(bd, S, h, d)), jnp.float32)
+vc = jnp.asarray(rng.normal(size=(bd, S, h, d)), jnp.float32)
+cl = jnp.full((bd,), S, jnp.int32)
+cpd = jax.jit(lambda q, k, v, c: cp_decode(
+    q, k, v, c, axis="data", mesh=mesh, use_kernel=False))
+t_cp = bench(lambda: cpd(qd, kc, vc, cl))
+out["decode"] = {"batch": bd, "cache_len": S, "heads": h, "head_dim": d,
+                 "tokens_per_sec_cp": bd / t_cp}
+print(json.dumps(out))
+"""
+
+
+def _bench_ring(report, smoke: bool) -> dict:
+    """Ring context-parallel prefill/decode on a simulated 8-device mesh.
+
+    Runs in a subprocess (XLA device count is fixed at first jax use, so
+    this process cannot re-host 8 devices itself). Numbers are CPU-host
+    relative — the tracked signal is ring-vs-replicated on equal shapes
+    and the live-hop count, not absolute throughput."""
+    res = subprocess.run(
+        [sys.executable, "-c", _RING_PROG, "1" if smoke else "0"],
+        capture_output=True, text=True, timeout=1200,
+        env={**os.environ, "JAX_PLATFORMS": "cpu", "XLA_FLAGS": "",
+             "PYTHONPATH": os.environ.get("PYTHONPATH", "src")},
+    )
+    if res.returncode != 0:
+        # fail the job like the in-process benches do — a silent error blob
+        # in BENCH_ring.json would erase the tracked perf signal unnoticed
+        raise RuntimeError(f"ring bench subprocess failed:\n{res.stderr}")
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    for row in out["prefill"]:
+        report(
+            f"ring_prefill_{row['mask']}_tok_per_s", row["tokens_per_sec_ring"],
+            f"replicated={row['tokens_per_sec_replicated']:.1f} "
+            f"live_hops={row['live_hops']}/8 seq={row['seq']}",
+        )
+    report("cp_decode_tok_per_s", out["decode"]["tokens_per_sec_cp"],
+           f"cache={out['decode']['cache_len']} b={out['decode']['batch']}")
+    return out
 
 
 def _bench_decode(report, smoke: bool) -> dict:

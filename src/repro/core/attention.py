@@ -148,13 +148,29 @@ def flash_attention(
     """Multi-head GQA attention. q [B,Sq,Hq,d]; k,v [B,Skv,Hkv,·].
 
     block_q / block_k = None resolves the tiling from the VMEM-budget
-    heuristics in repro.kernels.tuning (shape-static, so jit-stable)."""
+    heuristics in repro.kernels.tuning (shape-static, so jit-stable).
+
+    Context parallelism: when the active ShardingCtx opts into prefill CP
+    (`cp_prefill=True`) and the kv_cache rule seq-shards these operands,
+    the call routes to the ring schedule in repro.distributed.context —
+    per-shard kernels + cross-device FLASH-D Λ-merge, no score gather.
+    That path is forward-only (serving/prefill)."""
     if q.ndim != 4 or k.ndim != 4 or v.ndim != 4:
         raise ValueError("expected [batch, seq, heads, dim] operands")
     if q.shape[2] % k.shape[2] != 0:
         raise ValueError(f"Hq={q.shape[2]} not a multiple of Hkv={k.shape[2]}")
     if scale is None:
         scale = float(1.0 / (q.shape[-1] ** 0.5))
+
+    from repro.distributed.context import maybe_ring_prefill  # lazy: no cycle
+
+    o_cp = maybe_ring_prefill(
+        q, k, v, mask=mask, scale=scale, impl=impl,
+        block_q=block_q, block_k=block_k, skip=skip,
+    )
+    if o_cp is not None:
+        return o_cp
+
     if block_q is None or block_k is None:
         from repro.kernels.tuning import choose_prefill_blocks  # lazy: no cycle
 
@@ -190,6 +206,12 @@ def decode_attention(
     n_splits=None asks repro.kernels.tuning for a split count; the cache
     is zero-padded up to a multiple of it (padded slots are masked), the
     same convention as the pallas kernel.
+
+    When the active ShardingCtx seq-shards this cache (context parallel —
+    see `sharding.cp_axis_for_cache`), the call routes to
+    `repro.distributed.context.cp_decode`: per-shard partials + a log-depth
+    cross-device butterfly of the same blend, so the wire carries (O, Λ)
+    messages instead of a gathered cache.
     """
     b, _, hq, d = q.shape
     s_max = k_cache.shape[1]
@@ -197,6 +219,18 @@ def decode_attention(
     g = hq // hkv
     if scale is None:
         scale = float(1.0 / (d ** 0.5))
+
+    from repro.distributed.context import maybe_cp_decode  # lazy: no cycle
+
+    o_cp = maybe_cp_decode(
+        q, k_cache, v_cache, cache_len, scale=scale, window=window,
+        chunk=chunk, n_splits=n_splits,
+        # kernel-free per-shard partials, like the rest of this function
+        # (dry-runs, any backend)
+        use_kernel=False,
+    )
+    if o_cp is not None:
+        return o_cp
     if n_splits is None:
         from repro.kernels.tuning import choose_decode_split  # lazy: no cycle
 

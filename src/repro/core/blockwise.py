@@ -30,7 +30,9 @@ __all__ = [
     "blockwise_flashd",
     "blockwise_fa2",
     "blockwise_backward",
+    "merge_pair",
     "merge_partials",
+    "tile_live",
     "DEFAULT_SKIP_THETA",
 ]
 
@@ -97,6 +99,31 @@ class MaskSpec:
         if self.kind == "chunked" and q_lo // self.chunk > (k_hi - 1) // self.chunk:
             return True
         return False
+
+
+def tile_live(mask: MaskSpec, iq, ik, block_q: int, block_k: int, kv_len: int):
+    """Traced-index tile liveness: is tile (iq, ik) possibly inside the mask?
+
+    The dynamic analogue of `MaskSpec.block_fully_masked` for block *indices*
+    (Pallas `program_id`s or loop counters). Shared by the fwd/bwd Pallas
+    kernels and the jnp recurrences so the pruning predicate exists exactly
+    once. `kv_len` bounds the key axis for 'full' masks (padded tails)."""
+    if mask.kind in ("causal", "local", "chunked"):
+        live = (ik * block_k) <= (iq * block_q + block_q - 1 + mask.q_offset)
+        if mask.kind == "local":
+            live = jnp.logical_and(
+                live,
+                (iq * block_q + mask.q_offset) - (ik * block_k + block_k - 1)
+                < mask.window,
+            )
+        if mask.kind == "chunked":
+            live = jnp.logical_and(
+                live,
+                (iq * block_q + mask.q_offset) // mask.chunk
+                <= (ik * block_k + block_k - 1) // mask.chunk,
+            )
+        return live
+    return ik * block_k < kv_len
 
 
 def _pad_to_multiple(x: jax.Array, block: int, axis: int, value=0.0):
@@ -339,32 +366,50 @@ def blockwise_backward(
     return dq.astype(q.dtype), dk.astype(k.dtype), dv_out.astype(v.dtype)
 
 
+def merge_pair(a, b):
+    """One FLASH-D blend of two attention partials: (o_a, Λ_a) ⊕ (o_b, Λ_b).
+
+    o = o_a + (o_b − o_a)·σ(Λ_b − Λ_a) — one sigmoid + one FMA, vs. FA2's
+    two exp-rescales + division. The operator is associative AND commutative
+    in (O, Λ) (it is the Λ-weighted mean with Λ = logaddexp), so partials may
+    be reduced in any order: sequential carries (the fused decode kernel),
+    log-depth trees (`merge_partials`), or cross-device butterflies
+    (`repro.distributed.context`). Dead partials (Λ ≤ NEG_INF/2) are
+    identity elements."""
+    o_a, lam_a = a
+    o_b, lam_b = b
+    w = jax.nn.sigmoid(lam_b - lam_a)
+    dead_b = lam_b <= NEG_INF / 2
+    dead_a = lam_a <= NEG_INF / 2
+    w = jnp.where(dead_b, 0.0, jnp.where(dead_a, 1.0, w))
+    o = o_a + (o_b - o_a) * w[..., None]
+    ln_w1 = jax.nn.log_sigmoid(lam_a - lam_b)  # ln(1−w)
+    lam = jnp.where(
+        dead_b, lam_a, jnp.where(dead_a, lam_b, lam_a - ln_w1)
+    )
+    return o, lam
+
+
 def merge_partials(o_parts: jax.Array, lam_parts: jax.Array):
     """FLASH-D merge of split-K partial attention results (beyond-paper).
 
-    o_parts [P, ..., dv], lam_parts [P, ...] → merged (o, Λ). Each pairwise
-    merge is one sigmoid + one FMA:  o = o_a + (o_b − o_a)·σ(Λ_b − Λ_a),
-    vs. FA2's two exp-rescales + division. Used by the decode kernel and by
-    context-parallel long-sequence serving.
+    o_parts [P, ..., dv], lam_parts [P, ...] → merged (o, Λ). Reduced as a
+    log-depth pairwise tree (⌈log₂ P⌉ vectorized `merge_pair` levels) rather
+    than a sequential scan — the blend is associative, so the tree is exact
+    in real arithmetic and O(log P) on the critical path, which is what the
+    unfused decode path and cross-device context-parallel merges want.
     """
-
-    def merge(a, b):
-        o_a, lam_a = a
-        o_b, lam_b = b
-        w = jax.nn.sigmoid(lam_b - lam_a)
-        dead_b = lam_b <= NEG_INF / 2
-        dead_a = lam_a <= NEG_INF / 2
-        w = jnp.where(dead_b, 0.0, jnp.where(dead_a, 1.0, w))
-        o = o_a + (o_b - o_a) * w[..., None]
-        ln_w1 = jax.nn.log_sigmoid(lam_a - lam_b)  # ln(1−w)
-        lam = jnp.where(
-            dead_b, lam_a, jnp.where(dead_a, lam_b, lam_a - ln_w1)
+    o, lam = o_parts, lam_parts
+    while o.shape[0] > 1:
+        n = o.shape[0]
+        half = n // 2
+        pair = merge_pair(
+            (o[0 : 2 * half : 2], lam[0 : 2 * half : 2]),
+            (o[1 : 2 * half : 2], lam[1 : 2 * half : 2]),
         )
-        return o, lam
-
-    def scan_merge(carry, xs):
-        return merge(carry, xs), None
-
-    (o0, l0) = (o_parts[0], lam_parts[0])
-    (o, lam), _ = jax.lax.scan(scan_merge, (o0, l0), (o_parts[1:], lam_parts[1:]))
-    return o, lam
+        if n % 2:  # odd leftover rides up to the next level
+            o = jnp.concatenate([pair[0], o[-1:]], axis=0)
+            lam = jnp.concatenate([pair[1], lam[-1:]], axis=0)
+        else:
+            o, lam = pair
+    return o[0], lam[0]

@@ -1,3 +1,7 @@
-from repro.distributed import sharding
+from repro.distributed import context, sharding
+from repro.distributed.context import cp_decode, ring_prefill
 from repro.distributed.pipeline import pipeline_apply, split_stages
-__all__ = ["sharding", "pipeline_apply", "split_stages"]
+__all__ = [
+    "context", "sharding", "pipeline_apply", "split_stages",
+    "cp_decode", "ring_prefill",
+]

@@ -36,17 +36,28 @@ __all__ = [
     "ShardingCtx",
     "mesh_ctx",
     "sharded_jit",
+    "cp_axis_for_cache",
+    "cp_batch_axes_for_cache",
 ]
 
 _TL = threading.local()
 
 
 class ShardingCtx:
-    def __init__(self, mesh: Mesh, *, use_sp: bool = True, fsdp_axis="data"):
+    def __init__(self, mesh: Mesh, *, use_sp: bool = True, fsdp_axis="data",
+                 use_cp: bool = True, cp_prefill: bool = False):
         """fsdp_axis: 'data' (default — params replicate across pods, grad
         all-reduce is hierarchical ICI→DCN) or ('pod','data') (ZeRO across
         pods too — halves state at the cost of DCN param all-gathers; the
-        only way 235B-scale training fits 16 GB/chip HBM)."""
+        only way 235B-scale training fits 16 GB/chip HBM).
+
+        use_cp: when the kv_cache rule seq-shards a cache (see
+        `cp_axis_for_cache`), route decode attention through the
+        cross-device FLASH-D merge (`repro.distributed.context.cp_decode`)
+        instead of letting GSPMD gather the cache. cp_prefill additionally
+        routes `flash_attention` through the ring-prefill schedule — off by
+        default because the ring path is forward-only (serving/prefill);
+        training keeps the differentiable GSPMD lowering."""
         self.mesh = mesh
         self.axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
         self.use_sp = use_sp
@@ -64,6 +75,8 @@ class ShardingCtx:
         # wins whenever tokens ≫ weights (32k prefill: weights/layer ~270 MB
         # bf16 vs ~1 GiB f32 activation all-reduce; §Perf lever 'notp')
         self.tp_activations = True
+        self.use_cp = use_cp
+        self.cp_prefill = cp_prefill
 
     @property
     def batch_axes(self) -> Tuple[str, ...]:
@@ -145,17 +158,27 @@ def sharded_jit(fn, *, in_shardings=None, out_shardings=None, mesh=None, **jit_k
 
 
 def _fit(ctx: ShardingCtx, dim_size: int, axes):
-    """Return axes if dim_size divides by their product, else None."""
+    """Return axes if dim_size divides by their product, else None.
+
+    Axes absent from the active mesh never shard: their size defaults to 1
+    (always divides), but naming them in a spec would be a mesh-resolution
+    error — e.g. the kv_cache rule on a ('data',)-only serving mesh."""
     if axes is None:
+        return None
+    if isinstance(axes, str):
+        if axes not in ctx.axis_sizes:
+            return None
+        return axes if dim_size % ctx.axis_size(axes) == 0 else None
+    axes = tuple(a for a in axes if a in ctx.axis_sizes)
+    if not axes:
         return None
     if dim_size % ctx.axis_size(axes) == 0:
         return axes
     # try a prefix (e.g. ('pod','data') → ('pod',)) before giving up
-    if isinstance(axes, tuple) and len(axes) > 1:
-        for cut in range(len(axes) - 1, 0, -1):
-            sub = axes[:cut]
-            if dim_size % ctx.axis_size(sub) == 0:
-                return sub
+    for cut in range(len(axes) - 1, 0, -1):
+        sub = axes[:cut]
+        if dim_size % ctx.axis_size(sub) == 0:
+            return sub
     return None
 
 
@@ -218,6 +241,43 @@ def _kv_cache_spec(c: ShardingCtx, s):
     return P(None, _fit(c, s[1], "data"), h, None)
 
 
+def cp_axis_for_cache(shape) -> Optional[str]:
+    """Mesh axis the kv_cache rule puts on the SEQUENCE dim of a
+    [B, S, H, hd] cache (context parallelism), or None.
+
+    This is the selector for the cross-device FLASH-D merge paths
+    (`repro.distributed.context`): when the rules engine decides a cache is
+    seq-sharded (batch too small, or heads not divisible by TP), attention
+    must merge per-shard (O, Λ) partials instead of gathering the cache."""
+    ctx = active_ctx()
+    if ctx is None or ctx.mesh is None or not getattr(ctx, "use_cp", True):
+        return None
+    if len(shape) != 4:
+        return None
+    spec = _kv_cache_spec(ctx, tuple(shape))
+    ax = spec[1] if len(spec) > 1 else None
+    if isinstance(ax, tuple):
+        ax = ax[0] if len(ax) == 1 else None
+    if ax is None:
+        return None
+    n = ctx.axis_size(ax)
+    return ax if n > 1 and shape[1] % n == 0 else None
+
+
+def cp_batch_axes_for_cache(shape) -> Optional[Tuple[str, ...]]:
+    """Mesh axes the kv_cache rule puts on the BATCH dim of a [B, S, H, hd]
+    cache. The context-parallel paths keep this sharding inside their
+    shard_map (heads-not-divisible CP shards batch over data AND seq over
+    model — replicating batch there would re-gather the cache)."""
+    ctx = active_ctx()
+    if ctx is None or ctx.mesh is None or len(shape) != 4:
+        return None
+    ax = _kv_cache_spec(ctx, tuple(shape))[0]
+    if ax is None:
+        return None
+    return (ax,) if isinstance(ax, str) else tuple(ax)
+
+
 _TP_KINDS = ("ff", "heads", "logits", "experts", "moe_dispatch")
 
 
@@ -269,7 +329,7 @@ def _param_rule(ctx: ShardingCtx, path: str, shape: Tuple[int, ...]) -> P:
         tp_dim = 0
 
     spec = [None] * nd
-    if tp_dim is not None and nd >= 1:
+    if tp_dim is not None and nd >= 1 and "model" in ctx.axis_sizes:
         if shape[tp_dim] % ctx.axis_size("model") == 0:
             spec[tp_dim] = "model"
     # FSDP: biggest dim not already sharded (params ≥ 2 dims, skip tiny)

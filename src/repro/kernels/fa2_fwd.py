@@ -29,7 +29,7 @@ except Exception:  # pragma: no cover
     pltpu = None
     _HAS_PLTPU = False
 
-from repro.core.blockwise import MaskSpec, NEG_INF
+from repro.core.blockwise import MaskSpec, NEG_INF, tile_live
 from repro.kernels.flashd_fwd import _mask_bias
 
 __all__ = ["fa2_fwd_pallas"]
@@ -59,22 +59,8 @@ def _fa2_kernel(
     q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q,), 0)
     k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_k,), 0)
 
-    if mask.kind in ("causal", "local", "chunked"):
-        compute = (ik * block_k) <= (iq * block_q + block_q - 1 + mask.q_offset)
-        if mask.kind == "local":
-            compute = jnp.logical_and(
-                compute,
-                (iq * block_q + mask.q_offset) - (ik * block_k + block_k - 1)
-                < mask.window,
-            )
-        if mask.kind == "chunked":
-            compute = jnp.logical_and(
-                compute,
-                (iq * block_q + mask.q_offset) // mask.chunk
-                <= (ik * block_k + block_k - 1) // mask.chunk,
-            )
-    else:
-        compute = ik * block_k < kv_len
+    # shared static tile pruning (one predicate for fwd/bwd/fa2 kernels)
+    compute = tile_live(mask, iq, ik, block_q, block_k, kv_len)
 
     @pl.when(compute)
     def _body():

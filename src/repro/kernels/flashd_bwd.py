@@ -33,29 +33,10 @@ except Exception:  # pragma: no cover
     pltpu = None
     _HAS_PLTPU = False
 
-from repro.core.blockwise import MaskSpec, NEG_INF
+from repro.core.blockwise import MaskSpec, NEG_INF, tile_live
 from repro.kernels.flashd_fwd import _mask_bias
 
 __all__ = ["flashd_bwd_pallas"]
-
-
-def _tile_live(mask: MaskSpec, iq, ik, block_q, block_k, kv_len):
-    if mask.kind in ("causal", "local", "chunked"):
-        live = (ik * block_k) <= (iq * block_q + block_q - 1 + mask.q_offset)
-        if mask.kind == "local":
-            live = jnp.logical_and(
-                live,
-                (iq * block_q + mask.q_offset) - (ik * block_k + block_k - 1)
-                < mask.window,
-            )
-        if mask.kind == "chunked":
-            live = jnp.logical_and(
-                live,
-                (iq * block_q + mask.q_offset) // mask.chunk
-                <= (ik * block_k + block_k - 1) // mask.chunk,
-            )
-        return live
-    return ik * block_k < kv_len
 
 
 def _recompute_p_ds(q, k, v, do, lam, dsum, q_pos, k_pos, mask, scale, kv_len):
@@ -84,7 +65,7 @@ def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lam_ref, dsum_ref, dq_ref, acc_ref,
     q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q,), 0)
     k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_k,), 0)
 
-    @pl.when(_tile_live(mask, iq, ik, block_q, block_k, kv_len))
+    @pl.when(tile_live(mask, iq, ik, block_q, block_k, kv_len))
     def _body():
         _, ds = _recompute_p_ds(
             q_ref[0, 0].astype(jnp.float32), k_ref[0, 0].astype(jnp.float32),
@@ -115,7 +96,7 @@ def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lam_ref, dsum_ref,
     q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q,), 0)
     k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_k,), 0)
 
-    @pl.when(_tile_live(mask, iq, ik, block_q, block_k, kv_len))
+    @pl.when(tile_live(mask, iq, ik, block_q, block_k, kv_len))
     def _body():
         q = q_ref[0, 0].astype(jnp.float32)
         do = do_ref[0, 0].astype(jnp.float32)

@@ -19,17 +19,20 @@ fused=True (default) — the split axis is the innermost sequential
 
 fused=False — the historical multi-output form: every split writes its
   (o_p, λ_p) to HBM and the merge runs on the host graph via
-  `merge_partials`. Kept as the oracle for the fused kernel (the fused
-  carry performs the same operations in the same order, so the two paths
-  agree to ~2 f32 ulps — separately compiled XLA programs may contract
-  FMAs differently, so strict bitwise equality is not guaranteed) and as
-  the cross-device merge building block for context-parallel caches
-  (see repro.serve).
+  `merge_partials` (a log-depth pairwise tree of the same blend — the op
+  sequence differs from the fused carry's sequential order, but the blend
+  is associative, so the two paths agree to a few f32 ulps). Kept as the
+  oracle for the fused kernel and as the cross-device merge building block
+  for context-parallel caches (repro.distributed.context).
 
-Dynamic cache length enters as a scalar operand (an i32 array indexed per
-batch row) and masks padded cache slots inside the kernel. Sliding-window /
-chunked masks for recurrentgemma / llama4 decode are applied in-kernel, so
-only live splits do work (`pl.when` on split bounds).
+Dynamic cache bounds enter as scalar operands (i32 arrays indexed per batch
+row): `cache_len` is the exclusive upper bound and the optional `start` a
+per-row inclusive lower bound — context-parallel callers use it to clip a
+globally-windowed live region [start, cache_len) to their shard. Sliding-
+window / chunked masks for recurrentgemma / llama4 decode are applied
+in-kernel, so only live splits do work (`pl.when` on split bounds).
+`return_lam=True` additionally emits the merged Λ [B, Hq], which is what a
+cross-device merge needs to keep blending.
 """
 
 from __future__ import annotations
@@ -54,13 +57,13 @@ from repro.core.blockwise import NEG_INF, merge_partials
 __all__ = ["flashd_decode_pallas"]
 
 
-def _split_partial(cache_len, q_ref, k_ref, v_ref, *, lo, split, window, chunk, scale):
+def _split_partial(cache_len, start, q_ref, k_ref, v_ref, *, lo, split, window, chunk, scale):
     """Per-split normalized partial (o_p [G, dv], λ_p [G]) — shared by the
     fused and unfused kernels so their per-split arithmetic is identical."""
     q = q_ref[0, 0].astype(jnp.float32)  # [G, d]
     k = k_ref[0, 0].astype(jnp.float32)  # [split, d]
     v = v_ref[0, 0].astype(jnp.float32)  # [split, dv]
-    lo_bound = _lo_bound(cache_len, window=window, chunk=chunk)
+    lo_bound = _lo_bound(cache_len, start, window=window, chunk=chunk)
     pos = lo + jax.lax.broadcasted_iota(jnp.int32, (split,), 0)
     s = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
@@ -83,8 +86,10 @@ def _split_partial(cache_len, q_ref, k_ref, v_ref, *, lo, split, window, chunk, 
     return pv * c[:, None], lam
 
 
-def _lo_bound(cache_len, *, window: int, chunk: int):
-    lo_bound = jnp.int32(0)
+def _lo_bound(cache_len, start, *, window: int, chunk: int):
+    """Inclusive lower bound of the live region: window/chunk structure ∨
+    the caller's explicit per-row `start` (context-parallel shard clip)."""
+    lo_bound = jnp.maximum(jnp.int32(0), start)
     if window > 0:
         lo_bound = jnp.maximum(lo_bound, cache_len - window)
     if chunk > 0:
@@ -92,25 +97,29 @@ def _lo_bound(cache_len, *, window: int, chunk: int):
     return lo_bound
 
 
-def _split_live(cache_len, lo, split, *, window: int, chunk: int):
+def _split_live(cache_len, start, lo, split, *, window: int, chunk: int):
     """A split is live iff it overlaps [lo_bound, cache_len)."""
-    lo_bound = _lo_bound(cache_len, window=window, chunk=chunk)
+    lo_bound = _lo_bound(cache_len, start, window=window, chunk=chunk)
     return jnp.logical_and(lo < cache_len, lo + split > lo_bound)
 
 
 def _decode_fused_kernel(
-    cache_len_ref, q_ref, k_ref, v_ref,
-    o_ref,
-    acc_ref, lam_scratch,  # VMEM carry across splits
-    *,
+    cache_len_ref, start_ref, q_ref, k_ref, v_ref,
+    *refs,  # outputs (o [, λ]) then VMEM scratch (acc, Λ carry)
     split: int,
     n_splits: int,
     window: int,
     chunk: int,
     scale: float,
+    emit_lam: bool,
 ):
+    if emit_lam:
+        o_ref, lam_ref, acc_ref, lam_scratch = refs
+    else:
+        (o_ref, acc_ref, lam_scratch), lam_ref = refs, None
     ip = pl.program_id(2)  # innermost, sequential
     cache_len = cache_len_ref[0, 0]
+    start = start_ref[0, 0]
     lo = ip * split
 
     @pl.when(ip == 0)
@@ -118,14 +127,14 @@ def _decode_fused_kernel(
         acc_ref[...] = jnp.zeros_like(acc_ref)
         lam_scratch[...] = jnp.full_like(lam_scratch, NEG_INF)
 
-    @pl.when(_split_live(cache_len, lo, split, window=window, chunk=chunk))
+    @pl.when(_split_live(cache_len, start, lo, split, window=window, chunk=chunk))
     def _body():
         o_p, lam_p = _split_partial(
-            cache_len, q_ref, k_ref, v_ref,
+            cache_len, start, q_ref, k_ref, v_ref,
             lo=lo, split=split, window=window, chunk=chunk, scale=scale,
         )
-        # FLASH-D sigmoid merge into the carry — the same op sequence as
-        # blockwise.merge_partials, so fused tracks unfused to ~2 ulps.
+        # FLASH-D sigmoid merge into the carry — the same blend op as
+        # blockwise.merge_pair, applied sequentially along the split axis.
         lam_run = lam_scratch[0]
         w = jax.nn.sigmoid(lam_p - lam_run)
         dead_b = lam_p <= NEG_INF / 2
@@ -141,10 +150,12 @@ def _decode_fused_kernel(
     @pl.when(ip == n_splits - 1)
     def _finalize():
         o_ref[0, 0] = acc_ref[...].astype(o_ref.dtype)
+        if emit_lam:
+            lam_ref[0, 0] = lam_scratch[0]
 
 
 def _decode_unfused_kernel(
-    cache_len_ref, q_ref, k_ref, v_ref,
+    cache_len_ref, start_ref, q_ref, k_ref, v_ref,
     o_ref, lam_ref,
     *,
     split: int,
@@ -154,13 +165,14 @@ def _decode_unfused_kernel(
 ):
     ip = pl.program_id(2)
     cache_len = cache_len_ref[0, 0]
+    start = start_ref[0, 0]
     lo = ip * split
-    live = _split_live(cache_len, lo, split, window=window, chunk=chunk)
+    live = _split_live(cache_len, start, lo, split, window=window, chunk=chunk)
 
     @pl.when(live)
     def _body():
         o_p, lam = _split_partial(
-            cache_len, q_ref, k_ref, v_ref,
+            cache_len, start, q_ref, k_ref, v_ref,
             lo=lo, split=split, window=window, chunk=chunk, scale=scale,
         )
         o_ref[0, 0, :, 0, :] = o_p.astype(o_ref.dtype)
@@ -182,15 +194,21 @@ def flashd_decode_pallas(
     n_splits: Optional[int] = None,
     window: int = 0,
     chunk: int = 0,
+    start: Optional[jax.Array] = None,  # [B] i32 inclusive lower bound
     fused: bool = True,
+    return_lam: bool = False,
     interpret: bool = False,
 ):
-    """Returns o [B, Hq, dv]. Split partials merged with the FLASH-D blend.
+    """Returns o [B, Hq, dv] (or (o, Λ [B, Hq] f32) with return_lam=True).
+    Split partials merged with the FLASH-D blend.
 
     n_splits=None picks the split count from the tuning heuristics
     (repro.kernels.tuning). fused=True merges in VMEM (single HBM output);
     fused=False emits per-split HBM partials and merges on the host graph
-    (the oracle path).
+    (the oracle path). `start` clips the live region to [start, cache_len)
+    per batch row — context-parallel callers pass their shard's slice of a
+    globally-windowed region; `return_lam` exposes the merged Λ so those
+    callers can keep blending partials across devices.
     """
     b, hq, d = q.shape
     _, hkv, s_max, dv = v_cache.shape
@@ -212,8 +230,13 @@ def flashd_decode_pallas(
 
     qg = q.reshape(b, hkv, g, d)
     cache_len = jnp.asarray(cache_len, jnp.int32).reshape(b, 1)
+    if start is None:
+        start = jnp.zeros((b, 1), jnp.int32)
+    else:
+        start = jnp.asarray(start, jnp.int32).reshape(b, 1)
 
     in_specs = [
+        pl.BlockSpec((1, 1), lambda b_, h, ip: (b_, 0)),
         pl.BlockSpec((1, 1), lambda b_, h, ip: (b_, 0)),
         pl.BlockSpec((1, 1, g, d), lambda b_, h, ip: (b_, h, 0, 0)),
         pl.BlockSpec((1, 1, split, d), lambda b_, h, ip: (b_, h, ip, 0)),
@@ -224,7 +247,7 @@ def flashd_decode_pallas(
     if fused and _HAS_PLTPU:
         kernel = functools.partial(
             _decode_fused_kernel, split=split, n_splits=n_splits,
-            window=window, chunk=chunk, scale=scale,
+            window=window, chunk=chunk, scale=scale, emit_lam=return_lam,
         )
         try:
             compiler_params = pltpu.CompilerParams(
@@ -232,14 +255,19 @@ def flashd_decode_pallas(
             )
         except Exception:  # older/newer API name drift
             compiler_params = None
+        # one output block revisited across splits — written once, at the
+        # last split, from the VMEM carry: no per-split HBM partials
+        out_specs = [pl.BlockSpec((1, 1, g, dv), lambda b_, h, ip: (b_, h, 0, 0))]
+        out_shape = [jax.ShapeDtypeStruct((b, hkv, g, dv), q.dtype)]
+        if return_lam:
+            out_specs.append(pl.BlockSpec((1, 1, g), lambda b_, h, ip: (b_, h, 0)))
+            out_shape.append(jax.ShapeDtypeStruct((b, hkv, g), jnp.float32))
         call = pl.pallas_call(
             kernel,
             grid=grid,
             in_specs=in_specs,
-            # one output block revisited across splits — written once, at the
-            # last split, from the VMEM carry: no per-split HBM partials
-            out_specs=pl.BlockSpec((1, 1, g, dv), lambda b_, h, ip: (b_, h, 0, 0)),
-            out_shape=jax.ShapeDtypeStruct((b, hkv, g, dv), q.dtype),
+            out_specs=out_specs if return_lam else out_specs[0],
+            out_shape=out_shape if return_lam else out_shape[0],
             scratch_shapes=[
                 pltpu.VMEM((g, dv), jnp.float32),
                 pltpu.VMEM((1, g), jnp.float32),
@@ -247,8 +275,11 @@ def flashd_decode_pallas(
             interpret=interpret,
             **({"compiler_params": compiler_params} if compiler_params else {}),
         )
-        o = call(cache_len, qg, k_cache, v_cache)
-        return o.reshape(b, hq, dv)
+        out = call(cache_len, start, qg, k_cache, v_cache)
+        if return_lam:
+            o, lam = out
+            return o.reshape(b, hq, dv), lam.reshape(b, hq)
+        return out.reshape(b, hq, dv)
 
     kernel = functools.partial(
         _decode_unfused_kernel, split=split, window=window, chunk=chunk, scale=scale
@@ -269,9 +300,12 @@ def flashd_decode_pallas(
         out_shape=out_shape,
         interpret=interpret,
     )
-    o_p, lam_p = call(cache_len, qg, k_cache, v_cache)
-    # FLASH-D sigmoid merge over splits (axis moved to front for the scan)
+    o_p, lam_p = call(cache_len, start, qg, k_cache, v_cache)
+    # FLASH-D sigmoid merge over splits (axis moved to front for the tree)
     o_p = jnp.moveaxis(o_p, 3, 0)  # [P, B, Hkv, G, dv]
     lam_p = jnp.moveaxis(lam_p, 3, 0)
-    o, _ = merge_partials(o_p, lam_p)
-    return o.reshape(b, hq, dv).astype(q.dtype)
+    o, lam = merge_partials(o_p, lam_p)
+    o = o.reshape(b, hq, dv).astype(q.dtype)
+    if return_lam:
+        return o, lam.reshape(b, hq)
+    return o

@@ -42,7 +42,7 @@ except Exception:  # pragma: no cover
     pltpu = None
     _HAS_PLTPU = False
 
-from repro.core.blockwise import MaskSpec, NEG_INF, DEFAULT_SKIP_THETA
+from repro.core.blockwise import MaskSpec, NEG_INF, DEFAULT_SKIP_THETA, tile_live
 
 __all__ = ["flashd_fwd_pallas"]
 
@@ -90,27 +90,13 @@ def _flashd_kernel(
     q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q,), 0)
     k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_k,), 0)
 
-    # static tile pruning: tiles fully outside the mask never compute
-    q_lo, q_hi = 0, 0  # dynamic grid → use dynamic check instead
-    if mask.kind in ("causal", "local", "chunked"):
-        compute = (ik * block_k) <= (iq * block_q + block_q - 1 + mask.q_offset)
-        if mask.kind == "local":
-            compute = jnp.logical_and(
-                compute,
-                (iq * block_q + mask.q_offset) - (ik * block_k + block_k - 1)
-                < mask.window,
-            )
-        if mask.kind == "chunked":
-            compute = jnp.logical_and(
-                compute,
-                (iq * block_q + mask.q_offset) // mask.chunk
-                <= (ik * block_k + block_k - 1) // mask.chunk,
-            )
-    else:
-        compute = ik * block_k < kv_len
+    # static tile pruning: tiles fully outside the mask never compute;
     # fully-padded q tiles (from pad_q) have no live rows: skip their whole
     # kv loop rather than running it into masked-out scores
-    compute = jnp.logical_and(compute, iq * block_q < q_len)
+    compute = jnp.logical_and(
+        tile_live(mask, iq, ik, block_q, block_k, kv_len),
+        iq * block_q < q_len,
+    )
 
     @pl.when(compute)
     def _body():

@@ -9,7 +9,12 @@ caller does not pin one explicitly:
       fits a configurable budget, preferring MXU-friendly multiples of 128;
   decode — (n_splits, split) per (S_max, d, dv, G), sized so one split's
       KV block (+ the [G, split] score tile) fits the budget with splits
-      long enough to amortize DMA issue overhead.
+      long enough to amortize DMA issue overhead;
+  ring context-parallel prefill — per-hop (block_q, block_k) for the
+      per-shard kernel plus the number of *live* ring hops (structured
+      masks kill distant hops statically: a sliding window only ever needs
+      ⌈window/shard⌉ + 1 of the n_devices hops, so the ring stops early
+      and the dead hops' KV exchange never hits the wire).
 
 Two modes:
   heuristic (default) — closed-form from the shape and the VMEM budget;
@@ -27,11 +32,15 @@ from typing import Callable, Dict, Iterable, Optional, Sequence, Tuple
 
 import jax
 
+from repro.core.blockwise import MaskSpec
+
 __all__ = [
     "PrefillTiling",
     "DecodeSplit",
+    "RingSchedule",
     "choose_prefill_blocks",
     "choose_decode_split",
+    "choose_ring_schedule",
     "prefill_vmem_bytes",
     "decode_vmem_bytes",
     "measure_best",
@@ -58,6 +67,22 @@ class PrefillTiling:
 class DecodeSplit:
     n_splits: int
     split: int
+
+
+@dataclasses.dataclass(frozen=True)
+class RingSchedule:
+    """Static schedule for ring context-parallel prefill (DESIGN.md §4.1).
+
+    n_hops    — live hops; hop h puts each device's KV shard h shards
+                behind its q shard, so structured masks make distant hops
+                statically dead (a prefix of the ring suffices).
+    block_q/k — per-shard kernel tiling (from the prefill heuristics at
+                the shard shape).
+    """
+
+    n_hops: int
+    block_q: int
+    block_k: int
 
 
 def prefill_vmem_bytes(block_q: int, block_k: int, d: int, dv: int) -> int:
@@ -156,6 +181,44 @@ def choose_decode_split(
     n_splits = max(1, -(-s_max // split))
     split = -(-s_max // n_splits)  # actual padded split length
     return DecodeSplit(n_splits=n_splits, split=split)
+
+
+def choose_ring_schedule(
+    sq_shard: int,
+    skv_shard: int,
+    d: int,
+    dv: Optional[int] = None,
+    *,
+    n_devices: int,
+    mask: MaskSpec = MaskSpec("causal"),
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+) -> RingSchedule:
+    """Heuristic ring schedule for context-parallel prefill.
+
+    At hop h every device's resident KV shard sits exactly h shards behind
+    its q shard (canonical +1 ring rotation), so the hop's mask offset is
+    the *static* value h·skv_shard and hop liveness is decidable at trace
+    time: causal masks keep all n hops (wrapped shards are future ⇒ dead
+    per-device, handled dynamically), a sliding window keeps only hops with
+    h·S − (S−1) < window, chunked keeps hops inside the q chunk. Dead hops
+    are a suffix of the ring (offsets grow monotonically), so the schedule
+    is just the live-prefix length — later hops skip both the kernel and
+    the KV wire transfer entirely.
+    """
+    n_hops = n_devices
+    if mask.kind in ("causal", "local", "chunked"):
+        n_hops = 0
+        for h in range(n_devices):
+            hop = dataclasses.replace(mask, q_offset=mask.q_offset + h * skv_shard)
+            if hop.block_fully_masked(0, sq_shard, 0, skv_shard):
+                break
+            n_hops = h + 1
+    tiling = choose_prefill_blocks(
+        sq_shard, skv_shard, d, dv, vmem_budget=vmem_budget
+    )
+    return RingSchedule(
+        n_hops=max(n_hops, 1), block_q=tiling.block_q, block_k=tiling.block_k
+    )
 
 
 # ---------------------------------------------------------------------------

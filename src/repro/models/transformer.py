@@ -416,13 +416,23 @@ def _decode_attn(p, x, cfg: ModelConfig, kind: str, cache, pos):
         eff_len = write_idx + 1
     else:
         eff_len = pos + 1
-    if cfg.attn_impl.endswith("_pallas"):
-        # fused split-K decode kernel: in-VMEM sigmoid merge, no HBM partials
-        from repro.kernels import ops as kernel_ops  # lazy: avoid import cycle
+    from repro.distributed.context import maybe_cp_decode
 
-        o = kernel_ops.pallas_decode(q, k_cache, v_cache, eff_len)
-    else:
-        o = decode_attention(q, k_cache, v_cache, eff_len)
+    # seq-sharded cache (context parallel): per-shard decode partials
+    # merged across devices with the FLASH-D blend — no cache gather
+    o = maybe_cp_decode(
+        q, k_cache, v_cache, eff_len,
+        use_kernel=cfg.attn_impl.endswith("_pallas"),
+    )
+    if o is None:
+        if cfg.attn_impl.endswith("_pallas"):
+            # fused split-K decode kernel: in-VMEM sigmoid merge, no HBM
+            # partials
+            from repro.kernels import ops as kernel_ops  # lazy: no cycle
+
+            o = kernel_ops.pallas_decode(q, k_cache, v_cache, eff_len)
+        else:
+            o = decode_attention(q, k_cache, v_cache, eff_len)
     o = o.reshape(b, 1, cfg.n_heads * hd)
     y = jnp.einsum("bsh,hd->bsd", o, p["wo"].astype(cdt))
     return y, {"k": k_cache, "v": v_cache}

@@ -25,10 +25,19 @@ KV rings, SSM/RG-LRU layers hold recurrent state — so the same engine
 serves every assigned architecture. When `cfg.attn_impl` is a `*_pallas`
 impl, decode attention inside the scan runs the fused split-K kernel
 (`repro.kernels.flashd_decode`) with tuned splits.
+
+Sharded serving: pass a `repro.distributed.sharding.ShardingCtx` and the
+engine activates it (plus the ambient mesh) around every trace/dispatch,
+so the model's logical sharding constraints apply inside the jitted loops.
+When the rules engine seq-shards a KV cache (long-context, B too small to
+batch-shard), decode attention routes through the cross-device FLASH-D
+merge (`repro.distributed.context.cp_decode`) instead of gathering the
+cache (DESIGN.md §4.1).
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 from typing import Callable, Dict, List, Optional
@@ -66,10 +75,12 @@ def sample_token(logits: jax.Array, key, cfg: ServeConfig) -> jax.Array:
 
 
 class Engine:
-    def __init__(self, params, model_cfg: ModelConfig, serve_cfg: ServeConfig):
+    def __init__(self, params, model_cfg: ModelConfig, serve_cfg: ServeConfig,
+                 *, sharding_ctx=None):
         self.params = params
         self.mc = model_cfg
         self.sc = serve_cfg
+        self.ctx = sharding_ctx  # Optional[repro.distributed.sharding.ShardingCtx]
         self.api = get_model(model_cfg)
         self._decode = jax.jit(
             lambda p, c, t, pos: self.api.decode_step(p, c, t, pos, model_cfg)
@@ -78,6 +89,21 @@ class Engine:
         self.host_syncs = 0  # device→host transfers issued by this engine
         self._gen = jax.jit(self._gen_fn, static_argnums=(4,))
         self._chunk = jax.jit(self._chunk_fn, static_argnums=(5,))
+
+    def _scope(self):
+        """Sharding scope for traces/dispatches: activates the ctx and the
+        ambient mesh so logical constraints (and context-parallel routing)
+        resolve inside the jitted loops. No-op without a sharding_ctx."""
+        if self.ctx is None:
+            return contextlib.nullcontext()
+        from repro.distributed import sharding as shd  # lazy: optional dep
+
+        stack = contextlib.ExitStack()
+        stack.enter_context(shd.activate(self.ctx))
+        mctx = shd.mesh_ctx(self.ctx.mesh)
+        if hasattr(mctx, "__enter__"):
+            stack.enter_context(mctx)
+        return stack
 
     def _to_host(self, x) -> np.ndarray:
         """The engine's ONLY device→host sync point (counted for tests)."""
@@ -130,12 +156,13 @@ class Engine:
         """prompts [B, S_prompt] int32 (right-aligned, no padding support in
         this minimal path) → generated tokens [B, max_new_tokens]."""
         b, s = prompts.shape
-        cache = self.api.init_cache(b, self.sc.max_len, self.mc)
-        self._key, k = jax.random.split(self._key)
-        toks = self._gen(
-            self.params, jnp.asarray(prompts, jnp.int32), cache, k,
-            int(max_new_tokens),
-        )
+        with self._scope():
+            cache = self.api.init_cache(b, self.sc.max_len, self.mc)
+            self._key, k = jax.random.split(self._key)
+            toks = self._gen(
+                self.params, jnp.asarray(prompts, jnp.int32), cache, k,
+                int(max_new_tokens),
+            )
         return self._to_host(toks)
 
     # ---- continuous batching over a request queue ----
@@ -147,6 +174,10 @@ class Engine:
         as a batch-1 prefill into that slot's cache region — kept simple
         here; a production engine would chunk prefills into the decode
         batch)."""
+        with self._scope():
+            return self._serve_impl(requests, max_new_tokens)
+
+    def _serve_impl(self, requests: List[np.ndarray], max_new_tokens: int) -> List[np.ndarray]:
         results: List[Optional[np.ndarray]] = [None] * len(requests)
         queue = list(enumerate(requests))
         active: List[dict] = []

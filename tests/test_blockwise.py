@@ -119,6 +119,36 @@ def test_merge_partials_with_empty_split():
     np.testing.assert_allclose(o, o1, rtol=1e-6)
 
 
+def test_merge_partials_log_depth_and_odd_counts():
+    """merge_partials reduces as a pairwise tree: ⌈log₂P⌉ blend levels (one
+    vectorized sigmoid each) instead of a P−1-step sequential scan, and odd
+    partial counts carry the leftover up a level without loss."""
+    import math
+
+    rng = np.random.default_rng(13)
+    for p in (2, 3, 5, 8, 11):
+        q, k, v = _qkv(p, 6, p * 8, 8, 8)
+        parts = [
+            blockwise_flashd(
+                q, k[i * 8:(i + 1) * 8], v[i * 8:(i + 1) * 8],
+                mask=MaskSpec("full"), scale=1.0, block_q=8, block_k=8,
+            )
+            for i in range(p)
+        ]
+        o_parts = jnp.stack([x[0] for x in parts])
+        lam_parts = jnp.stack([x[1] for x in parts])
+        o, lam = merge_partials(o_parts, lam_parts)
+        o_ref, lam_ref = _naive(q, k, v, MaskSpec("full"))
+        np.testing.assert_allclose(o, o_ref, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(lam, lam_ref, rtol=1e-4, atol=1e-4)
+        # log-depth witness: one sigmoid (logistic) per tree level — the
+        # old lax.scan form hid P−1 of them inside a scan body
+        jaxpr = jax.make_jaxpr(merge_partials)(o_parts, lam_parts)
+        n_sig = sum(1 for e in jaxpr.jaxpr.eqns if e.primitive.name == "logistic")
+        assert 1 <= n_sig <= math.ceil(math.log2(p)) + 1, (p, n_sig)
+        assert not any(e.primitive.name == "scan" for e in jaxpr.jaxpr.eqns)
+
+
 def test_fully_masked_rows():
     """chunked mask with q_offset can mask whole rows; output must be 0/finite."""
     q, k, v = _qkv(11, 8, 8, 4, 4)

@@ -6,6 +6,7 @@ single-device train step, sharding-rule divisibility fallbacks, MoE under
 expert parallelism.
 """
 
+import os
 import subprocess
 import sys
 import textwrap
@@ -18,6 +19,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.distributed import sharding as shd
 
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
 
 def _run_in_subprocess(code: str):
     """Run `code` with 8 forced host devices; raise on failure."""
@@ -25,9 +28,10 @@ def _run_in_subprocess(code: str):
     res = subprocess.run(
         [sys.executable, "-c", prog],
         capture_output=True, text=True, timeout=600,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
-        cwd="/root/repo",
+        env={"PYTHONPATH": os.path.join(_REPO, "src"),
+             "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+             "HOME": os.environ.get("HOME", "/root"), "JAX_PLATFORMS": "cpu"},
+        cwd=_REPO,
     )
     assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
     return res.stdout

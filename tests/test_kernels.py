@@ -113,7 +113,15 @@ def test_decode_kernel_bf16():
 
 
 @pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2)])
-@pytest.mark.parametrize("mask", [MaskSpec("full"), MaskSpec("causal")])
+@pytest.mark.parametrize("mask", [
+    MaskSpec("full"),
+    MaskSpec("causal"),
+    # structured masks exercise the bwd tile-pruning predicate (tile_live)
+    MaskSpec("local", window=7),
+    MaskSpec("local", window=20),
+    MaskSpec("chunked", chunk=16),
+    MaskSpec("chunked", chunk=8),
+])
 def test_bwd_kernel_vs_autodiff(hq, hkv, mask):
     """Pallas backward (dq/dkv kernels) == autodiff of the oracle."""
     from repro.kernels.flashd_bwd import flashd_bwd_pallas
