@@ -124,6 +124,7 @@ def run(report):
 
     _emit_json("BENCH_prefill.json", {"rows": prefill_rows})
     _emit_json("BENCH_decode.json", _bench_decode(report, smoke))
+    _emit_json("BENCH_paged.json", _bench_paged(report, smoke))
     _emit_json("BENCH_ring.json", _bench_ring(report, smoke))
 
 
@@ -210,6 +211,107 @@ def _bench_ring(report, smoke: bool) -> dict:
         )
     report("cp_decode_tok_per_s", out["decode"]["tokens_per_sec_cp"],
            f"cache={out['decode']['cache_len']} b={out['decode']['batch']}")
+    return out
+
+
+def _bench_paged(report, smoke: bool) -> dict:
+    """Paged KV cache (DESIGN.md §3.4): kernel overhead of the block-table
+    indirection, and the serving-density win — peak concurrent sequences of
+    the paged engine vs the contiguous engine at EQUAL KV memory budget.
+
+    The contiguous engine commits max_len tokens per slot up front, so its
+    concurrency is budget / max_len regardless of actual lengths; the paged
+    engine admits by free pages, so short sequences pack the same budget
+    ~(max_len / actual_len)× denser. The tracked signal is that ratio
+    (≥ 1.5× is the acceptance bar; short-request workloads sit well above)."""
+    from repro.kernels.flashd_decode import (
+        flashd_decode_paged_pallas, flashd_decode_pallas,
+    )
+
+    out: dict = {"kernel": [], "engine": {}}
+    interp = jax.devices()[0].platform != "tpu"
+
+    # --- kernel: paged (block-table DMA gather) vs contiguous fused
+    b, hq, hkv, d = (1, 2, 1, 16) if smoke else (2, 8, 2, 64)
+    page, n_tbl = (16, 4) if smoke else (64, 8)
+    s = page * n_tbl
+    rng = np.random.default_rng(0)
+    n_pool = b * n_tbl + 2
+    q = jnp.asarray(rng.normal(size=(b, hq, d)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(n_pool, page, hkv, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(n_pool, page, hkv, d)), jnp.float32)
+    tbl = jnp.asarray(
+        rng.permutation(np.arange(1, n_pool))[: b * n_tbl].reshape(b, n_tbl),
+        jnp.int32,
+    )
+    cl = jnp.full((b,), s, jnp.int32)
+    kc = jnp.moveaxis(kp[tbl], 3, 1).reshape(b, hkv, s, d)
+    vc = jnp.moveaxis(vp[tbl], 3, 1).reshape(b, hkv, s, d)
+
+    f_paged = jax.jit(lambda q, kp, vp, t, c: flashd_decode_paged_pallas(
+        q, kp, vp, t, c, interpret=interp))
+    f_cont = jax.jit(lambda q, k, v, c: flashd_decode_pallas(
+        q, k, v, c, n_splits=n_tbl, fused=True, interpret=interp))
+    us_paged = _bench(f_paged, q, kp, vp, tbl, cl)
+    us_cont = _bench(f_cont, q, kc, vc, cl)
+    report("decode_kernel_paged", us_paged, f"page={page} n_tbl={n_tbl}")
+    report("decode_kernel_paged_vs_contiguous", us_paged / us_cont,
+           "ratio (block-table indirection overhead; ~1 is the goal)")
+    out["kernel"] = [
+        {"variant": "paged", "batch": b, "heads": hq, "kv_heads": hkv,
+         "cache_len": s, "head_dim": d, "page_size": page,
+         "us_per_call": us_paged},
+        {"variant": "contiguous_fused", "batch": b, "heads": hq,
+         "kv_heads": hkv, "cache_len": s, "head_dim": d,
+         "n_splits": n_tbl, "us_per_call": us_cont},
+    ]
+
+    # --- engine: concurrent sequences at equal KV memory budget
+    from repro.configs import paper_llama
+    from repro.models import get_model
+    from repro.serve import Engine, ServeConfig
+
+    cfg = dataclasses.replace(
+        paper_llama.CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, head_dim=16, vocab_size=128, vocab_pad_multiple=64,
+    )
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    slots, max_len = (2, 64) if smoke else (4, 256)
+    budget_tokens = slots * max_len  # what the contiguous engine commits
+    n_req, p_len, n_new = (8, 4, 6) if smoke else (16, 8, 16)
+    reqs = [np.random.default_rng(i).integers(0, cfg.vocab_size, (p_len,))
+            .astype(np.int32) for i in range(n_req)]
+
+    eng_c = Engine(params, cfg, ServeConfig(
+        max_batch=slots, max_len=max_len, temperature=0.0))
+    t0 = time.perf_counter()
+    outs_c = eng_c.serve(reqs, n_new)
+    t_cont = time.perf_counter() - t0
+
+    eng_p = Engine(params, cfg, ServeConfig(
+        max_batch=4 * slots, max_len=max_len, temperature=0.0,
+        kv_layout="paged", page_size=16, kv_pool_tokens=budget_tokens))
+    t0 = time.perf_counter()
+    outs_p = eng_p.serve(reqs, n_new)
+    t_paged = time.perf_counter() - t0
+    assert all(np.array_equal(a, c) for a, c in zip(outs_c, outs_p))
+
+    ratio = eng_p.peak_active / max(eng_c.peak_active, 1)
+    report("serve_concurrency_contiguous", eng_c.peak_active,
+           f"budget={budget_tokens} tokens, max_len={max_len}")
+    report("serve_concurrency_paged", eng_p.peak_active,
+           f"same budget, page=16, reqs of ~{p_len}+{n_new} tokens")
+    report("serve_concurrency_ratio", ratio, "paged/contiguous (≥1.5 target)")
+    out["engine"] = {
+        "kv_budget_tokens": budget_tokens, "max_len": max_len,
+        "request_prompt_len": p_len, "new_tokens": n_new,
+        "n_requests": n_req,
+        "concurrent_contiguous": eng_c.peak_active,
+        "concurrent_paged": eng_p.peak_active,
+        "concurrency_ratio": ratio,
+        "wall_s_contiguous": t_cont, "wall_s_paged": t_paged,
+    }
     return out
 
 

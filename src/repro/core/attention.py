@@ -29,7 +29,13 @@ from repro.core.blockwise import (
     merge_partials,
 )
 
-__all__ = ["flash_attention", "decode_attention", "MaskSpec"]
+__all__ = [
+    "flash_attention",
+    "decode_attention",
+    "decode_attention_paged",
+    "gather_pages",
+    "MaskSpec",
+]
 
 
 def _single_head_fwd(q, k, v, mask, scale, impl, block_q, block_k, skip):
@@ -45,7 +51,9 @@ def _single_head_fwd(q, k, v, mask, scale, impl, block_q, block_k, skip):
         if bias is not None:
             s = s + bias
         lam = jax.nn.logsumexp(s, axis=-1)
-        p = jnp.exp(s - lam[:, None])
+        dead = lam <= NEG_INF / 2  # no visible key → zero row, Λ sentinel
+        lam = jnp.where(dead, NEG_INF, lam)
+        p = jnp.where(dead[:, None], 0.0, jnp.exp(s - lam[:, None]))
         return p @ v.astype(jnp.float32), lam
     raise ValueError(f"unknown attention impl {impl!r}")
 
@@ -262,6 +270,9 @@ def decode_attention(
     if n_splits <= 1:
         lam = jax.nn.logsumexp(s, axis=-1)
         p = jnp.exp(s - lam[..., None])
+        # rows with no visible key are ZERO (the kernels' dead-partial
+        # convention), not the uniform-softmax artifact exp(NEG_INF−NEG_INF)
+        p = jnp.where(valid[:, None, None, :], p, 0.0)
         o = jnp.einsum("bhgs,bshd->bhgd", p, vf)
     else:
         dv = v_cache.shape[-1]
@@ -284,3 +295,46 @@ def decode_attention(
         o, lam = merge_partials(o_p, lam_p)  # FLASH-D split-K merge
 
     return o.reshape(b, 1, hq, -1).astype(q.dtype)
+
+
+def gather_pages(pages: jax.Array, block_tbl: jax.Array) -> jax.Array:
+    """[P, page, Hkv, ·] pool + [B, N] table → contiguous [B, N·page, Hkv, ·].
+
+    The jnp materialization of the block-table indirection the paged Pallas
+    kernel performs in its DMA descriptors — the oracle for that kernel,
+    and the bridge that lets every contiguous-cache consumer (the split-K
+    jnp path, cross-device cp_decode) run against a paged cache."""
+    b, n = block_tbl.shape
+    _, page, hkv = pages.shape[:3]
+    return pages[block_tbl].reshape(b, n * page, hkv, pages.shape[-1])
+
+
+def decode_attention_paged(
+    q: jax.Array,  # [B, 1, Hq, d]
+    k_pages: jax.Array,  # [P, page, Hkv, d] — global page pool
+    v_pages: jax.Array,  # [P, page, Hkv, dv]
+    block_tbl: jax.Array,  # [B, N] i32 per-sequence block tables
+    cache_len: jax.Array,  # [B]
+    *,
+    scale: Optional[float] = None,
+    window: int = 0,
+    chunk: int = 0,
+    n_splits: Optional[int] = None,
+) -> jax.Array:
+    """Single-step decode against a paged KV cache (DESIGN.md §3.4).
+
+    This is the backend-agnostic path: gather the sequence's pages into
+    contiguous [B, S, Hkv, ·] form and run `decode_attention`, which keeps
+    all of its routing — context-parallel `cp_decode` when the active
+    ShardingCtx seq-shards the (gathered) cache, tuned split-K with the
+    FLASH-D sigmoid merge otherwise. The Pallas hot path
+    (`kernels.ops.pallas_decode_paged`) skips the gather entirely: the
+    block table becomes a scalar-prefetch operand and the DMA engine
+    fetches physical pages directly.
+    """
+    k_cache = gather_pages(k_pages, block_tbl)
+    v_cache = gather_pages(v_pages, block_tbl)
+    return decode_attention(
+        q, k_cache, v_cache, cache_len, scale=scale, window=window,
+        chunk=chunk, n_splits=n_splits,
+    )

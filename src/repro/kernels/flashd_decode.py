@@ -17,6 +17,15 @@ fused=True (default) — the split axis is the innermost sequential
   the final [B, Hq, dv] output directly: zero per-split HBM partials, no
   host-side moveaxis / merge scan. This is the decode hot path.
 
+paged (`flashd_decode_paged_pallas`) — the fused carry structure, but K/V
+  live in a global page pool ([P, page, Hkv, d]) addressed through a
+  per-sequence block table. The table (and cache_len) enter as
+  scalar-prefetch operands: the K/V BlockSpec index maps read
+  `tbl[b, ip]` so each sequential grid step DMAs the *physical* page of
+  logical page ip — the gather happens in the DMA engine, the kernel body
+  and the in-VMEM merge are identical to the fused path. This is what the
+  paged serving cache (runtime/kvcache.py, DESIGN.md §3.4) decodes with.
+
 fused=False — the historical multi-output form: every split writes its
   (o_p, λ_p) to HBM and the merge runs on the host graph via
   `merge_partials` (a log-depth pairwise tree of the same blend — the op
@@ -54,15 +63,13 @@ except Exception:  # pragma: no cover
 
 from repro.core.blockwise import NEG_INF, merge_partials
 
-__all__ = ["flashd_decode_pallas"]
+__all__ = ["flashd_decode_pallas", "flashd_decode_paged_pallas"]
 
 
-def _split_partial(cache_len, start, q_ref, k_ref, v_ref, *, lo, split, window, chunk, scale):
+def _split_partial(cache_len, start, q, k, v, *, lo, split, window, chunk, scale):
     """Per-split normalized partial (o_p [G, dv], λ_p [G]) — shared by the
-    fused and unfused kernels so their per-split arithmetic is identical."""
-    q = q_ref[0, 0].astype(jnp.float32)  # [G, d]
-    k = k_ref[0, 0].astype(jnp.float32)  # [split, d]
-    v = v_ref[0, 0].astype(jnp.float32)  # [split, dv]
+    fused, unfused and paged kernels so their per-split arithmetic is
+    identical. q [G, d], k [split, d], v [split, dv] (already f32)."""
     lo_bound = _lo_bound(cache_len, start, window=window, chunk=chunk)
     pos = lo + jax.lax.broadcasted_iota(jnp.int32, (split,), 0)
     s = jax.lax.dot_general(
@@ -103,6 +110,23 @@ def _split_live(cache_len, start, lo, split, *, window: int, chunk: int):
     return jnp.logical_and(lo < cache_len, lo + split > lo_bound)
 
 
+def _merge_into_carry(o_p, lam_p, acc_ref, lam_scratch):
+    """FLASH-D sigmoid merge of one partial into the VMEM carry — the same
+    blend op as blockwise.merge_pair, applied sequentially along the
+    innermost grid axis. Shared by the fused and paged kernels."""
+    lam_run = lam_scratch[0]
+    w = jax.nn.sigmoid(lam_p - lam_run)
+    dead_b = lam_p <= NEG_INF / 2
+    dead_a = lam_run <= NEG_INF / 2
+    w = jnp.where(dead_b, 0.0, jnp.where(dead_a, 1.0, w))
+    acc = acc_ref[...]
+    acc_ref[...] = acc + (o_p - acc) * w[:, None]
+    ln_w1 = jax.nn.log_sigmoid(lam_run - lam_p)  # ln(1−w)
+    lam_scratch[0] = jnp.where(
+        dead_b, lam_run, jnp.where(dead_a, lam_p, lam_run - ln_w1)
+    )
+
+
 def _decode_fused_kernel(
     cache_len_ref, start_ref, q_ref, k_ref, v_ref,
     *refs,  # outputs (o [, λ]) then VMEM scratch (acc, Λ carry)
@@ -130,22 +154,13 @@ def _decode_fused_kernel(
     @pl.when(_split_live(cache_len, start, lo, split, window=window, chunk=chunk))
     def _body():
         o_p, lam_p = _split_partial(
-            cache_len, start, q_ref, k_ref, v_ref,
+            cache_len, start,
+            q_ref[0, 0].astype(jnp.float32),
+            k_ref[0, 0].astype(jnp.float32),
+            v_ref[0, 0].astype(jnp.float32),
             lo=lo, split=split, window=window, chunk=chunk, scale=scale,
         )
-        # FLASH-D sigmoid merge into the carry — the same blend op as
-        # blockwise.merge_pair, applied sequentially along the split axis.
-        lam_run = lam_scratch[0]
-        w = jax.nn.sigmoid(lam_p - lam_run)
-        dead_b = lam_p <= NEG_INF / 2
-        dead_a = lam_run <= NEG_INF / 2
-        w = jnp.where(dead_b, 0.0, jnp.where(dead_a, 1.0, w))
-        acc = acc_ref[...]
-        acc_ref[...] = acc + (o_p - acc) * w[:, None]
-        ln_w1 = jax.nn.log_sigmoid(lam_run - lam_p)  # ln(1−w)
-        lam_scratch[0] = jnp.where(
-            dead_b, lam_run, jnp.where(dead_a, lam_p, lam_run - ln_w1)
-        )
+        _merge_into_carry(o_p, lam_p, acc_ref, lam_scratch)
 
     @pl.when(ip == n_splits - 1)
     def _finalize():
@@ -172,7 +187,10 @@ def _decode_unfused_kernel(
     @pl.when(live)
     def _body():
         o_p, lam = _split_partial(
-            cache_len, start, q_ref, k_ref, v_ref,
+            cache_len, start,
+            q_ref[0, 0].astype(jnp.float32),
+            k_ref[0, 0].astype(jnp.float32),
+            v_ref[0, 0].astype(jnp.float32),
             lo=lo, split=split, window=window, chunk=chunk, scale=scale,
         )
         o_ref[0, 0, :, 0, :] = o_p.astype(o_ref.dtype)
@@ -309,3 +327,133 @@ def flashd_decode_pallas(
     if return_lam:
         return o, lam.reshape(b, hq)
     return o
+
+
+# ---------------------------------------------------------------------------
+# paged variant: K/V gathered through a block table (scalar prefetch)
+# ---------------------------------------------------------------------------
+
+def _decode_paged_kernel(
+    tbl_ref, cache_len_ref,  # scalar prefetch (SMEM)
+    q_ref, k_ref, v_ref,  # VMEM blocks (k/v: the ip-th *physical* page)
+    o_ref,
+    acc_ref, lam_scratch,  # VMEM carry
+    *,
+    page: int,
+    n_tbl: int,
+    window: int,
+    chunk: int,
+    scale: float,
+):
+    ib = pl.program_id(0)
+    ip = pl.program_id(2)  # logical page index — innermost, sequential
+    cache_len = cache_len_ref[ib]
+    start = jnp.int32(0)
+    lo = ip * page
+
+    @pl.when(ip == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        lam_scratch[...] = jnp.full_like(lam_scratch, NEG_INF)
+
+    @pl.when(_split_live(cache_len, start, lo, page, window=window, chunk=chunk))
+    def _body():
+        o_p, lam_p = _split_partial(
+            cache_len, start,
+            q_ref[0, 0].astype(jnp.float32),
+            k_ref[0, :, 0, :].astype(jnp.float32),  # [page, d] — gathered page
+            v_ref[0, :, 0, :].astype(jnp.float32),
+            lo=lo, split=page, window=window, chunk=chunk, scale=scale,
+        )
+        _merge_into_carry(o_p, lam_p, acc_ref, lam_scratch)
+
+    @pl.when(ip == n_tbl - 1)
+    def _finalize():
+        o_ref[0, 0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def flashd_decode_paged_pallas(
+    q: jax.Array,  # [B, Hq, d] — one token per sequence
+    k_pages: jax.Array,  # [P, page, Hkv, d] — global page pool
+    v_pages: jax.Array,  # [P, page, Hkv, dv]
+    block_tbl: jax.Array,  # [B, N] i32 — physical page id of logical page j
+    cache_len: jax.Array,  # [B] i32
+    *,
+    scale: Optional[float] = None,
+    window: int = 0,
+    chunk: int = 0,
+    interpret: bool = False,
+):
+    """Fused FLASH-D decode over a paged KV cache → o [B, Hq, dv].
+
+    Grid (B, Hkv, N) with the logical-page axis innermost and sequential;
+    `block_tbl` and `cache_len` are scalar-prefetch operands, so the K/V
+    BlockSpec index maps resolve `tbl[b, ip]` *before* the step's DMA is
+    issued — the kernel never sees the indirection, each step's K/V block
+    is one physical page, and the (acc, Λ) carry merges pages with the same
+    one-sigmoid-one-FMA blend as the contiguous fused kernel. Table slots
+    past the live region may hold anything (engine convention: garbage page
+    0) — their pages are DMA'd but `pl.when`-skipped, like padded splits.
+
+    Without pltpu (non-TPU install), falls back to a jnp gather of the
+    table followed by the contiguous fused kernel — same math, the gather
+    materialized in HBM instead of hidden in the DMA descriptors.
+    """
+    b, hq, d = q.shape
+    p_pool, page, hkv, dv = v_pages.shape
+    n_tbl = block_tbl.shape[1]
+    g = hq // hkv
+    if scale is None:
+        scale = float(1.0 / (d ** 0.5))
+    block_tbl = jnp.asarray(block_tbl, jnp.int32)
+    cache_len = jnp.asarray(cache_len, jnp.int32).reshape(b)
+
+    if not _HAS_PLTPU:  # pragma: no cover — jax without pallas TPU support
+        kc = jnp.moveaxis(k_pages[block_tbl], 3, 1).reshape(b, hkv, n_tbl * page, d)
+        vc = jnp.moveaxis(v_pages[block_tbl], 3, 1).reshape(b, hkv, n_tbl * page, dv)
+        return flashd_decode_pallas(
+            q, kc, vc, cache_len, scale=scale, n_splits=n_tbl, window=window,
+            chunk=chunk, fused=True, interpret=interpret,
+        )
+
+    qg = q.reshape(b, hkv, g, d)
+    kernel = functools.partial(
+        _decode_paged_kernel, page=page, n_tbl=n_tbl, window=window,
+        chunk=chunk, scale=scale,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, n_tbl),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, h, ip, tbl, cl: (b_, h, 0, 0)),
+            # the physical page: logical page ip of row b_ through the table
+            pl.BlockSpec(
+                (1, page, 1, d), lambda b_, h, ip, tbl, cl: (tbl[b_, ip], 0, h, 0)
+            ),
+            pl.BlockSpec(
+                (1, page, 1, dv), lambda b_, h, ip, tbl, cl: (tbl[b_, ip], 0, h, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g, dv), lambda b_, h, ip, tbl, cl: (b_, h, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((g, dv), jnp.float32),
+            pltpu.VMEM((1, g), jnp.float32),
+        ],
+    )
+    try:
+        compiler_params = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        )
+    except Exception:  # older/newer API name drift
+        compiler_params = None
+    call = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dv), q.dtype),
+        interpret=interpret,
+        **({"compiler_params": compiler_params} if compiler_params else {}),
+    )
+    o = call(block_tbl, cache_len, qg, k_pages, v_pages)
+    return o.reshape(b, hq, dv)

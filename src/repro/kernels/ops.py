@@ -15,10 +15,18 @@ import jax.numpy as jnp
 
 from repro.core.blockwise import MaskSpec
 from repro.kernels.fa2_fwd import fa2_fwd_pallas
-from repro.kernels.flashd_decode import flashd_decode_pallas
+from repro.kernels.flashd_decode import (
+    flashd_decode_paged_pallas,
+    flashd_decode_pallas,
+)
 from repro.kernels.flashd_fwd import flashd_fwd_pallas
 
-__all__ = ["pallas_attention_fwd_batched", "pallas_decode", "on_tpu"]
+__all__ = [
+    "pallas_attention_fwd_batched",
+    "pallas_decode",
+    "pallas_decode_paged",
+    "on_tpu",
+]
 
 
 def on_tpu() -> bool:
@@ -85,6 +93,35 @@ def pallas_decode(
         window=window,
         chunk=chunk,
         fused=fused,
+        interpret=_interpret(),
+    )
+    return o[:, None]  # [B, 1, Hq, dv]
+
+
+def pallas_decode_paged(
+    q: jax.Array,  # [B, 1, Hq, d] or [B, Hq, d]
+    k_pages: jax.Array,  # [P, page, Hkv, d] — model page layout == kernel layout
+    v_pages: jax.Array,  # [P, page, Hkv, dv]
+    block_tbl: jax.Array,  # [B, N] i32
+    cache_len: jax.Array,  # [B]
+    *,
+    scale=None,
+    window: int = 0,
+    chunk: int = 0,
+):
+    """Paged fused decode — the block table rides in as a scalar-prefetch
+    operand, so K/V pages are gathered by the DMA engine (DESIGN.md §3.4).
+    Page arrays are stored page-major ([P, page, Hkv, d]), which is already
+    the kernel layout — no transpose on the hot path."""
+    o = flashd_decode_paged_pallas(
+        q[:, 0] if q.ndim == 4 else q,
+        k_pages,
+        v_pages,
+        jnp.asarray(block_tbl, jnp.int32),
+        jnp.asarray(cache_len, jnp.int32).reshape(-1),
+        scale=scale,
+        window=window,
+        chunk=chunk,
         interpret=_interpret(),
     )
     return o[:, None]  # [B, 1, Hq, dv]

@@ -39,8 +39,12 @@ def attention_ref(
     if bias is not None:
         s = s + bias
     lam = jax.nn.logsumexp(s, axis=-1)
-    lam = jnp.where(jnp.isfinite(lam), lam, NEG_INF)
-    p = jnp.exp(s - lam[..., None])
+    # q rows with no visible key: logsumexp of all-sentinel scores is
+    # FINITE (−1e30 + ln skv), so an isfinite check misses them — detect by
+    # magnitude and apply the dead-row convention (Λ = NEG_INF, o = 0)
+    dead = lam <= NEG_INF / 2
+    lam = jnp.where(dead, NEG_INF, lam)
+    p = jnp.where(dead[..., None], 0.0, jnp.exp(s - lam[..., None]))
     o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
     return (
         o.reshape(b, hq, sq, dv).astype(q.dtype),

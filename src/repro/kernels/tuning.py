@@ -38,9 +38,12 @@ __all__ = [
     "PrefillTiling",
     "DecodeSplit",
     "RingSchedule",
+    "PageLayout",
     "choose_prefill_blocks",
     "choose_decode_split",
     "choose_ring_schedule",
+    "choose_page_size",
+    "choose_page_layout",
     "prefill_vmem_bytes",
     "decode_vmem_bytes",
     "measure_best",
@@ -218,6 +221,73 @@ def choose_ring_schedule(
     )
     return RingSchedule(
         n_hops=max(n_hops, 1), block_q=tiling.block_q, block_k=tiling.block_k
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class PageLayout:
+    """Paged KV-cache geometry (DESIGN.md §3.4): `page_size` tokens per
+    page, `n_pages` pages in the pool (page 0 is the reserved garbage
+    page), `pages_per_seq` block-table width covering max_len."""
+
+    page_size: int
+    n_pages: int
+    pages_per_seq: int
+
+
+def choose_page_size(
+    max_len: int,
+    d: int,
+    dv: Optional[int] = None,
+    *,
+    group: int = 1,
+    window: int = 0,
+    chunk: int = 0,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+) -> int:
+    """Heuristic page size for the paged decode kernel.
+
+    A page doubles as the kernel's split: each grid step DMAs one
+    (page, d) K/V block through the block-table indirection and merges it
+    into the FLASH-D carry. The competing pressures:
+
+      * kernel: long pages amortize DMA issue overhead and keep the MXU
+        fed — same force as the decode split heuristic;
+      * allocator: internal fragmentation wastes up to page−1 tokens per
+        live sequence, so serving many short sequences wants small pages.
+
+    We take the decode-split answer (VMEM-fitted, ≤ live mask region) and
+    cap it at 64 tokens — at that size the fragmentation bound is ≤ 63
+    tokens/seq while a [64, d] tile still fills an MXU pass for d ≥ 128 —
+    then round down to a power of two so page arithmetic (pos // page,
+    pos % page) stays cheap on the scalar core."""
+    split = choose_decode_split(
+        max_len, d, dv, group=group, window=window, chunk=chunk,
+        vmem_budget=vmem_budget,
+    ).split
+    size = min(64, split, max(max_len, 1))
+    return max(_MIN_BLOCK // 2, 1 << (max(size, 1).bit_length() - 1))
+
+
+def choose_page_layout(
+    max_len: int,
+    d: int,
+    dv: Optional[int] = None,
+    *,
+    group: int = 1,
+    pool_tokens: int,
+    page_size: Optional[int] = None,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+) -> PageLayout:
+    """Full pool geometry for a token budget: pages covering `pool_tokens`
+    plus the reserved garbage page (id 0, the write target of dead batch
+    slots — never allocated)."""
+    page = page_size or choose_page_size(
+        max_len, d, dv, group=group, vmem_budget=vmem_budget
+    )
+    n_pages = max(2, -(-pool_tokens // page) + 1)
+    return PageLayout(
+        page_size=page, n_pages=n_pages, pages_per_seq=-(-max_len // page)
     )
 
 

@@ -29,6 +29,14 @@ def main(argv=None):
     p.add_argument("--max-batch", type=int, default=4)
     p.add_argument("--temperature", type=float, default=0.0)
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--kv-layout", choices=("contiguous", "paged"),
+                   default="contiguous",
+                   help="paged: page-pool KV, admission by free pages "
+                        "(DESIGN.md §3.4)")
+    p.add_argument("--page-size", type=int, default=0,
+                   help="tokens per KV page (0 → tuned)")
+    p.add_argument("--kv-pool-tokens", type=int, default=0,
+                   help="paged pool size in tokens (0 → max_batch·max_len)")
     args = p.parse_args(argv)
 
     cfg = configs.get_smoke_config(args.arch) if args.smoke else configs.get_config(args.arch)
@@ -47,6 +55,9 @@ def main(argv=None):
         max_len=args.prompt_len + args.max_new_tokens + 8,
         temperature=args.temperature,
         seed=args.seed,
+        kv_layout=args.kv_layout,
+        page_size=args.page_size,
+        kv_pool_tokens=args.kv_pool_tokens,
     ))
     rng = np.random.default_rng(args.seed)
     reqs = [
@@ -59,8 +70,10 @@ def main(argv=None):
     total_tokens = sum(len(o) for o in outs)
     for i, o in enumerate(outs):
         print(f"request {i}: {o.tolist()}")
+    layout = "paged pool" if eng._page_layout is not None else "contiguous slots"
     print(f"{total_tokens} tokens in {dt:.2f}s → {total_tokens/dt:.1f} tok/s "
-          f"(batched decode over {args.max_batch} slots)")
+          f"(batched decode over {args.max_batch} slots, {layout}, "
+          f"peak {eng.peak_active} concurrent)")
     return 0
 
 

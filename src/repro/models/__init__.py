@@ -26,7 +26,9 @@ def get_model(cfg: ModelConfig) -> ModelApi:
             # self-attn cache sized to the sequence; cross-attn memory is the
             # encoder frame count — capped at 4096 (audio frontends emit
             # ~O(1k) frames; a 32k cross memory would be modality-impossible)
-            init_cache=lambda b, s, c: _encdec.init_encdec_cache(b, s, min(s, 4096), c),
+            # paged-layout kwargs are accepted but ignored: the engine falls
+            # back to the contiguous layout for enc-dec (DESIGN.md §3.4)
+            init_cache=lambda b, s, c, **kw: _encdec.init_encdec_cache(b, s, min(s, 4096), c),
             decode_step=_encdec.decode_step_encdec,
         )
     return ModelApi(

@@ -20,7 +20,13 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.attention import MaskSpec, decode_attention, flash_attention
+from repro.core.attention import (
+    MaskSpec,
+    decode_attention,
+    decode_attention_paged,
+    flash_attention,
+    gather_pages,
+)
 from repro.distributed.sharding import shard
 from repro.models import mamba2 as m2
 from repro.models import moe as moe_mod
@@ -329,10 +335,33 @@ def lm_loss(params: dict, batch: Dict, cfg: ModelConfig):
 # serving: per-layer caches + one-token decode
 # ---------------------------------------------------------------------------
 
-def _layer_cache(spec, batch: int, max_len: int, cfg: ModelConfig):
+def paged_mixers(cfg: ModelConfig) -> Tuple[str, ...]:
+    """Mixer kinds that take the paged layout: full-length (global)
+    attention caches only. Local/chunked layers keep their window-sized
+    ring regions — those are already compact (a ring IS the dense packing
+    of what the layer can see), so paging them buys nothing and would
+    complicate the ring write index. SSM/RG-LRU state is O(1)/slot."""
+    return tuple(
+        m for m, _ in (*cfg.pattern, *cfg.remainder)
+        if m.startswith("attn") and m not in ("attn_local", "attn_chunked")
+    )
+
+
+def _layer_cache(spec, batch: int, max_len: int, cfg: ModelConfig,
+                 *, paged_geom=None):
     mixer, _ = spec
     hd = cfg.head_dim_
     if mixer.startswith("attn"):
+        if paged_geom is not None and mixer not in ("attn_local", "attn_chunked"):
+            n_pages, page_size, pages_per_seq = paged_geom
+            pshape = (n_pages, page_size, cfg.n_kv_heads, hd)
+            return {
+                "k_pages": jnp.zeros(pshape, cfg.compute_dtype),
+                "v_pages": jnp.zeros(pshape, cfg.compute_dtype),
+                # all rows start on the garbage page (id 0) — a dead slot's
+                # lockstep writes land there until the engine installs a table
+                "tbl": jnp.zeros((batch, pages_per_seq), jnp.int32),
+            }
         shape = (batch, max_len, cfg.n_kv_heads, hd)
         return {
             "k": jnp.zeros(shape, cfg.compute_dtype),
@@ -345,13 +374,44 @@ def _layer_cache(spec, batch: int, max_len: int, cfg: ModelConfig):
     raise ValueError(mixer)
 
 
-def init_decode_cache(batch: int, max_len: int, cfg: ModelConfig) -> dict:
+def init_decode_cache(
+    batch: int,
+    max_len: int,
+    cfg: ModelConfig,
+    *,
+    layout: str = "contiguous",
+    page_size: Optional[int] = None,
+    n_pages: Optional[int] = None,
+) -> dict:
     """Stacked per-block caches matching the params tree structure.
 
     Local/chunked attention layers allocate only a window-sized ring region
     (window or chunk length), which is what makes long_500k serveable for
     recurrentgemma/llama4 (DESIGN.md §5).
-    """
+
+    layout="paged" (DESIGN.md §3.4) replaces each *global* attention
+    layer's per-slot [batch, max_len, ...] region with a page pool
+    [n_pages, page_size, ...] plus a per-slot block table [batch, N]
+    (N = ⌈max_len / page_size⌉). Every layer shares one logical table (the
+    engine mirrors the allocator's tables into each layer's `tbl` leaf);
+    ring-region and recurrent layers keep their contiguous layout. With no
+    geometry given, `repro.kernels.tuning.choose_page_layout` sizes the
+    pool at `batch · max_len` tokens — the contiguous footprint — so the
+    default is never worse; engines shrink it to oversubscribe."""
+    paged_geom = None
+    if layout == "paged" and paged_mixers(cfg):
+        from repro.kernels.tuning import choose_page_layout  # lazy: no cycle
+
+        pl_ = choose_page_layout(
+            max_len, cfg.head_dim_, cfg.head_dim_,
+            group=cfg.n_heads // cfg.n_kv_heads,
+            pool_tokens=(n_pages - 1) * page_size if (n_pages and page_size)
+            else batch * max_len,
+            page_size=page_size,
+        )
+        paged_geom = (pl_.n_pages, pl_.page_size, pl_.pages_per_seq)
+    elif layout not in ("contiguous", "paged"):
+        raise ValueError(f"unknown cache layout {layout!r}")
 
     def cache_len_for(spec):
         mixer, _ = spec
@@ -364,7 +424,9 @@ def init_decode_cache(batch: int, max_len: int, cfg: ModelConfig) -> dict:
     cache: dict = {}
     if cfg.n_blocks > 0:
         per = {
-            f"pos{j}": _layer_cache(spec, batch, cache_len_for(spec), cfg)
+            f"pos{j}": _layer_cache(
+                spec, batch, cache_len_for(spec), cfg, paged_geom=paged_geom
+            )
             for j, spec in enumerate(cfg.pattern)
         }
         cache["blocks"] = jax.tree.map(
@@ -372,7 +434,9 @@ def init_decode_cache(batch: int, max_len: int, cfg: ModelConfig) -> dict:
         )
     if cfg.remainder:
         per = {
-            f"pos{j}": _layer_cache(spec, batch, cache_len_for(spec), cfg)
+            f"pos{j}": _layer_cache(
+                spec, batch, cache_len_for(spec), cfg, paged_geom=paged_geom
+            )
             for j, spec in enumerate(cfg.remainder)
         }
         cache["rem_blocks"] = jax.tree.map(lambda x: x[None], per)
@@ -398,6 +462,10 @@ def _decode_attn(p, x, cfg: ModelConfig, kind: str, cache, pos):
     if kind != "attn_nope":
         q = apply_rope(q, pos[:, None], cfg.rope_theta)
         k = apply_rope(k, pos[:, None], cfg.rope_theta)
+
+    if "tbl" in cache:  # paged layout (DESIGN.md §3.4) — global attn only
+        y, new_cache = _paged_attn_step(p, q, k, v, cfg, cache, pos)
+        return y, new_cache
 
     max_len = cache["k"].shape[1]
     write_idx = pos % max_len  # ring buffer (exact for local/chunked windows)
@@ -436,6 +504,53 @@ def _decode_attn(p, x, cfg: ModelConfig, kind: str, cache, pos):
     o = o.reshape(b, 1, cfg.n_heads * hd)
     y = jnp.einsum("bsh,hd->bsd", o, p["wo"].astype(cdt))
     return y, {"k": k_cache, "v": v_cache}
+
+
+def _paged_attn_step(p, q, k, v, cfg: ModelConfig, cache, pos):
+    """One-token attention against a paged cache: scatter the new K/V into
+    the position's physical page via the block table, then attend through
+    the table. Writes past the table (dead slots whose `pos` keeps
+    advancing in the lockstep batch, or rows the engine retired by zeroing
+    their table row) land on the garbage page 0 — the engine's convention
+    for harmless speculative writes (DESIGN.md §3.4)."""
+    b = q.shape[0]
+    k_pages, v_pages, tbl = cache["k_pages"], cache["v_pages"], cache["tbl"]
+    page = k_pages.shape[1]
+    n_tbl = tbl.shape[1]
+    bidx = jnp.arange(b)
+    page_idx = pos // page
+    slot = pos % page
+    in_tbl = page_idx < n_tbl
+    pid = jnp.where(in_tbl, tbl[bidx, jnp.minimum(page_idx, n_tbl - 1)], 0)
+    k_pages = k_pages.at[pid, slot].set(k[:, 0])
+    v_pages = v_pages.at[pid, slot].set(v[:, 0])
+    eff_len = pos + 1
+
+    use_kernel = cfg.attn_impl.endswith("_pallas")
+    o = None
+    from repro.distributed.context import maybe_cp_decode
+    from repro.distributed.sharding import active_ctx
+
+    if active_ctx() is not None:
+        # sharding interplay: a seq-sharded (gathered) cache still merges
+        # per-shard partials cross-device — paged pools replicate, the
+        # gather materializes the [B, S, H, hd] shape the rules engine and
+        # cp_decode reason about. Traced only under an active ctx; DCE'd
+        # (returns None at trace time) when the rule doesn't seq-shard.
+        o = maybe_cp_decode(
+            q, gather_pages(k_pages, tbl), gather_pages(v_pages, tbl),
+            eff_len, use_kernel=use_kernel,
+        )
+    if o is None:
+        if use_kernel:
+            from repro.kernels import ops as kernel_ops  # lazy: no cycle
+
+            o = kernel_ops.pallas_decode_paged(q, k_pages, v_pages, tbl, eff_len)
+        else:
+            o = decode_attention_paged(q, k_pages, v_pages, tbl, eff_len)
+    o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim_)
+    y = jnp.einsum("bsh,hd->bsd", o, p["wo"].astype(cfg.compute_dtype))
+    return y, {"k_pages": k_pages, "v_pages": v_pages, "tbl": tbl}
 
 
 def _decode_block(bp, h, cfg, spec, cache, pos):
@@ -524,7 +639,8 @@ def decode_step_lm(params: dict, cache: dict, token: jax.Array, pos: jax.Array, 
     return logits[:, 0], new_cache
 
 
-def prefill_lm(params: dict, tokens: jax.Array, cache: dict, cfg: ModelConfig):
+def prefill_lm(params: dict, tokens: jax.Array, cache: dict, cfg: ModelConfig,
+               *, start_pos: int = 0):
     """Prefill a decode cache by scanning `decode_step_lm` over the prompt.
 
     Universal across mixer types (attention, SSM, RG-LRU) and exact: the
@@ -533,6 +649,13 @@ def prefill_lm(params: dict, tokens: jax.Array, cache: dict, cfg: ModelConfig):
     TPU serving would use the flash prefill kernel + batched cache writes;
     this path favors exactness and works for every architecture (examples
     and tests use it; dry-run decode shapes lower `decode_step_lm` itself).
+
+    start_pos > 0 prefllls only a *tail*: `tokens` are the positions
+    [start_pos, start_pos + s) and the cache is assumed to already hold
+    the first start_pos positions — the paged engine's shared-prefix
+    admission (KV pages reused from a matching live prompt, DESIGN.md
+    §3.4). Only valid for pure global-attention stacks: ring-region and
+    recurrent layers carry state the skipped steps would have produced.
     """
     b, s = tokens.shape
 
@@ -542,7 +665,7 @@ def prefill_lm(params: dict, tokens: jax.Array, cache: dict, cfg: ModelConfig):
         logits, cache = decode_step_lm(params, cache, tok, jnp.full((b,), p), cfg)
         return (cache, logits), None
 
-    positions = jnp.arange(s)
+    positions = start_pos + jnp.arange(s)
     (cache, logits), _ = jax.lax.scan(
         body,
         (cache, jnp.zeros((b, cfg.padded_vocab), jnp.float32)),

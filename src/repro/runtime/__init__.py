@@ -1,3 +1,8 @@
 from repro.runtime import checkpoint
+from repro.runtime.kvcache import CowCopy, PagedKVAllocator, PageError, pages_for
 from repro.runtime.resilience import ElasticPlan, StragglerMonitor, plan_mesh, run_resilient
-__all__ = ["checkpoint", "ElasticPlan", "StragglerMonitor", "plan_mesh", "run_resilient"]
+__all__ = [
+    "checkpoint",
+    "CowCopy", "PagedKVAllocator", "PageError", "pages_for",
+    "ElasticPlan", "StragglerMonitor", "plan_mesh", "run_resilient",
+]

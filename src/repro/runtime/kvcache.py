@@ -1,0 +1,284 @@
+"""Paged KV-cache allocator: global page pool, per-sequence block tables,
+copy-on-write prefix sharing (DESIGN.md §3.4).
+
+The serving engine's historical memory model reserved one contiguous
+`max_len`-wide cache region per batch slot, so `max_batch × max_len` tokens
+of KV memory were committed up front even when every live sequence was
+short. This module replaces that with the vLLM memory model: KV lives in a
+pool of fixed-size *pages* (`page_size` tokens each); a sequence owns an
+ordered *block table* of page ids covering `ceil(len / page_size)` pages;
+pages are allocated as the sequence grows and returned to the pool when it
+finishes. FlashAttention-style kernels are indifferent to where KV tiles
+live, and FLASH-D's division-free sigmoid merge blends partials from
+non-contiguous pages with the same one-FMA carry as contiguous splits
+(`kernels/flashd_decode.flashd_decode_paged_pallas`), so the kernel-side
+cost of paging is just the block-table indirection.
+
+This class is pure host-side bookkeeping — it never touches device arrays.
+Device effects are communicated back to the caller as:
+
+  * block tables (`table(seq)`) the engine mirrors into the device-side
+    `tbl` operand of the paged decode kernel;
+  * `CowCopy(src, dst)` records: the caller must copy page `src` → page
+    `dst` in every layer's page arrays *before* the next write dispatch.
+
+Sharing / copy-on-write semantics:
+
+  * `admit(..., share_from=parent, shared_tokens=n)` makes the child's
+    first `ceil(n / page_size)` table entries reference the parent's pages
+    (refcount++). Full pages of the shared prefix are never written by
+    either sequence again (writes only happen at positions ≥ the owner's
+    length), so they are shared for their whole lifetime for free. The
+    *boundary* page — shared only up to mid-page — is immediately
+    copy-on-write'd for the child (one `CowCopy`), because the child's
+    tail prefill writes into it.
+  * Because the boundary page is copied at admit (child side) and full
+    shared pages lie strictly below every owner's length, **no live
+    sequence ever holds a writable shared page** — writers only touch
+    positions ≥ their own length, and those always land on exclusively
+    owned (or fresh) pages. `extend()` keeps a defensive CoW for the
+    unreachable case anyway, and `check()` asserts the invariant.
+
+Admission control: pages for the worst case (`reserve_tokens`, typically
+prompt + max_new_tokens + decode-chunk slack) are *reserved* at admit so a
+mid-flight sequence can never hit pool exhaustion (this engine has no
+preemption). Reservations only turn into materialized pages as the
+sequence actually grows (`extend`), which is what the pool-accounting
+invariants measure.
+
+Page id 0 is reserved as the *garbage page*: the engine points the table
+rows of dead batch slots at it (and the kernel clamps out-of-table writes
+to it), so lockstep decode steps of finished slots scribble harmlessly
+instead of corrupting live pages.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["CowCopy", "PagedKVAllocator", "PageError", "pages_for"]
+
+GARBAGE_PAGE = 0
+
+
+class PageError(RuntimeError):
+    """Pool exhausted or API misuse (admitting a live seq, growing a dead one)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class CowCopy:
+    """Device-side page copy the caller owes: pages[dst] ← pages[src]."""
+
+    src: int
+    dst: int
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Pages covering n_tokens (0 tokens → 0 pages)."""
+    if n_tokens <= 0:
+        return 0
+    return -(-n_tokens // page_size)
+
+
+class PagedKVAllocator:
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 2:
+            raise ValueError("need ≥ 2 pages (page 0 is the garbage page)")
+        if page_size < 1:
+            raise ValueError("page_size must be ≥ 1")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        # LIFO free list → recently-freed pages are reused first (warm VMEM/HBM)
+        self._free: List[int] = list(range(n_pages - 1, GARBAGE_PAGE, -1))
+        self._ref: List[int] = [0] * n_pages
+        self._tables: Dict[int, List[int]] = {}
+        self._lens: Dict[int, int] = {}
+        self._reserved: Dict[int, int] = {}  # seq → reserved-but-unmaterialized pages
+
+    # ---- accounting ----
+    @property
+    def free_pages(self) -> int:
+        """Pages available to new admissions (excludes live reservations)."""
+        return len(self._free) - sum(self._reserved.values())
+
+    @property
+    def pages_in_use(self) -> int:
+        """Distinct pages currently materialized (shared pages count once)."""
+        return sum(1 for r in self._ref if r > 0)
+
+    @property
+    def reserved_pages(self) -> int:
+        """Pages promised to live sequences but not yet materialized."""
+        return sum(self._reserved.values())
+
+    @property
+    def live_seqs(self) -> Tuple[int, ...]:
+        return tuple(self._tables)
+
+    def table(self, seq: int) -> List[int]:
+        return list(self._tables[seq])
+
+    def seq_len(self, seq: int) -> int:
+        return self._lens[seq]
+
+    def refcount(self, pid: int) -> int:
+        return self._ref[pid]
+
+    # ---- admission ----
+    def can_admit(self, reserve_tokens: int, *, shared_tokens: int = 0) -> bool:
+        """Would `admit` succeed? Shared full pages come from the parent;
+        the boundary page (if any) costs a fresh CoW page, and everything
+        past the shared prefix costs fresh pages."""
+        return self._admit_cost(reserve_tokens, shared_tokens) <= self.free_pages
+
+    def _admit_cost(self, reserve_tokens: int, shared_tokens: int) -> int:
+        total = pages_for(reserve_tokens, self.page_size)
+        full_shared = shared_tokens // self.page_size
+        return total - full_shared  # boundary partial page needs its own copy
+
+    def admit(
+        self,
+        seq: int,
+        prompt_len: int,
+        reserve_tokens: int,
+        *,
+        share_from: Optional[int] = None,
+        shared_tokens: int = 0,
+    ) -> List[CowCopy]:
+        """Register `seq`, materialize pages covering `prompt_len`, reserve up
+        to `reserve_tokens`. With `share_from`, the first `shared_tokens`
+        positions alias the parent's pages (full pages by reference; the
+        partial boundary page as an immediate CoW copy). Returns the device
+        copies owed. Raises PageError when the pool cannot cover it."""
+        if seq in self._tables:
+            raise PageError(f"seq {seq} already admitted")
+        if shared_tokens and share_from is None:
+            raise PageError("shared_tokens needs share_from")
+        reserve_tokens = max(reserve_tokens, prompt_len)
+        if shared_tokens > prompt_len:
+            raise PageError("cannot share more than the prompt")
+        if share_from is not None and shared_tokens > self._lens.get(share_from, -1):
+            raise PageError("cannot share beyond the parent's length")
+        if not self.can_admit(reserve_tokens, shared_tokens=shared_tokens):
+            raise PageError(
+                f"pool exhausted: need {self._admit_cost(reserve_tokens, shared_tokens)}"
+                f" pages, {self.free_pages} free"
+            )
+
+        table: List[int] = []
+        cows: List[CowCopy] = []
+        full_shared = shared_tokens // self.page_size
+        if share_from is not None:
+            parent_tbl = self._tables[share_from]
+            for j in range(full_shared):
+                pid = parent_tbl[j]
+                self._ref[pid] += 1
+                table.append(pid)
+            if shared_tokens % self.page_size:
+                # boundary page: child writes its tail into it → private copy
+                dst = self._take_page()
+                cows.append(CowCopy(src=parent_tbl[full_shared], dst=dst))
+                table.append(dst)
+        while len(table) < pages_for(prompt_len, self.page_size):
+            table.append(self._take_page())
+        self._tables[seq] = table
+        self._lens[seq] = prompt_len
+        self._reserved[seq] = pages_for(reserve_tokens, self.page_size) - len(table)
+        return cows
+
+    # ---- growth ----
+    def extend(self, seq: int, new_len: int) -> List[CowCopy]:
+        """Materialize pages so positions [len, new_len) are writable by
+        `seq` alone: fresh pages from the reservation for new coverage, and
+        a private CoW copy of the current tail page if another sequence
+        still references it. Returns the device copies owed."""
+        if seq not in self._tables:
+            raise PageError(f"seq {seq} not admitted")
+        cur = self._lens[seq]
+        if new_len <= cur:
+            return []
+        table = self._tables[seq]
+        cows: List[CowCopy] = []
+        # Defensive writer-side CoW. Unreachable through admit() (shared
+        # pages always lie strictly below every owner's length — see the
+        # module docstring), but a write into a shared page would silently
+        # corrupt the sharer, so guard against future callers anyway. The
+        # copy is charged to this seq's reservation when it has one, else
+        # the free pool.
+        first_page = cur // self.page_size
+        if first_page < len(table) and self._ref[table[first_page]] > 1:
+            use_resv = self._reserved.get(seq, 0) > 0
+            dst = self._take_page(from_reservation=seq if use_resv else None)
+            cows.append(CowCopy(src=table[first_page], dst=dst))
+            self._ref[table[first_page]] -= 1
+            table[first_page] = dst
+        need = pages_for(new_len, self.page_size)
+        while len(table) < need:
+            table.append(self._take_page(from_reservation=seq))
+        self._lens[seq] = new_len
+        return cows
+
+    def _take_page(self, from_reservation: Optional[int] = None) -> int:
+        if from_reservation is not None:
+            if self._reserved.get(from_reservation, 0) < 1:
+                raise PageError(
+                    f"seq {from_reservation} grew past its reservation"
+                )
+            self._reserved[from_reservation] -= 1
+        elif not self._free or self.free_pages < 1:
+            raise PageError("page pool exhausted")
+        pid = self._free.pop()
+        self._ref[pid] = 1
+        return pid
+
+    # ---- release ----
+    def free(self, seq: int) -> None:
+        """Release `seq`: decref its pages (exclusive ones return to the
+        pool; pages a sharer still holds stay allocated) and drop its
+        reservation."""
+        table = self._tables.pop(seq)
+        del self._lens[seq]
+        self._reserved.pop(seq, None)
+        for pid in table:
+            self._ref[pid] -= 1
+            if self._ref[pid] == 0:
+                self._free.append(pid)
+
+    # ---- invariants (tests call this after every schedule step) ----
+    def check(self) -> None:
+        assert self._ref[GARBAGE_PAGE] == 0, "garbage page must never be allocated"
+        assert GARBAGE_PAGE not in self._free
+        # refcount of every page == number of live tables referencing it
+        counts = [0] * self.n_pages
+        for table in self._tables.values():
+            for pid in table:
+                counts[pid] += 1
+        assert counts == self._ref, f"refcount drift: {counts} vs {self._ref}"
+        # free list holds exactly the zero-ref pages, each once
+        free_set = set(self._free)
+        assert len(free_set) == len(self._free), "duplicate page in free list"
+        for pid in range(1, self.n_pages):
+            assert (self._ref[pid] == 0) == (pid in free_set)
+        # every table covers exactly ceil(len / page) pages
+        for seq, table in self._tables.items():
+            assert len(table) == pages_for(self._lens[seq], self.page_size)
+        # shared pages are read-only: every sequence referencing a page with
+        # refcount > 1 must be fully past it (future writes land at
+        # positions ≥ len, so page j is write-free iff (j+1)·page ≤ len) —
+        # and prefix sharing means it sits at the same logical index in
+        # every referencing table
+        owners: Dict[int, List[Tuple[int, int]]] = {}
+        for seq, table in self._tables.items():
+            for j, pid in enumerate(table):
+                if self._ref[pid] > 1:
+                    assert (j + 1) * self.page_size <= self._lens[seq], (
+                        f"seq {seq} can still write shared page {pid}"
+                    )
+                    owners.setdefault(pid, []).append((seq, j))
+        for pid, refs in owners.items():
+            assert len({j for _, j in refs}) == 1, (
+                f"page {pid} aliased at different logical indexes: {refs}"
+            )
+        # reservations never exceed the physically free pages
+        assert sum(self._reserved.values()) <= len(self._free)

@@ -1,9 +1,19 @@
 """Batched serving engine: prefill → decode with per-sequence state.
 
 A deliberately small but real continuous-batching engine: requests join a
-fixed-width slot array; each slot carries its own cache region and length;
-finished slots are refilled from the queue. Sampling: greedy / temperature /
-top-k.
+slot array; finished slots are refilled from the queue. Sampling: greedy /
+temperature / top-k. Two KV memory models (ServeConfig.kv_layout):
+
+  contiguous (default) — each slot owns a fixed max_len-wide cache region;
+    memory commits max_batch × max_len tokens up front.
+  paged (DESIGN.md §3.4) — KV lives in a global page pool with
+    per-sequence block tables (runtime/kvcache.py); admission is by FREE
+    PAGES, prompts sharing a page-aligned prefix with a live sequence
+    reuse its pages (full pages by reference, the boundary page as a CoW
+    copy) and prefill only the tail, and decode runs the block-table
+    scalar-prefetch kernel (kernels/flashd_decode) under *_pallas impls.
+    Short-request workloads pack the same memory budget several-fold
+    denser (BENCH_paged.json).
 
 The decode hot loop is fully on-device (DESIGN.md §3.3):
 
@@ -17,8 +27,10 @@ The decode hot loop is fully on-device (DESIGN.md §3.3):
     (`ServeConfig.decode_chunk` steps per dispatch): one host sync per
     chunk instead of per token, with completions / slot refills resolved
     between chunks. Tokens a slot produced after its EOS inside a chunk
-    are discarded on the host; the refill prefill then overwrites that
-    slot's cache region, so the speculative steps are harmless.
+    are discarded on the host; the speculative steps are harmless — the
+    refill prefill overwrites the slot's cache region (contiguous), or
+    the dead slot's block-table row is pointed at the garbage page
+    before its pages are reused (paged).
 
 The caches come from the model API (`init_cache`) — attention layers hold
 KV rings, SSM/RG-LRU layers hold recurrent state — so the same engine
@@ -61,6 +73,49 @@ class ServeConfig:
     eos_id: int = -1  # <0: run to max_new_tokens
     seed: int = 0
     decode_chunk: int = 8  # tokens per device dispatch in `serve`
+    # ---- paged KV cache (DESIGN.md §3.4) ----
+    kv_layout: str = "contiguous"  # "paged": page-pool KV in `serve`
+    page_size: int = 0  # 0 → repro.kernels.tuning heuristic
+    kv_pool_tokens: int = 0  # pool size in tokens; 0 → max_batch·max_len
+    prefix_sharing: bool = True  # share common prompt-prefix pages (CoW)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _copy_pool_pages(pages, srcs, dsts):
+    """pages[:, d] ← pages[:, s] for every owed CoW copy, in one update.
+    The pool is donated so backends that support donation do it in place
+    (O(pages copied), not O(pool))."""
+    return pages.at[:, dsts].set(pages[:, srcs])
+
+
+def _map_paged(cache, *rest, pool=None, tbl=None, batch=None):
+    """Tree-map over a (possibly paged) cache with per-leaf-kind functions.
+
+    Leaf kinds by dict key: `k_pages`/`v_pages` are POOL leaves (global
+    page arrays, no batch axis — [n_blocks, P, page, Hkv, hd]); everything
+    else — including the block table `tbl` — is a PER-BATCH leaf (batch on
+    axis 1 after block stacking). `tbl=` overrides the per-batch handler
+    for table leaves (engine table mirroring); a missing handler leaves the
+    leaf unchanged. Extra cache trees in `rest` are zipped leaf-wise."""
+    from jax import tree_util as jtu
+
+    def leaf_name(path):
+        for e in reversed(path):
+            if isinstance(e, jtu.DictKey):
+                return e.key
+        return None
+
+    def apply(path, x, *xs):
+        name = leaf_name(path)
+        if name in ("k_pages", "v_pages"):
+            fn = pool
+        elif name == "tbl":
+            fn = tbl if tbl is not None else batch
+        else:
+            fn = batch
+        return x if fn is None else fn(x, *xs)
+
+    return jtu.tree_map_with_path(apply, cache, *rest)
 
 
 def sample_token(logits: jax.Array, key, cfg: ServeConfig) -> jax.Array:
@@ -87,8 +142,40 @@ class Engine:
         )
         self._key = jax.random.PRNGKey(serve_cfg.seed)
         self.host_syncs = 0  # device→host transfers issued by this engine
+        self.peak_active = 0  # max concurrent sequences observed by `serve`
         self._gen = jax.jit(self._gen_fn, static_argnums=(4,))
         self._chunk = jax.jit(self._chunk_fn, static_argnums=(5,))
+        self._page_layout = None
+        if serve_cfg.kv_layout == "paged":
+            from repro.kernels.tuning import choose_page_layout  # lazy
+            from repro.models.transformer import paged_mixers
+
+            if getattr(model_cfg, "is_encdec", False) or not paged_mixers(model_cfg):
+                # no global-attention layer to page (pure SSM/ring stacks,
+                # enc-dec) — serve falls back to the contiguous layout
+                pass
+            else:
+                self._page_layout = choose_page_layout(
+                    serve_cfg.max_len,
+                    model_cfg.head_dim_,
+                    model_cfg.head_dim_,
+                    group=model_cfg.n_heads // model_cfg.n_kv_heads,
+                    pool_tokens=serve_cfg.kv_pool_tokens
+                    or serve_cfg.max_batch * serve_cfg.max_len,
+                    page_size=serve_cfg.page_size or None,
+                )
+        # prefix sharing skips the shared positions' prefill steps, which is
+        # only sound when EVERY mixer reads the paged cache: ring
+        # (local/chunked) and SSM/RG-LRU layers carry state those steps
+        # would have produced (see prefill_lm's start_pos contract)
+        self._can_share_prefix = (
+            self._page_layout is not None
+            and serve_cfg.prefix_sharing
+            and all(
+                m in ("attn", "attn_nope", "attn_bidir")
+                for m, _ in (*model_cfg.pattern, *model_cfg.remainder)
+            )
+        )
 
     def _scope(self):
         """Sharding scope for traces/dispatches: activates the ctx and the
@@ -171,10 +258,14 @@ class Engine:
 
         Slot-parallel: up to max_batch requests decode together; finished
         slots take the next queued request between chunks (its prefill runs
-        as a batch-1 prefill into that slot's cache region — kept simple
-        here; a production engine would chunk prefills into the decode
-        batch)."""
+        as a batch-1 prefill — into that slot's cache region under the
+        contiguous layout, or straight into its allocated pages under
+        `kv_layout="paged"`, where admission is gated by the allocator's
+        free-page count instead of slot width; a production engine would
+        chunk prefills into the decode batch)."""
         with self._scope():
+            if self._page_layout is not None:
+                return self._serve_paged(requests, max_new_tokens)
             return self._serve_impl(requests, max_new_tokens)
 
     def _serve_impl(self, requests: List[np.ndarray], max_new_tokens: int) -> List[np.ndarray]:
@@ -221,6 +312,7 @@ class Engine:
         for s in range(b):
             assign(s)
 
+        self.peak_active = max(self.peak_active, sum(r >= 0 for r in slot_req))
         while any(r >= 0 for r in slot_req):
             self._key, k = jax.random.split(self._key)
             cache, tok, pos, toks = self._chunk(
@@ -244,4 +336,218 @@ class Engine:
                         break
             for s in finished:
                 assign(s)  # refill overwrites the slot's cache / tok / pos
+            self.peak_active = max(
+                self.peak_active, sum(r >= 0 for r in slot_req)
+            )
+        return [r if r is not None else np.zeros((0,), np.int32) for r in results]
+
+    # ---- paged continuous batching (DESIGN.md §3.4) ----
+    def _serve_paged(self, requests: List[np.ndarray], max_new_tokens: int) -> List[np.ndarray]:
+        """Continuous batching over a page-pool KV cache.
+
+        Differences from the contiguous loop:
+
+          * admission is by FREE PAGES, not slot count: a request is
+            admitted when the pool can cover its worst case
+            (prompt + max_new_tokens + one decode chunk of speculative
+            slack, minus shared prefix pages); a blocked head-of-line
+            request waits for frees, so short sequences pack the pool far
+            denser than `max_batch × max_len` slots would;
+          * prompts sharing a page-aligned-or-longer prefix with a live
+            sequence reuse its KV pages (full pages by reference, the
+            boundary page as a CoW copy) and prefill only the tail;
+          * before every chunk the allocator materializes pages covering
+            the chunk's writes and the engine mirrors grown block tables
+            to the device; finished slots free their pages and point
+            their table row at the garbage page, so lockstep speculative
+            writes from dead slots stay harmless.
+        """
+        from repro.runtime.kvcache import PagedKVAllocator, PageError, pages_for
+
+        lay = self._page_layout
+        page = lay.page_size
+        results: List[Optional[np.ndarray]] = [None] * len(requests)
+        queue = list(enumerate(requests))
+        b = self.sc.max_batch
+        alloc = PagedKVAllocator(lay.n_pages, page)
+        cache = self.api.init_cache(
+            b, self.sc.max_len, self.mc,
+            layout="paged", page_size=page, n_pages=lay.n_pages,
+        )
+        tok = jnp.zeros((b,), jnp.int32)
+        pos = jnp.zeros((b,), jnp.int32)
+        slot_req = [-1] * b
+        slot_out: List[List[int]] = [[] for _ in range(b)]
+        slot_len = [0] * b  # host mirror: positions materialized so far
+        slot_prompt: List[Optional[np.ndarray]] = [None] * b
+        chunk_n = max(1, min(self.sc.decode_chunk, max_new_tokens))
+
+        def best_prefix(prompt: np.ndarray):
+            """Longest common prompt prefix with a live sequence — the
+            prefix-sharing candidate. Worth taking only when it covers at
+            least one full page (a shorter match saves nothing: the
+            boundary CoW copy costs the same page a fresh alloc would)."""
+            if not self._can_share_prefix:
+                return -1, 0
+            best_s, best_n = -1, 0
+            for s in range(b):
+                if slot_req[s] < 0 or slot_prompt[s] is None:
+                    continue
+                other = slot_prompt[s]
+                m = min(len(prompt), len(other))
+                n = int(np.argmin(np.equal(prompt[:m], other[:m]))) \
+                    if not np.array_equal(prompt[:m], other[:m]) else m
+                if n > best_n:
+                    best_s, best_n = s, n
+            best_n = min(best_n, len(prompt) - 1)  # the tail must run ≥ 1 token
+            if best_n < page:
+                return -1, 0
+            return best_s, best_n
+
+        def set_tbl_row(c, slot: int, table: List[int]):
+            row = np.zeros((lay.pages_per_seq,), np.int32)
+            row[: len(table)] = table
+            row_j = jnp.asarray(row)
+            return _map_paged(
+                c,
+                tbl=lambda x: x.at[:, slot].set(row_j[None]),
+            )
+
+        def copy_pages(c, cows):
+            if not cows:
+                return c
+            # one jitted gather-scatter for ALL owed copies per leaf, with
+            # the pool buffer donated: XLA updates the pages in place
+            # instead of rewriting a pool-sized array per CowCopy
+            srcs = jnp.asarray([cw.src for cw in cows], jnp.int32)
+            dsts = jnp.asarray([cw.dst for cw in cows], jnp.int32)
+            return _map_paged(c, pool=lambda x: _copy_pool_pages(x, srcs, dsts))
+
+        def assign(slot: int) -> bool:
+            """Admit the head-of-line request into `slot` if the pool can
+            cover it. Returns False (and leaves the queue intact) when it
+            cannot — the request waits for pages to free. FIFO order is
+            preserved: later requests never jump a blocked head."""
+            nonlocal cache, tok, pos
+            while queue:
+                rid, prompt = queue[0]
+                n_prompt = len(prompt)
+                if n_prompt + max_new_tokens > self.sc.max_len:
+                    raise ValueError(
+                        f"request {rid}: prompt {n_prompt} + {max_new_tokens}"
+                        f" exceeds max_len {self.sc.max_len}"
+                    )
+                # speculative post-EOS chunk steps need slack, but tables
+                # are only ⌈max_len/page⌉ wide — writes past max_len land
+                # on the garbage page instead (the in-table clamp), so the
+                # reservation never needs to exceed max_len
+                reserve = min(n_prompt + max_new_tokens + chunk_n,
+                              self.sc.max_len)
+                parent_slot, shared = best_prefix(np.asarray(prompt))
+                if not alloc.can_admit(reserve, shared_tokens=shared):
+                    # sharing never costs more pages than an unshared admit,
+                    # so there is no cheaper retry — wait for frees
+                    if any(r >= 0 for r in slot_req):
+                        return False  # live sequences will free pages
+                    raise PageError(
+                        f"request {rid} needs {pages_for(reserve, page)} pages"
+                        f" but the pool holds {lay.n_pages - 1}"
+                    )
+                queue.pop(0)
+                cows = alloc.admit(
+                    rid, prompt_len=n_prompt, reserve_tokens=reserve,
+                    share_from=slot_req[parent_slot] if parent_slot >= 0 else None,
+                    shared_tokens=shared,
+                )
+                cache = copy_pages(cache, cows)
+                cache = set_tbl_row(cache, slot, alloc.table(rid))
+                # tail-only prefill: shared pages already hold [0, shared)
+                tail = np.asarray(prompt[shared:])
+                view = _map_paged(
+                    cache, batch=lambda x: x[:, slot:slot + 1]
+                )
+                logits, view = prefill_lm(
+                    self.params, jnp.asarray(tail[None], jnp.int32), view,
+                    self.mc, start_pos=shared,
+                )
+                cache = _map_paged(
+                    cache, view,
+                    pool=lambda x, o: o,  # updated pool (slot's pages only)
+                    batch=lambda x, o: x.at[:, slot].set(o[:, 0]),
+                )
+                self._key, k = jax.random.split(self._key)
+                t0 = int(self._to_host(sample_token(logits, k, self.sc))[0])
+                done = max_new_tokens <= 1 or (
+                    self.sc.eos_id >= 0 and t0 == self.sc.eos_id
+                )
+                if done:
+                    results[rid] = np.asarray([t0], np.int32)
+                    alloc.free(rid)
+                    cache = set_tbl_row(cache, slot, [])
+                    continue
+                slot_req[slot] = rid
+                slot_out[slot] = [t0]
+                slot_len[slot] = n_prompt
+                slot_prompt[slot] = np.asarray(prompt)
+                tok = tok.at[slot].set(t0)
+                pos = pos.at[slot].set(n_prompt)
+                return True
+            return False
+
+        def retire(slot: int):
+            alloc.free(slot_req[slot])
+            slot_req[slot] = -1
+            slot_prompt[slot] = None
+
+        for s in range(b):
+            assign(s)
+
+        self.peak_active = max(self.peak_active, sum(r >= 0 for r in slot_req))
+        while any(r >= 0 for r in slot_req):
+            # materialize pages for this chunk's writes; mirror grown tables
+            for s in range(b):
+                if slot_req[s] < 0:
+                    continue
+                before = len(alloc.table(slot_req[s]))
+                # clamp to max_len: table width is ⌈max_len/page⌉ and writes
+                # past it clamp to the garbage page in _paged_attn_step
+                cows = alloc.extend(
+                    slot_req[s], min(slot_len[s] + chunk_n, self.sc.max_len)
+                )
+                cache = copy_pages(cache, cows)
+                if cows or len(alloc.table(slot_req[s])) != before:
+                    cache = set_tbl_row(cache, s, alloc.table(slot_req[s]))
+            self._key, k = jax.random.split(self._key)
+            cache, tok, pos, toks = self._chunk(
+                self.params, cache, tok, pos, k, chunk_n
+            )
+            toks_np = self._to_host(toks)  # one sync per chunk
+            finished = []
+            for s in range(b):
+                rid = slot_req[s]
+                if rid < 0:
+                    continue
+                slot_len[s] = min(slot_len[s] + chunk_n, self.sc.max_len)
+                for step in range(chunk_n):
+                    t = int(toks_np[step, s])
+                    slot_out[s].append(t)
+                    done = len(slot_out[s]) >= max_new_tokens or (
+                        self.sc.eos_id >= 0 and t == self.sc.eos_id
+                    )
+                    if done:  # later tokens in this chunk are speculative
+                        results[rid] = np.asarray(slot_out[s], np.int32)
+                        finished.append(s)
+                        break
+            for s in finished:
+                retire(s)
+                # the freed pages may be reassigned immediately — point the
+                # dead slot's table at the garbage page before that happens
+                cache = set_tbl_row(cache, s, [])
+            for s in range(b):  # refill every empty slot the pool now admits
+                if slot_req[s] < 0 and queue:
+                    if not assign(s):
+                        break
+            self.peak_active = max(
+                self.peak_active, sum(r >= 0 for r in slot_req)
+            )
         return [r if r is not None else np.zeros((0,), np.int32) for r in results]

@@ -243,6 +243,56 @@ def test_cp_decode_batch_and_seq_sharded_mesh():
     """)
 
 
+def test_paged_decode_routes_through_cp_when_seq_sharded():
+    """Paged caches must keep the context-parallel interplay: when the
+    active ShardingCtx seq-shards the (gathered) cache, `_paged_attn_step`
+    gathers its pages and merges per-shard partials through cp_decode —
+    the jaxpr carries ppermutes — and still matches the unsharded paged
+    decode step."""
+    _run_in_subprocess("""
+    import dataclasses
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import paper_llama
+    from repro.distributed import sharding as shd
+    from repro.models import get_model
+    from repro.models.transformer import init_decode_cache, prefill_lm
+
+    cfg = dataclasses.replace(
+        paper_llama.CONFIG, n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+        d_ff=64, head_dim=8, vocab_size=64, vocab_pad_multiple=32,
+    )
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    b, max_len, page = 2, 64, 8
+    cache = init_decode_cache(b, max_len, cfg, layout="paged", page_size=page)
+    # distinct physical pages per row, every layer mirrors the same table
+    tbl = jnp.asarray([np.arange(1, 9), np.arange(9, 17)], jnp.int32)
+    cache = jax.tree_util.tree_map_with_path(
+        lambda p, x: x.at[:].set(tbl[None]) if any(
+            getattr(e, "key", None) == "tbl" for e in p) else x,
+        cache,
+    )
+    prompts = np.random.default_rng(4).integers(0, 64, (b, 6)).astype(np.int32)
+    logits_ref, cache_ref = prefill_lm(
+        params, jnp.asarray(prompts, jnp.int32), cache, cfg)
+
+    mesh = jax.make_mesh((8,), ("data",))
+    with shd.activate(shd.ShardingCtx(mesh)), shd.mesh_ctx(mesh):
+        # gathered paged cache is [B=2, 64, 2, 8]: B < data ⇒ seq CP
+        assert shd.cp_axis_for_cache((b, max_len, 2, 8)) == "data"
+        logits_cp, _ = prefill_lm(
+            params, jnp.asarray(prompts, jnp.int32), cache, cfg)
+        tok = jnp.asarray(prompts[:, 0])
+        pos = jnp.zeros((b,), jnp.int32)
+        jx = str(jax.make_jaxpr(lambda p, c, t, z: api.decode_step(
+            p, c, t, z, cfg))(params, cache, tok, pos))
+    assert "ppermute" in jx  # paged decode merged cross-device, no gather-all
+    np.testing.assert_allclose(np.asarray(logits_cp), np.asarray(logits_ref),
+                               rtol=1e-4, atol=1e-4)
+    print("paged cp OK")
+    """)
+
+
 def test_engine_decode_on_cp_mesh_matches_unsharded():
     """End-to-end: Engine.generate with a sharding ctx whose kv_cache rule
     seq-shards the cache (B < data axis) emits the same tokens as the

@@ -8,6 +8,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.core.blockwise import MaskSpec
 from repro.kernels.fa2_fwd import fa2_fwd_pallas
@@ -49,6 +51,60 @@ def test_fwd_kernels_sweep(shape, dtype, tol, kernel):
         np.testing.assert_allclose(
             jnp.where(live, lam, 0.0), jnp.where(live, lam_ref, 0.0),
             rtol=1e-2 if dtype == jnp.bfloat16 else 1e-4, atol=1e-2,
+        )
+
+
+def _drawn_mask(maskkind, maskparam, skv):
+    if maskkind == "local":
+        return MaskSpec("local", window=1 + maskparam % max(skv, 1))
+    if maskkind == "chunked":
+        return MaskSpec("chunked", chunk=1 + maskparam % max(skv, 1))
+    return MaskSpec(maskkind)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    b=st.integers(min_value=1, max_value=2),
+    hkv=st.integers(min_value=1, max_value=2),
+    group=st.sampled_from([1, 2, 4]),
+    sq=st.integers(min_value=1, max_value=40),
+    skv=st.integers(min_value=1, max_value=40),
+    d=st.sampled_from([8, 16, 32]),
+    maskkind=st.sampled_from(["full", "causal", "local", "chunked"]),
+    maskparam=st.integers(min_value=0, max_value=63),
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+)
+def test_fwd_kernels_property_sweep(seed, b, hkv, group, sq, skv, d,
+                                    maskkind, maskparam, dtype):
+    """flashd_fwd == fa2_fwd == reference across the fuzzed shape/mask grid
+    in BOTH f32 and bf16 (dtype-appropriate tolerances): the two kernels
+    must agree with the oracle and — more tightly — with each other, since
+    they consume identical tiles and differ only in the carry algebra."""
+    dt = jnp.dtype(dtype)
+    tol = 2e-2 if dt == jnp.bfloat16 else 2e-5
+    mask = _drawn_mask(maskkind, maskparam, skv)
+    q, k, v = _inputs(seed % 1000, b, hkv * group, hkv, sq, skv, d, dt)
+    o_fd, l_fd = flashd_fwd_pallas(q, k, v, mask=mask, block_q=16, block_k=16,
+                                   interpret=True)
+    o_fa, l_fa = fa2_fwd_pallas(q, k, v, mask=mask, block_q=16, block_k=16,
+                                interpret=True)
+    o_ref, l_ref = attention_ref(q, k, v, mask=mask)
+    for o in (o_fd, o_fa):
+        np.testing.assert_allclose(
+            o.astype(jnp.float32), o_ref.astype(jnp.float32), rtol=tol, atol=tol
+        )
+    # kernel-vs-kernel: same tiles, same masks — tighter than vs the oracle
+    np.testing.assert_allclose(
+        o_fd.astype(jnp.float32), o_fa.astype(jnp.float32),
+        rtol=tol / 2, atol=tol / 2,
+    )
+    live = l_ref > -1e29  # fully-masked rows park Λ at NEG_INF sentinels
+    lam_tol = 1e-2 if dt == jnp.bfloat16 else 1e-4
+    for lam in (l_fd, l_fa):
+        np.testing.assert_allclose(
+            jnp.where(live, lam, 0.0), jnp.where(live, l_ref, 0.0),
+            rtol=lam_tol, atol=lam_tol,
         )
 
 
@@ -144,6 +200,64 @@ def test_bwd_kernel_vs_autodiff(hq, hkv, mask):
     g = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
     for got, want in zip((dq, dk, dv), g):
         np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    hkv=st.integers(min_value=1, max_value=2),
+    group=st.sampled_from([1, 2, 4]),
+    sq=st.integers(min_value=1, max_value=36),
+    skv=st.integers(min_value=1, max_value=36),
+    d=st.sampled_from([8, 16]),
+    maskkind=st.sampled_from(["full", "causal", "local", "chunked"]),
+    maskparam=st.integers(min_value=0, max_value=63),
+)
+def test_bwd_kernel_property_vs_autodiff(seed, hkv, group, sq, skv, d,
+                                         maskkind, maskparam):
+    """Gradient property: flashd_bwd (dq/dkv Pallas kernels) == jax.grad of
+    the reference attention on randomized shapes AND randomized mask
+    parameters — not just the fixed window/chunk cases. Catches tile-edge
+    bugs (ragged sq/skv vs block 16) and mask-boundary dΛ terms the
+    enumerated suite cannot reach."""
+    from repro.kernels.flashd_bwd import flashd_bwd_pallas
+
+    mask = _drawn_mask(maskkind, maskparam, skv)
+    rng = np.random.default_rng(seed % 100000)
+    hq = hkv * group
+    q = jnp.asarray(rng.normal(size=(2, hq, sq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, hkv, skv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, hkv, skv, d)), jnp.float32)
+    do = jnp.asarray(rng.normal(size=(2, hq, sq, d)), jnp.float32)
+    o, lam = attention_ref(q, k, v, mask=mask)
+    dq, dk, dv = flashd_bwd_pallas(
+        q, k, v, o, lam, do, mask=mask, block_q=16, block_k=16, interpret=True
+    )
+
+    def loss(q, k, v):
+        o, _ = attention_ref(q, k, v, mask=mask)
+        return jnp.sum(o * do)
+
+    g = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    for got, want in zip((dq, dk, dv), g):
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_dead_q_rows_zero_everywhere():
+    """sq > skv + window leaves q rows with NO visible key. Forward kernels
+    and the (fixed) oracle must emit zeros + Λ = NEG_INF for them — not the
+    uniform-softmax artifact logsumexp(-1e30·k) invites — and the backward
+    must stay finite with zero grads flowing through those rows."""
+    mask = MaskSpec("local", window=12)
+    q, k, v = _inputs(9, 1, 2, 1, 35, 17, 16, jnp.float32)
+    o_ref, lam_ref = attention_ref(q, k, v, mask=mask)
+    dead = np.asarray(lam_ref) <= -1e29
+    assert dead.any()  # rows ≥ skv + window − 1 are dead by construction
+    np.testing.assert_array_equal(np.asarray(o_ref)[dead], 0.0)
+    for kernel in (flashd_fwd_pallas, fa2_fwd_pallas):
+        o, lam = kernel(q, k, v, mask=mask, block_q=16, block_k=16, interpret=True)
+        np.testing.assert_allclose(o, o_ref, rtol=2e-5, atol=2e-5)
+        assert (np.asarray(lam)[dead] <= -1e29).all()
 
 
 def test_full_pallas_train_path():
