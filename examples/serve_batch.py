@@ -2,7 +2,11 @@
 
 Trains nothing — initializes a small model, runs the slot-based engine:
 prefill per request, shared decode steps, queue refill on completion.
-Also demonstrates the FLASH-D split-K decode merge on a longer cache.
+Then the paged page-pool engine, then the MIXED varlen step
+(DESIGN.md §3.5): chunked prefill interleaved with decode in one packed
+dispatch — watch a long prompt stop blocking the short requests'
+time-to-first-token. Also demonstrates the FLASH-D split-K decode merge
+on a longer cache.
 
 Run:  PYTHONPATH=src python examples/serve_batch.py
 """
@@ -45,6 +49,27 @@ paged = Engine(params, cfg, ServeConfig(
 outs_p = paged.serve(requests, max_new_tokens=12)
 print(f"paged pool (96 tokens vs {4 * 96} contiguous): "
       f"{sum(map(len, outs_p))} tokens, peak {paged.peak_active} concurrent")
+
+# mixed varlen step (DESIGN.md §3.5): one LONG prompt in a queue of short
+# ones. The sequential engines run its whole prefill as one blocking
+# dispatch; the mixed engine drips it in prefill_chunk-token pieces packed
+# together with every decoding slot's next token — same greedy tokens,
+# much lower time-to-first-token for everything behind the long prompt.
+long_reqs = [rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+             for n in (6, 128, 5, 7)]  # short, LONG, short, short
+seq_cfg = ServeConfig(max_batch=2, max_len=160, temperature=0.0)
+mix_cfg = ServeConfig(max_batch=2, max_len=160, temperature=0.0,
+                      step_mode="mixed", prefill_chunk=32, token_budget=34)
+eng_seq = Engine(params, cfg, seq_cfg)
+outs_seq = eng_seq.serve(long_reqs, max_new_tokens=8)
+eng_mix = Engine(params, cfg, mix_cfg)
+outs_mix = eng_mix.serve(long_reqs, max_new_tokens=8)
+assert all(np.array_equal(a, b) for a, b in zip(outs_seq, outs_mix))
+print("mixed varlen step: token-identical to sequential; TTFT per request")
+for rid in sorted(eng_seq.ttft):
+    print(f"  req[{rid}] ({len(long_reqs[rid])} prompt toks): "
+          f"sequential {eng_seq.ttft[rid]*1e3:7.1f} ms → "
+          f"mixed {eng_mix.ttft[rid]*1e3:7.1f} ms")
 
 # split-K decode: one query over a long cache, partials merged by sigmoid
 b, s, hq, hkv, d = 2, 512, 8, 2, 64

@@ -1,6 +1,11 @@
 """FLASH-D core: the paper's contribution as composable JAX ops."""
 
-from repro.core.attention import MaskSpec, decode_attention, flash_attention
+from repro.core.attention import (
+    MaskSpec,
+    decode_attention,
+    flash_attention,
+    varlen_attention,
+)
 from repro.core.blockwise import (
     blockwise_fa2,
     blockwise_flashd,
@@ -17,6 +22,7 @@ __all__ = [
     "MaskSpec",
     "flash_attention",
     "decode_attention",
+    "varlen_attention",
     "blockwise_flashd",
     "blockwise_fa2",
     "merge_partials",

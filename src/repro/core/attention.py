@@ -34,6 +34,7 @@ __all__ = [
     "decode_attention",
     "decode_attention_paged",
     "gather_pages",
+    "varlen_attention",
     "MaskSpec",
 ]
 
@@ -295,6 +296,94 @@ def decode_attention(
         o, lam = merge_partials(o_p, lam_p)  # FLASH-D split-K merge
 
     return o.reshape(b, 1, hq, -1).astype(q.dtype)
+
+
+def varlen_attention(
+    q: jax.Array,  # [T, Hq, d] — packed query rows from many sequences
+    k_pages: jax.Array,  # [P, page, Hkv, d] — global page pool
+    v_pages: jax.Array,  # [P, page, Hkv, dv]
+    block_tbl: jax.Array,  # [B, N] i32 per-sequence block tables
+    seq_ids: jax.Array,  # [T] i32 owning sequence per row (−1 = padding)
+    q_pos: jax.Array,  # [T] i32 absolute KV position per row (−1 = padding)
+    kv_len: jax.Array,  # [B] i32 visible KV length per sequence
+    *,
+    scale: Optional[float] = None,
+    window: int = 0,
+    chunk: int = 0,
+    impl: str = "flashd",
+    block_q: Optional[int] = None,
+) -> jax.Array:
+    """Packed varlen attention over a paged KV cache → o [T, Hq, dv].
+
+    THE unified serving entry (DESIGN.md §3.5): prefill chunks, whole
+    prompts and single decode tokens ride in one flat batch — a decode
+    token is just a 1-row segment. Every row attends its own sequence's
+    pages under a causal (× window/chunk) mask at its absolute position;
+    padding rows (seq_ids < 0) return zeros.
+
+    `impl` ∈ {*_pallas → the fused Pallas kernel (block-table gather in
+    the DMA descriptors, in-VMEM sigmoid carry); anything else → this jnp
+    mirror}. The mirror gathers each row's pages to a contiguous view, so
+    its working set is O(T · N·page) — fine for serving packs, not meant
+    for training-sized T. The Pallas path requires the packing contract
+    (block_q-aligned segments, see kernels/flashd_varlen.py); rows are
+    padded to a block multiple here, but segment ALIGNMENT is the
+    caller's job (the scheduler's packer provides it).
+    """
+    t, hq, d = q.shape
+    _, page, hkv, dv = v_pages.shape
+    g = hq // hkv
+    if scale is None:
+        scale = float(1.0 / (d ** 0.5))
+    seq_ids = jnp.asarray(seq_ids, jnp.int32)
+    q_pos = jnp.asarray(q_pos, jnp.int32)
+    kv_len = jnp.asarray(kv_len, jnp.int32).reshape(-1)
+
+    if impl.endswith("_pallas"):
+        from repro.kernels import ops as kernel_ops  # lazy: avoid import cycle
+
+        if block_q is None:
+            from repro.kernels.tuning import choose_varlen_blocks
+
+            block_q = choose_varlen_blocks(t, d, dv, group=g, page=page).block_q
+        pad = (-t) % block_q
+        if pad:
+            q = jnp.pad(q, ((0, pad), (0, 0), (0, 0)))
+            seq_ids = jnp.pad(seq_ids, (0, pad), constant_values=-1)
+            q_pos = jnp.pad(q_pos, (0, pad), constant_values=-1)
+        o = kernel_ops.pallas_varlen(
+            q, k_pages, v_pages, block_tbl, seq_ids, q_pos, kv_len,
+            scale=scale, window=window, chunk=chunk, block_q=block_q,
+        )
+        return o[:t]
+
+    # jnp mirror: gather each row's sequence cache, one einsum per pack.
+    sid = jnp.maximum(seq_ids, 0)
+    k_cache = gather_pages(k_pages, block_tbl)  # [B, S, Hkv, d]
+    v_cache = gather_pages(v_pages, block_tbl)
+    s_tot = k_cache.shape[1]
+    kt = k_cache[sid].astype(jnp.float32)  # [T, S, Hkv, d]
+    vt = v_cache[sid].astype(jnp.float32)
+    qf = q.astype(jnp.float32).reshape(t, hkv, g, d)
+
+    pos = jnp.arange(s_tot)
+    keep = pos[None, :] < kv_len[sid][:, None]  # sequence boundary
+    keep &= pos[None, :] <= q_pos[:, None]  # causal at the row's position
+    if window > 0:
+        keep &= q_pos[:, None] - pos[None, :] < window
+    if chunk > 0:
+        keep &= q_pos[:, None] // chunk == pos[None, :] // chunk
+
+    s = jnp.einsum("thgd,tshd->thgs", qf, kt, preferred_element_type=jnp.float32)
+    s = s * scale
+    s = jnp.where(keep[:, None, None, :], s, NEG_INF)
+    lam = jax.nn.logsumexp(s, axis=-1)
+    p = jnp.exp(s - lam[..., None])
+    # rows with no visible key (padding, empty segments) are ZERO — the
+    # kernels' dead-partial convention, not the uniform-softmax artifact
+    p = jnp.where(keep[:, None, None, :], p, 0.0)
+    o = jnp.einsum("thgs,tshd->thgd", p, vt)
+    return o.reshape(t, hq, dv).astype(q.dtype)
 
 
 def gather_pages(pages: jax.Array, block_tbl: jax.Array) -> jax.Array:

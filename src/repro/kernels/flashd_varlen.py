@@ -1,0 +1,252 @@
+"""Pallas TPU kernel: packed varlen FLASH-D over a paged KV cache.
+
+ONE kernel for the whole serving hot path (DESIGN.md §3.5). Queries from
+many sequences arrive as a flat packed batch [T, Hq, d] — prefill chunks,
+whole prompts and single decode tokens side by side — and K/V live in the
+global page pool of the paged cache (runtime/kvcache.py). FlashAttention's
+tiling and the FLASH-D sigmoid carry are both indifferent to *whose* rows a
+tile holds, so prefill-vs-decode disappears from the dispatch layer:
+
+  * a prefill chunk is a segment of q_len rows attending [0, kv_len);
+  * a decode token is the degenerate q_len == 1 segment of the same grid —
+    no separate decode kernel on this path.
+
+Packing contract (the scheduler's packer enforces it):
+
+  * each sequence's rows occupy one contiguous *segment*, and segments are
+    aligned to `block_q` rows, so every q tile belongs to exactly ONE
+    sequence (flash-attn varlen's per-sequence blocking, expressed in the
+    packed layout instead of the launch grid);
+  * `seq_ids[t]` is the owning sequence (batch row of `block_tbl`/`kv_len`)
+    or −1 for alignment padding; `q_pos[t]` is the row's ABSOLUTE position
+    in its sequence's KV space, −1 for padding. Padding rows mask every key
+    (q_pos −1 defeats the causal test) and come back as zero rows.
+
+Grid (q_block, kv_head, logical_page) — the page axis innermost and
+sequential. Per-block metadata (`blk_seq` = seq_ids[::block_q], which is
+exact under the alignment contract) plus `kv_len` and the block table are
+scalar-prefetch operands: the K/V BlockSpec index maps resolve
+`tbl[blk_seq[ib], ip]` before each step's DMA is issued, so the page
+gather lives in the DMA descriptors exactly like the paged decode kernel.
+The body is the flashd_fwd tile body: tile-local (m, λ), normalized
+partial, and the in-VMEM (acc, Λ) sigmoid carry — merged with
+`_merge_into_carry`, unchanged. Masks are per-element (sequence boundary ×
+causal × window/chunk), so tile pruning is purely a FLOP optimization.
+
+Without pltpu (non-TPU install) the jnp mirror in
+`repro.core.attention.varlen_attention` provides the same math; this
+module's fallback just routes there.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU-specific bits are optional so the module imports on CPU hosts
+    from jax.experimental.pallas import tpu as pltpu
+
+    _HAS_PLTPU = True
+except Exception:  # pragma: no cover
+    pltpu = None
+    _HAS_PLTPU = False
+
+from repro.core.blockwise import NEG_INF
+from repro.kernels.flashd_decode import _merge_into_carry
+
+__all__ = ["flashd_varlen_pallas"]
+
+
+def _varlen_partial(q, k, q_pos, kv_len, lo, *, page, window, chunk, scale, v):
+    """Normalized partial (o_p [R, dv], λ_p [R]) of R packed query rows
+    against one gathered page. Per-row masks: key visible iff it is inside
+    the row's sequence (< kv_len), causally visible (≤ q_pos), and inside
+    the window/chunk structure. Rows with q_pos < 0 (padding) see nothing
+    and come back dead (λ = NEG_INF ⇒ identity under the sigmoid merge)."""
+    pos = lo + jax.lax.broadcasted_iota(jnp.int32, (page,), 0)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [R, page]
+    keep = jnp.logical_and(pos[None, :] < kv_len, pos[None, :] <= q_pos[:, None])
+    if window > 0:
+        keep = jnp.logical_and(keep, q_pos[:, None] - pos[None, :] < window)
+    if chunk > 0:
+        keep = jnp.logical_and(keep, q_pos[:, None] // chunk == pos[None, :] // chunk)
+    s = jnp.where(keep, s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    m_safe = jnp.maximum(m, NEG_INF / 2)
+    p = jnp.exp(s - m_safe[:, None])
+    l = jnp.sum(p, axis=-1)
+    lam = jnp.where(
+        l > 0,
+        m_safe + jnp.log(jnp.maximum(l, jnp.finfo(jnp.float32).tiny)),
+        NEG_INF,
+    )
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    c = jnp.where(l > 0, jnp.exp(m_safe - lam), 0.0)
+    return pv * c[:, None], lam
+
+
+def _varlen_kernel(
+    blk_seq_ref, kv_len_ref, tbl_ref,  # scalar prefetch (SMEM)
+    q_ref, qpos_ref, k_ref, v_ref,  # VMEM (k/v: the gathered physical page)
+    o_ref,
+    acc_ref, lam_scratch,  # VMEM carry
+    *,
+    block_q: int,
+    group: int,
+    page: int,
+    n_tbl: int,
+    window: int,
+    chunk: int,
+    scale: float,
+):
+    ib = pl.program_id(0)
+    ip = pl.program_id(2)  # logical page — innermost, sequential
+    seq_raw = blk_seq_ref[ib]
+    seq = jnp.maximum(seq_raw, 0)
+    kv_len = jnp.where(seq_raw >= 0, kv_len_ref[seq], 0)
+    lo = ip * page
+
+    @pl.when(ip == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        lam_scratch[...] = jnp.full_like(lam_scratch, NEG_INF)
+
+    q_pos = qpos_ref[0]  # [block_q]
+    q_max = jnp.max(q_pos)
+    # conservative tile pruning: per-element masks above are exact, this
+    # only skips pages no row of the block can see (future pages under the
+    # causal test, pages past the sequence end). Padding rows carry
+    # q_pos = −1, which can only shrink q_max — never un-prune a live page.
+    live = jnp.logical_and(
+        seq_raw >= 0, jnp.logical_and(lo < kv_len, lo <= q_max)
+    )
+    if window > 0:
+        live = jnp.logical_and(live, lo + page > jnp.min(q_pos) - window + 1)
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[:, 0].astype(jnp.float32).reshape(block_q * group, -1)
+        o_p, lam_p = _varlen_partial(
+            q,
+            k_ref[0, :, 0, :].astype(jnp.float32),
+            jnp.repeat(q_pos, group),
+            kv_len, lo, page=page, window=window, chunk=chunk, scale=scale,
+            v=v_ref[0, :, 0, :].astype(jnp.float32),
+        )
+        _merge_into_carry(o_p, lam_p, acc_ref, lam_scratch)
+
+    @pl.when(ip == n_tbl - 1)
+    def _finalize():
+        dv = o_ref.shape[-1]
+        o_ref[:, 0] = acc_ref[...].reshape(block_q, group, dv).astype(o_ref.dtype)
+
+
+def flashd_varlen_pallas(
+    q: jax.Array,  # [T, Hq, d] — packed, block_q-aligned segments
+    k_pages: jax.Array,  # [P, page, Hkv, d] — global page pool
+    v_pages: jax.Array,  # [P, page, Hkv, dv]
+    block_tbl: jax.Array,  # [B, N] i32
+    seq_ids: jax.Array,  # [T] i32 (−1 = padding row)
+    q_pos: jax.Array,  # [T] i32 absolute position in KV space (−1 = padding)
+    kv_len: jax.Array,  # [B] i32 per-sequence visible KV length
+    *,
+    scale: Optional[float] = None,
+    window: int = 0,
+    chunk: int = 0,
+    block_q: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Packed varlen FLASH-D forward over a paged cache → o [T, Hq, dv].
+
+    T must be a multiple of `block_q` and each block must belong to one
+    sequence (the packing contract above) — callers go through
+    `repro.core.attention.varlen_attention`, which pads and documents it.
+    """
+    t, hq, d = q.shape
+    _, page, hkv, dv = v_pages.shape
+    n_tbl = block_tbl.shape[1]
+    g = hq // hkv
+    if scale is None:
+        scale = float(1.0 / (d ** 0.5))
+    if t % block_q:
+        raise ValueError(f"packed length {t} not a multiple of block_q={block_q}")
+    nb = t // block_q
+
+    seq_ids = jnp.asarray(seq_ids, jnp.int32)
+    q_pos = jnp.asarray(q_pos, jnp.int32)
+    kv_len = jnp.asarray(kv_len, jnp.int32).reshape(-1)
+    blk_seq = seq_ids[::block_q]  # exact under the alignment contract
+
+    if not _HAS_PLTPU:  # pragma: no cover — jax without pallas TPU support
+        from repro.core.attention import varlen_attention
+
+        return varlen_attention(
+            q, k_pages, v_pages, block_tbl, seq_ids, q_pos, kv_len,
+            scale=scale, window=window, chunk=chunk, impl="flashd",
+        )
+
+    qg = q.reshape(t, hkv, g, d)
+    qpos2 = q_pos.reshape(nb, block_q)
+
+    kernel = functools.partial(
+        _varlen_kernel, block_q=block_q, group=g, page=page, n_tbl=n_tbl,
+        window=window, chunk=chunk, scale=scale,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(nb, hkv, n_tbl),
+        in_specs=[
+            pl.BlockSpec(
+                (block_q, 1, g, d),
+                lambda ib, h, ip, bs, kl, tbl: (ib, h, 0, 0),
+            ),
+            pl.BlockSpec((1, block_q), lambda ib, h, ip, bs, kl, tbl: (ib, 0)),
+            # the physical page: logical page ip of the block's sequence,
+            # resolved through the table in the DMA descriptor
+            pl.BlockSpec(
+                (1, page, 1, d),
+                lambda ib, h, ip, bs, kl, tbl: (
+                    tbl[jnp.maximum(bs[ib], 0), ip], 0, h, 0
+                ),
+            ),
+            pl.BlockSpec(
+                (1, page, 1, dv),
+                lambda ib, h, ip, bs, kl, tbl: (
+                    tbl[jnp.maximum(bs[ib], 0), ip], 0, h, 0
+                ),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (block_q, 1, g, dv), lambda ib, h, ip, bs, kl, tbl: (ib, h, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((block_q * g, dv), jnp.float32),
+            pltpu.VMEM((1, block_q * g), jnp.float32),
+        ],
+    )
+    try:
+        compiler_params = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        )
+    except Exception:  # older/newer API name drift
+        compiler_params = None
+    call = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, hkv, g, dv), q.dtype),
+        interpret=interpret,
+        **({"compiler_params": compiler_params} if compiler_params else {}),
+    )
+    o = call(
+        blk_seq, kv_len, jnp.asarray(block_tbl, jnp.int32),
+        qg, qpos2, k_pages, v_pages,
+    )
+    return o.reshape(t, hq, dv)

@@ -1,14 +1,21 @@
-"""jit'd dispatch layer over the Pallas kernels.
+"""jit'd dispatch registry over the Pallas kernels.
 
 On TPU backends the real kernels run; everywhere else they execute in
 Pallas interpret mode (kernel body evaluated op-by-op on CPU) so every code
 path is exercised in CI. The models never import kernels directly — they go
 through `repro.core.attention`, which lands here for the `*_pallas` impls.
+
+The entry points form a REGISTRY: each is registered under a stable op
+name (`attention_fwd`, `decode`, `decode_paged`, `varlen`) so new kernel
+families plug in with `@register_op` instead of another hand-threaded
+import chain, and callers that route dynamically (benchmarks, tuning
+sweeps) resolve them with `get_op(name)`. The module-level functions stay
+importable by name — the registry is the same objects, indexed.
 """
 
 from __future__ import annotations
 
-import functools
+from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp
@@ -20,13 +27,45 @@ from repro.kernels.flashd_decode import (
     flashd_decode_pallas,
 )
 from repro.kernels.flashd_fwd import flashd_fwd_pallas
+from repro.kernels.flashd_varlen import flashd_varlen_pallas
 
 __all__ = [
     "pallas_attention_fwd_batched",
     "pallas_decode",
     "pallas_decode_paged",
+    "pallas_varlen",
+    "register_op",
+    "get_op",
+    "op_names",
     "on_tpu",
 ]
+
+_REGISTRY: Dict[str, Callable] = {}
+
+
+def register_op(name: str) -> Callable[[Callable], Callable]:
+    """Register a kernel dispatch entry point under `name` (decorator)."""
+
+    def deco(fn: Callable) -> Callable:
+        if name in _REGISTRY:
+            raise ValueError(f"op {name!r} already registered")
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def get_op(name: str) -> Callable:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown kernel op {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def op_names() -> tuple:
+    return tuple(sorted(_REGISTRY))
 
 
 def on_tpu() -> bool:
@@ -40,6 +79,7 @@ def _interpret() -> bool:
     return not on_tpu()
 
 
+@register_op("attention_fwd")
 def pallas_attention_fwd_batched(
     q: jax.Array,  # [B, Sq, Hq, d]   (model layout)
     k: jax.Array,  # [B, Skv, Hkv, d]
@@ -71,6 +111,7 @@ def pallas_attention_fwd_batched(
     return o.transpose(0, 2, 1, 3), lam
 
 
+@register_op("decode")
 def pallas_decode(
     q: jax.Array,  # [B, 1, Hq, d]
     k_cache: jax.Array,  # [B, S, Hkv, d]
@@ -98,6 +139,7 @@ def pallas_decode(
     return o[:, None]  # [B, 1, Hq, dv]
 
 
+@register_op("decode_paged")
 def pallas_decode_paged(
     q: jax.Array,  # [B, 1, Hq, d] or [B, Hq, d]
     k_pages: jax.Array,  # [P, page, Hkv, d] — model page layout == kernel layout
@@ -125,3 +167,33 @@ def pallas_decode_paged(
         interpret=_interpret(),
     )
     return o[:, None]  # [B, 1, Hq, dv]
+
+
+@register_op("varlen")
+def pallas_varlen(
+    q: jax.Array,  # [T, Hq, d] — packed, block_q-aligned segments
+    k_pages: jax.Array,  # [P, page, Hkv, d]
+    v_pages: jax.Array,  # [P, page, Hkv, dv]
+    block_tbl: jax.Array,  # [B, N] i32
+    seq_ids: jax.Array,  # [T] i32 (−1 padding)
+    q_pos: jax.Array,  # [T] i32 (−1 padding)
+    kv_len: jax.Array,  # [B] i32
+    *,
+    scale=None,
+    window: int = 0,
+    chunk: int = 0,
+    block_q: int,
+):
+    """Unified packed varlen step (DESIGN.md §3.5): prefill chunks and
+    decode rows in ONE kernel dispatch, K/V gathered through the block
+    table in the DMA descriptors. Subsumes `attention_fwd` + `decode` +
+    `decode_paged` on the serving path — decode is the q_len == 1 case."""
+    return flashd_varlen_pallas(
+        q, k_pages, v_pages,
+        jnp.asarray(block_tbl, jnp.int32),
+        jnp.asarray(seq_ids, jnp.int32),
+        jnp.asarray(q_pos, jnp.int32),
+        jnp.asarray(kv_len, jnp.int32).reshape(-1),
+        scale=scale, window=window, chunk=chunk, block_q=block_q,
+        interpret=_interpret(),
+    )

@@ -39,11 +39,14 @@ __all__ = [
     "DecodeSplit",
     "RingSchedule",
     "PageLayout",
+    "VarlenBlocks",
     "choose_prefill_blocks",
     "choose_decode_split",
     "choose_ring_schedule",
     "choose_page_size",
     "choose_page_layout",
+    "choose_varlen_blocks",
+    "bucket_pow2",
     "prefill_vmem_bytes",
     "decode_vmem_bytes",
     "measure_best",
@@ -289,6 +292,78 @@ def choose_page_layout(
     return PageLayout(
         page_size=page, n_pages=n_pages, pages_per_seq=-(-max_len // page)
     )
+
+
+@dataclasses.dataclass(frozen=True)
+class VarlenBlocks:
+    """Tiling for the packed varlen kernel (DESIGN.md §3.5): `block_q`
+    packed rows per q tile (segments are aligned to this, so it is also the
+    per-sequence padding granularity of the packed layout)."""
+
+    block_q: int
+
+
+def varlen_vmem_bytes(block_q: int, page: int, d: int, dv: int, group: int) -> int:
+    """f32 working set of one varlen grid step: q + k + v + carry + scores.
+    The q tile carries `group` heads per row (GQA rows collapse into the
+    score matmul), the KV block is one page."""
+    rows = block_q * group
+    words = (
+        rows * d          # q tile
+        + page * d        # k page
+        + page * dv       # v page
+        + rows * dv       # acc carry
+        + rows            # Λ carry
+        + rows * page     # score tile
+    )
+    return 4 * words
+
+
+def choose_varlen_blocks(
+    total_tokens: int,
+    d: int,
+    dv: Optional[int] = None,
+    *,
+    group: int = 1,
+    page: int = 64,
+    segment_hint: Optional[int] = None,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+) -> VarlenBlocks:
+    """Heuristic block_q for the packed varlen kernel.
+
+    Larger q tiles amortize the page DMA over more rows, but every
+    SEGMENT of the pack pads to a block multiple — a decode row (q_len 1)
+    wastes block_q − 1 rows — so the tile must be sized to the typical
+    segment, not the pack: `segment_hint` is the caller's expected tokens
+    per segment (the scheduler passes 1 when decode rows share its packs,
+    the prefill chunk when they don't; default: the whole pack, the
+    single-segment case). Start from min(128, bucket(hint)) and halve
+    until the working set fits the budget; floor at the f32 sublane
+    minimum so alignment waste stays proportionate."""
+    dv = d if dv is None else dv
+    hint = max(min(segment_hint or total_tokens, total_tokens), 1)
+    block_q = min(128, bucket_pow2(hint, lo=_MIN_BLOCK))
+    while (
+        varlen_vmem_bytes(block_q, page, d, dv, group) > vmem_budget
+        and block_q > _MIN_BLOCK
+    ):
+        block_q = max(_MIN_BLOCK, block_q // 2)
+    return VarlenBlocks(block_q=block_q)
+
+
+def bucket_pow2(n: int, *, lo: int = 8, hi: Optional[int] = None) -> int:
+    """Smallest power of two ≥ n (clamped to [lo, hi]).
+
+    The static-shape bucketing primitive (DESIGN.md §3.5): padding dynamic
+    lengths — prompt lengths, packed-batch sizes — up to a power of two
+    bounds the number of distinct compiled programs at O(log max_len)
+    instead of one per distinct length. `hi` caps the bucket (a length
+    already at the cap compiles exactly one program)."""
+    n = max(int(n), 1)
+    b = max(1 << (n - 1).bit_length(), lo)
+    if hi is not None:
+        b = min(b, hi)  # hi ≥ n keeps b ≥ n; a smaller cap is the caller's
+    return b
 
 
 # ---------------------------------------------------------------------------

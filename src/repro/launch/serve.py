@@ -37,6 +37,14 @@ def main(argv=None):
                    help="tokens per KV page (0 → tuned)")
     p.add_argument("--kv-pool-tokens", type=int, default=0,
                    help="paged pool size in tokens (0 → max_batch·max_len)")
+    p.add_argument("--step-mode", choices=("sequential", "mixed"),
+                   default="sequential",
+                   help="mixed: chunked-prefill continuous batching — one "
+                        "packed varlen step per iteration (DESIGN.md §3.5)")
+    p.add_argument("--token-budget", type=int, default=0,
+                   help="packed tokens per mixed step (0 → heuristic)")
+    p.add_argument("--prefill-chunk", type=int, default=16,
+                   help="max prompt tokens one sequence feeds per mixed step")
     args = p.parse_args(argv)
 
     cfg = configs.get_smoke_config(args.arch) if args.smoke else configs.get_config(args.arch)
@@ -58,6 +66,9 @@ def main(argv=None):
         kv_layout=args.kv_layout,
         page_size=args.page_size,
         kv_pool_tokens=args.kv_pool_tokens,
+        step_mode=args.step_mode,
+        token_budget=args.token_budget,
+        prefill_chunk=args.prefill_chunk,
     ))
     rng = np.random.default_rng(args.seed)
     reqs = [
@@ -71,9 +82,14 @@ def main(argv=None):
     for i, o in enumerate(outs):
         print(f"request {i}: {o.tolist()}")
     layout = "paged pool" if eng._page_layout is not None else "contiguous slots"
+    mode = "mixed varlen steps" if eng._mixed_ok else "sequential chunks"
     print(f"{total_tokens} tokens in {dt:.2f}s → {total_tokens/dt:.1f} tok/s "
-          f"(batched decode over {args.max_batch} slots, {layout}, "
+          f"(batched decode over {args.max_batch} slots, {layout}, {mode}, "
           f"peak {eng.peak_active} concurrent)")
+    if eng.ttft:
+        ttft = [eng.ttft[r] for r in sorted(eng.ttft)]
+        print(f"time-to-first-token: mean {np.mean(ttft)*1e3:.1f} ms, "
+              f"max {np.max(ttft)*1e3:.1f} ms")
     return 0
 
 

@@ -26,6 +26,7 @@ from repro.core.attention import (
     decode_attention_paged,
     flash_attention,
     gather_pages,
+    varlen_attention,
 )
 from repro.distributed.sharding import shard
 from repro.models import mamba2 as m2
@@ -47,6 +48,8 @@ __all__ = [
     "init_decode_cache",
     "decode_step_lm",
     "prefill_lm",
+    "forward_packed",
+    "packed_mixers_ok",
 ]
 
 _AUX_KEYS = ("moe_aux_loss", "moe_z_loss", "moe_dropped")
@@ -553,6 +556,130 @@ def _paged_attn_step(p, q, k, v, cfg: ModelConfig, cache, pos):
     return y, {"k_pages": k_pages, "v_pages": v_pages, "tbl": tbl}
 
 
+def packed_mixers_ok(cfg: ModelConfig) -> bool:
+    """Can this stack run the packed varlen mixed step (DESIGN.md §3.5)?
+
+    The packed step feeds every layer flat tokens from MANY sequences in
+    one dispatch, so each mixer must read/write per-sequence state through
+    the paged cache alone: global causal attention ('attn', 'attn_nope').
+    Ring-region (local/chunked) and recurrent (SSM/RG-LRU) layers carry
+    sequential state a packed step cannot replay row-by-row; bidirectional
+    layers would need future keys a chunked prefill has not seen. Engines
+    fall back to the sequential paths for those stacks."""
+    return all(
+        m in ("attn", "attn_nope")
+        for m, _ in (*cfg.pattern, *cfg.remainder)
+    )
+
+
+def _packed_attn(p, x, cfg: ModelConfig, kind: str, cache, positions, seq_ids,
+                 kv_len, block_q):
+    """Packed varlen attention for one layer: scatter the pack's new K/V
+    into each row's physical page through the block table, then attend the
+    pack through `varlen_attention` (the fused Pallas kernel under
+    `*_pallas` impls, the jnp mirror otherwise). x [1, T, D]; positions /
+    seq_ids [T] (−1 = padding row → writes land on the garbage page and
+    the row returns zeros); kv_len [B] per-sequence visible KV length."""
+    t = x.shape[1]
+    hd = cfg.head_dim_
+    cdt = cfg.compute_dtype
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(cdt))
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"].astype(cdt))
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"].astype(cdt), k + p["bk"].astype(cdt), v + p["bv"].astype(cdt)
+    q = q.reshape(1, t, cfg.n_heads, hd)
+    k = k.reshape(1, t, cfg.n_kv_heads, hd)
+    v = v.reshape(1, t, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if kind != "attn_nope":
+        q = apply_rope(q, positions[None], cfg.rope_theta)
+        k = apply_rope(k, positions[None], cfg.rope_theta)
+
+    k_pages, v_pages, tbl = cache["k_pages"], cache["v_pages"], cache["tbl"]
+    page = k_pages.shape[1]
+    n_tbl = tbl.shape[1]
+    sid = jnp.maximum(seq_ids, 0)
+    page_idx = positions // page
+    in_tbl = (seq_ids >= 0) & (positions >= 0) & (page_idx < n_tbl)
+    pid = jnp.where(in_tbl, tbl[sid, jnp.clip(page_idx, 0, n_tbl - 1)], 0)
+    slot = jnp.where(positions >= 0, positions % page, 0)
+    k_pages = k_pages.at[pid, slot].set(k[0])
+    v_pages = v_pages.at[pid, slot].set(v[0])
+
+    o = varlen_attention(
+        q[0], k_pages, v_pages, tbl, seq_ids, positions, kv_len,
+        impl=cfg.attn_impl, block_q=block_q,
+    )
+    o = o.reshape(1, t, cfg.n_heads * hd)
+    y = jnp.einsum("bsh,hd->bsd", o, p["wo"].astype(cdt))
+    return y, {"k_pages": k_pages, "v_pages": v_pages, "tbl": tbl}
+
+
+def forward_packed(
+    params: dict,
+    tokens: jax.Array,  # [T] packed flat tokens (many sequences)
+    seq_ids: jax.Array,  # [T] owning batch row / table row (−1 = padding)
+    positions: jax.Array,  # [T] absolute position in the row's sequence
+    kv_len: jax.Array,  # [B] per-sequence KV length AFTER this pack
+    cache: dict,  # paged decode cache (init_decode_cache(layout="paged"))
+    cfg: ModelConfig,
+    last_rows: jax.Array,  # [B] pack row of each sequence's last token (<0: none)
+    block_q: Optional[int] = None,  # pack alignment granularity (the packer's)
+):
+    """One packed varlen step over the whole stack (DESIGN.md §3.5).
+
+    The serving engine's mixed prefill/decode dispatch: prefill chunks and
+    single decode tokens ride in one flat [T] batch; every layer writes
+    the pack's new K/V straight into the sequences' pages and attends
+    through `varlen_attention` — there is no prefill-vs-decode fork
+    anywhere in the stack. Returns (logits [B, Vpad] — the hidden state at
+    `last_rows`, garbage for rows < 0 — and the updated cache). Requires
+    `packed_mixers_ok(cfg)` (global paged attention only).
+
+    `block_q` MUST be the granularity the caller aligned segments to (the
+    Pallas kernel derives per-block sequence ids from it); None falls back
+    to cfg.attn_block_q for jnp impls, where alignment is irrelevant."""
+    if not packed_mixers_ok(cfg):
+        raise ValueError(
+            f"{cfg.name}: packed step needs a pure global-attention stack "
+            f"(got {[m for m, _ in (*cfg.pattern, *cfg.remainder)]})"
+        )
+    seq_ids = jnp.asarray(seq_ids, jnp.int32)
+    positions = jnp.asarray(positions, jnp.int32)
+    h = embed_lookup(params["embed"], tokens[None], cfg.compute_dtype)  # [1, T, D]
+
+    def block_step(bp, bc, h, pattern):
+        new_bc = {}
+        for j, spec in enumerate(pattern):
+            mixer, ffn = spec
+            bpj, bcj = bp[f"pos{j}"], bc[f"pos{j}"]
+            x = rms_norm(h, bpj["norm1"], cfg.norm_eps)
+            y, nc = _packed_attn(
+                bpj["mixer"], x, cfg, mixer, bcj, positions, seq_ids, kv_len,
+                block_q if block_q is not None else cfg.attn_block_q,
+            )
+            h = h + y
+            if ffn != "none":
+                x = rms_norm(h, bpj["norm2"], cfg.norm_eps)
+                if ffn == "swiglu":
+                    y = _apply_swiglu(bpj["ffn"], x, cfg)
+                else:
+                    y, _ = moe_mod.apply_moe(bpj["ffn"], x, cfg)
+                h = h + y
+            new_bc[f"pos{j}"] = nc
+        return h, new_bc
+
+    h, new_cache = _run_cached_groups(params, cache, h, cfg, block_step)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    sel = h[0, jnp.maximum(last_rows, 0)]  # [B, D]; rows < 0 are garbage
+    head = params["lm_head"] if not cfg.tie_embeddings else params["embed"].T
+    logits = logits_from_hidden(sel[:, None], head, cfg.vocab_size)
+    return logits[:, 0], new_cache
+
+
 def _decode_block(bp, h, cfg, spec, cache, pos):
     mixer, ffn = spec
     x = rms_norm(h, bp["norm1"], cfg.norm_eps)
@@ -575,23 +702,15 @@ def _decode_block(bp, h, cfg, spec, cache, pos):
     return h, new_cache
 
 
-def decode_step_lm(params: dict, cache: dict, token: jax.Array, pos: jax.Array, cfg: ModelConfig):
-    """One decode step. token [B], pos [B] → (logits [B, Vpad], new cache).
-
-    The layer loop is a `fori_loop` that CARRIES the stacked cache and
-    updates each layer's slice in place (`dynamic_update_index_in_dim`) —
-    passing caches through scan xs/ys would materialize input + output +
-    working copies (measured: 19 GiB temp vs ~0 on deepseek-7b decode_32k)
-    and defeat buffer donation.
-    """
-    h = embed_lookup(params["embed"], token[:, None], cfg.compute_dtype)
-
-    def block_step(bp, bc, h, pattern):
-        new_bc = {}
-        for j, spec in enumerate(pattern):
-            h, nc = _decode_block(bp[f"pos{j}"], h, cfg, spec, bc[f"pos{j}"], pos)
-            new_bc[f"pos{j}"] = nc
-        return h, new_bc
+def _run_cached_groups(params: dict, cache: dict, h, cfg: ModelConfig, block_step):
+    """Run every stacked block group through `block_step(bp, bc, h, pattern)
+    → (h, new_bc)`, carrying the cache. The layer loop is a `fori_loop`
+    that CARRIES the stacked cache and updates each layer's slice in place
+    (`dynamic_update_index_in_dim`) — passing caches through scan xs/ys
+    would materialize input + output + working copies (measured: 19 GiB
+    temp vs ~0 on deepseek-7b decode_32k) and defeat buffer donation.
+    Shared by `decode_step_lm` (one token) and `forward_packed` (a packed
+    varlen batch) — the loop does not care how wide the token axis is."""
 
     def run_group(key, pattern):
         nonlocal h
@@ -633,22 +752,59 @@ def decode_step_lm(params: dict, cache: dict, token: jax.Array, pos: jax.Array, 
         new_cache["blocks"] = run_group("blocks", cfg.pattern)
     if cfg.remainder:
         new_cache["rem_blocks"] = run_group("rem_blocks", cfg.remainder)
+    return h, new_cache
+
+
+def decode_step_lm(params: dict, cache: dict, token: jax.Array, pos: jax.Array, cfg: ModelConfig):
+    """One decode step. token [B], pos [B] → (logits [B, Vpad], new cache)."""
+    h = embed_lookup(params["embed"], token[:, None], cfg.compute_dtype)
+
+    def block_step(bp, bc, h, pattern):
+        new_bc = {}
+        for j, spec in enumerate(pattern):
+            h, nc = _decode_block(bp[f"pos{j}"], h, cfg, spec, bc[f"pos{j}"], pos)
+            new_bc[f"pos{j}"] = nc
+        return h, new_bc
+
+    h, new_cache = _run_cached_groups(params, cache, h, cfg, block_step)
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
     head = params["lm_head"] if not cfg.tie_embeddings else params["embed"].T
     logits = logits_from_hidden(h, head, cfg.vocab_size)
     return logits[:, 0], new_cache
 
 
+def _freeze_dead_rows(new_cache: dict, old_cache: dict, alive: jax.Array):
+    """Keep only live batch rows' cache updates: per-batch leaves (batch on
+    axis 1 after block stacking) revert to the old value where ¬alive; POOL
+    leaves (`k_pages`/`v_pages`, no batch axis) pass through — a dead row's
+    page writes land in slots beyond its effective length, which decode
+    overwrites before it ever reads them (the bucketed-prefill argument in
+    DESIGN.md §3.5)."""
+    from jax import tree_util as jtu
+
+    def leaf_name(path):
+        for e in reversed(path):
+            if isinstance(e, jtu.DictKey):
+                return e.key
+        return None
+
+    def apply(path, new, old):
+        if leaf_name(path) in ("k_pages", "v_pages"):
+            return new
+        return jnp.where(alive.reshape((1, -1) + (1,) * (new.ndim - 2)), new, old)
+
+    return jtu.tree_map_with_path(apply, new_cache, old_cache)
+
+
 def prefill_lm(params: dict, tokens: jax.Array, cache: dict, cfg: ModelConfig,
-               *, start_pos: int = 0):
+               *, start_pos=0, lengths: Optional[jax.Array] = None):
     """Prefill a decode cache by scanning `decode_step_lm` over the prompt.
 
     Universal across mixer types (attention, SSM, RG-LRU) and exact: the
     cache after prefill is bit-identical to incremental decoding. Returns
     (logits of the LAST prompt token [B, Vpad], filled cache). Production
-    TPU serving would use the flash prefill kernel + batched cache writes;
-    this path favors exactness and works for every architecture (examples
-    and tests use it; dry-run decode shapes lower `decode_step_lm` itself).
+    TPU serving uses `forward_packed` (the varlen mixed step); this path
+    favors exactness and works for every architecture.
 
     start_pos > 0 prefllls only a *tail*: `tokens` are the positions
     [start_pos, start_pos + s) and the cache is assumed to already hold
@@ -656,14 +812,28 @@ def prefill_lm(params: dict, tokens: jax.Array, cache: dict, cfg: ModelConfig,
     admission (KV pages reused from a matching live prompt, DESIGN.md
     §3.4). Only valid for pure global-attention stacks: ring-region and
     recurrent layers carry state the skipped steps would have produced.
+    It may be a traced i32 scalar, so varying tails reuse one compilation.
+
+    lengths [B] (per-row REAL token count of `tokens` ≤ s) enables static-shape
+    bucketing (DESIGN.md §3.5): `tokens` may be padded past each row's
+    real prompt, the scan still runs s steps, but a dead row's cache
+    updates are dropped (`_freeze_dead_rows`) and its logits are captured
+    at position lengths−1 — so a power-of-two-padded prompt compiles
+    O(log max_len) programs while returning exactly the unpadded result.
     """
     b, s = tokens.shape
+    if lengths is not None:
+        lengths = jnp.asarray(lengths, jnp.int32).reshape(b)
 
     def body(carry, tok_pos):
-        cache, _ = carry
+        cache, prev_logits = carry
         tok, p = tok_pos
-        logits, cache = decode_step_lm(params, cache, tok, jnp.full((b,), p), cfg)
-        return (cache, logits), None
+        logits, new_cache = decode_step_lm(params, cache, tok, jnp.full((b,), p), cfg)
+        if lengths is not None:
+            rel = p - start_pos  # step index within this (tail-)prefill
+            new_cache = _freeze_dead_rows(new_cache, cache, rel < lengths)
+            logits = jnp.where((rel == lengths - 1)[:, None], logits, prev_logits)
+        return (new_cache, logits), None
 
     positions = start_pos + jnp.arange(s)
     (cache, logits), _ = jax.lax.scan(

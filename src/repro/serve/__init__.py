@@ -1,2 +1,4 @@
 from repro.serve.engine import Engine, ServeConfig, sample_token
-__all__ = ["Engine", "ServeConfig", "sample_token"]
+from repro.serve.scheduler import Scheduler, Segment, StepPlan
+
+__all__ = ["Engine", "ServeConfig", "sample_token", "Scheduler", "Segment", "StepPlan"]

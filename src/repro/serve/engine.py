@@ -1,50 +1,50 @@
-"""Batched serving engine: prefill → decode with per-sequence state.
+"""Batched serving engine: continuous batching over contiguous, paged, or
+packed-varlen KV memory.
 
-A deliberately small but real continuous-batching engine: requests join a
-slot array; finished slots are refilled from the queue. Sampling: greedy /
-temperature / top-k. Two KV memory models (ServeConfig.kv_layout):
+Requests join a slot array; finished slots are refilled from a FIFO queue.
+Slot lifecycle (queue, per-slot outputs, EOS/max-token completion, refill,
+peak-concurrency accounting) lives in `repro.serve.scheduler.Scheduler` —
+shared by every path below; this module owns memory admission and device
+dispatch only. Sampling: greedy / temperature / top-k.
+
+Three serving modes (ServeConfig.kv_layout × ServeConfig.step_mode):
 
   contiguous (default) — each slot owns a fixed max_len-wide cache region;
     memory commits max_batch × max_len tokens up front.
   paged (DESIGN.md §3.4) — KV lives in a global page pool with
     per-sequence block tables (runtime/kvcache.py); admission is by FREE
     PAGES, prompts sharing a page-aligned prefix with a live sequence
-    reuse its pages (full pages by reference, the boundary page as a CoW
-    copy) and prefill only the tail, and decode runs the block-table
-    scalar-prefetch kernel (kernels/flashd_decode) under *_pallas impls.
-    Short-request workloads pack the same memory budget several-fold
-    denser (BENCH_paged.json).
+    reuse its pages (CoW boundary copy) and prefill only the tail, and
+    decode runs the block-table scalar-prefetch kernel under `*_pallas`.
+  mixed (step_mode="mixed", DESIGN.md §3.5) — chunked-prefill continuous
+    batching over the paged pool: every step packs each decoding slot's
+    one pending token TOGETHER WITH the next prefill chunks of admitted
+    prompts into one flat varlen batch and dispatches ONE jitted
+    `forward_packed` step — prefill and decode are the same kernel
+    (`kernels/flashd_varlen`), so a long prompt no longer stalls decoding
+    sequences for a whole-prompt prefill dispatch. Iterations with no
+    prefill in flight use the sequential chunked decode fast path, so
+    steady-state decode costs what the paged engine's does. Requires a
+    pure global-attention stack (`transformer.packed_mixers_ok`); other
+    stacks fall back to the sequential paged/contiguous loops.
 
-The decode hot loop is fully on-device (DESIGN.md §3.3):
+Static-shape bucketing (DESIGN.md §3.5): prompt lengths and packed-batch
+sizes are padded to powers of two (`tuning.bucket_pow2`) before they reach
+a jitted program — prefills run with per-row `lengths` masking
+(`prefill_lm`), packs carry −1 padding rows — so `serve()` compiles
+O(log max_len) programs instead of one per distinct length (pinned by
+tests/test_scheduler.py).
 
-  * `generate` runs prefill + the entire token loop as ONE jitted
-    `lax.scan` — sampling, cache updates, position advance and early-EOS
-    masking all happen inside the scan, so a whole generation costs one
-    dispatch and exactly ONE device→host sync (the final token fetch).
-    The engine counts its host syncs in `self.host_syncs`; tests pin the
-    one-sync contract.
-  * `serve` (continuous batching) decodes in jitted multi-token chunks
-    (`ServeConfig.decode_chunk` steps per dispatch): one host sync per
-    chunk instead of per token, with completions / slot refills resolved
-    between chunks. Tokens a slot produced after its EOS inside a chunk
-    are discarded on the host; the speculative steps are harmless — the
-    refill prefill overwrites the slot's cache region (contiguous), or
-    the dead slot's block-table row is pointed at the garbage page
-    before its pages are reused (paged).
-
-The caches come from the model API (`init_cache`) — attention layers hold
-KV rings, SSM/RG-LRU layers hold recurrent state — so the same engine
-serves every assigned architecture. When `cfg.attn_impl` is a `*_pallas`
-impl, decode attention inside the scan runs the fused split-K kernel
-(`repro.kernels.flashd_decode`) with tuned splits.
+The decode hot loop is fully on-device (DESIGN.md §3.3): `generate` is one
+jitted prefill + `lax.scan` (exactly ONE device→host sync, counted in
+`self.host_syncs`); the sequential `serve` loops decode in jitted
+`decode_chunk`-token chunks (one sync per chunk); the mixed loop syncs
+once per packed step.
 
 Sharded serving: pass a `repro.distributed.sharding.ShardingCtx` and the
-engine activates it (plus the ambient mesh) around every trace/dispatch,
-so the model's logical sharding constraints apply inside the jitted loops.
-When the rules engine seq-shards a KV cache (long-context, B too small to
-batch-shard), decode attention routes through the cross-device FLASH-D
-merge (`repro.distributed.context.cp_decode`) instead of gathering the
-cache (DESIGN.md §4.1).
+engine activates it (plus the ambient mesh) around every trace/dispatch;
+seq-sharded KV caches route decode through the cross-device FLASH-D merge
+(`repro.distributed.context.cp_decode`, DESIGN.md §4.1).
 """
 
 from __future__ import annotations
@@ -52,14 +52,15 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import functools
-from typing import Callable, Dict, List, Optional
+from typing import List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import ModelConfig, get_model
-from repro.models.transformer import prefill_lm
+from repro.models.transformer import forward_packed, packed_mixers_ok, prefill_lm
+from repro.serve.scheduler import Scheduler, StepPlan
 
 __all__ = ["ServeConfig", "Engine", "sample_token"]
 
@@ -72,12 +73,16 @@ class ServeConfig:
     top_k: int = 0
     eos_id: int = -1  # <0: run to max_new_tokens
     seed: int = 0
-    decode_chunk: int = 8  # tokens per device dispatch in `serve`
+    decode_chunk: int = 8  # tokens per device dispatch in sequential `serve`
     # ---- paged KV cache (DESIGN.md §3.4) ----
     kv_layout: str = "contiguous"  # "paged": page-pool KV in `serve`
     page_size: int = 0  # 0 → repro.kernels.tuning heuristic
     kv_pool_tokens: int = 0  # pool size in tokens; 0 → max_batch·max_len
     prefix_sharing: bool = True  # share common prompt-prefix pages (CoW)
+    # ---- mixed varlen step (DESIGN.md §3.5) ----
+    step_mode: str = "sequential"  # "mixed": chunked-prefill packed steps
+    token_budget: int = 0  # packed tokens per mixed step; 0 → heuristic
+    prefill_chunk: int = 16  # max prompt tokens one sequence feeds per step
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -143,10 +148,20 @@ class Engine:
         self._key = jax.random.PRNGKey(serve_cfg.seed)
         self.host_syncs = 0  # device→host transfers issued by this engine
         self.peak_active = 0  # max concurrent sequences observed by `serve`
-        self._gen = jax.jit(self._gen_fn, static_argnums=(4,))
+        self.ttft = {}  # rid → time-to-first-token of the last serve() call
+        self._gen = jax.jit(self._gen_fn, static_argnums=(5,))
         self._chunk = jax.jit(self._chunk_fn, static_argnums=(5,))
+        # bucketed prefill: one program per power-of-two prompt bucket;
+        # start_pos rides as a traced scalar so shared-prefix tails of any
+        # length reuse the same program
+        self._prefill = jax.jit(
+            lambda p, t, c, sp, ln: prefill_lm(
+                p, t, c, self.mc, start_pos=sp, lengths=ln
+            )
+        )
+        self._mixed = jax.jit(self._mixed_fn, static_argnums=(8,))
         self._page_layout = None
-        if serve_cfg.kv_layout == "paged":
+        if serve_cfg.kv_layout == "paged" or serve_cfg.step_mode == "mixed":
             from repro.kernels.tuning import choose_page_layout  # lazy
             from repro.models.transformer import paged_mixers
 
@@ -164,6 +179,13 @@ class Engine:
                     or serve_cfg.max_batch * serve_cfg.max_len,
                     page_size=serve_cfg.page_size or None,
                 )
+        # the mixed varlen step runs every layer on flat packed tokens
+        # through the paged pool — global-attention-only stacks
+        self._mixed_ok = (
+            serve_cfg.step_mode == "mixed"
+            and self._page_layout is not None
+            and packed_mixers_ok(model_cfg)
+        )
         # prefix sharing skips the shared positions' prefill steps, which is
         # only sound when EVERY mixer reads the paged cache: ring
         # (local/chunked) and SSM/RG-LRU layers carry state those steps
@@ -197,16 +219,29 @@ class Engine:
         self.host_syncs += 1
         return np.asarray(x)
 
+    def _bucket(self, n: int) -> int:
+        from repro.kernels.tuning import bucket_pow2  # lazy: no cycle
+
+        return bucket_pow2(n, lo=8, hi=self.sc.max_len)
+
     # ---- jitted device loops ----
-    def _gen_fn(self, params, prompts, cache, key, max_new_tokens: int):
+    def _gen_fn(self, params, prompts, cache, key, real_len, max_new_tokens: int):
         """Prefill + full decode loop as one device program → tokens [B, T].
+
+        `prompts` may be padded past the real prompt to a power-of-two
+        bucket; `real_len` (traced i32 scalar) is the shared true length —
+        prefill_lm masks the padding steps, so the bucket only decides
+        which compiled program runs, never the result.
 
         Early-EOS masking: once a sequence has emitted eos_id, subsequent
         positions emit eos_id (the decode steps still run — a lax.scan has
         static trip count — but their tokens are masked in the output)."""
-        b, s = prompts.shape
-        logits, cache = prefill_lm(params, prompts, cache, self.mc)
-        pos0 = jnp.full((b,), s, jnp.int32)
+        b, _ = prompts.shape
+        logits, cache = prefill_lm(
+            params, prompts, cache, self.mc,
+            lengths=jnp.full((b,), real_len, jnp.int32),
+        )
+        pos0 = jnp.full((b,), real_len, jnp.int32)
         done0 = jnp.zeros((b,), bool)
         eos = self.sc.eos_id
 
@@ -238,46 +273,101 @@ class Engine:
         (cache, tok, pos), toks = jax.lax.scan(body, (cache, tok, pos), keys)
         return cache, tok, pos, toks  # toks [n, B]
 
+    def _mixed_fn(self, params, cache, tokens, seq_ids, positions, kv_len,
+                  last_rows, key, block_q: int):
+        """ONE mixed prefill/decode step (DESIGN.md §3.5): the packed
+        varlen forward over the whole stack + sampling at each emitting
+        sequence's last row. Retraces only per packed-length bucket.
+        `block_q` is the packer's alignment granularity (static)."""
+        logits, cache = forward_packed(
+            params, tokens, seq_ids, positions, kv_len, cache, self.mc,
+            last_rows, block_q=block_q,
+        )
+        return cache, sample_token(logits, key, self.sc)
+
     # ---- single-prompt-batch generation (prefill + n decode steps) ----
     def generate(self, prompts: np.ndarray, max_new_tokens: int) -> np.ndarray:
         """prompts [B, S_prompt] int32 (right-aligned, no padding support in
-        this minimal path) → generated tokens [B, max_new_tokens]."""
+        this minimal path) → generated tokens [B, max_new_tokens].
+
+        Both the prompt length and the decode-step count are bucketed to
+        powers of two (excess steps run masked, excess output is sliced
+        off), so repeated calls at drifting lengths reuse O(log max_len)
+        compiled programs."""
         b, s = prompts.shape
+        if s + max_new_tokens > self.sc.max_len:
+            raise ValueError(
+                f"prompt {s} + {max_new_tokens} exceeds max_len {self.sc.max_len}"
+            )
+        from repro.kernels.tuning import bucket_pow2  # lazy: no cycle
+
+        sb = self._bucket(s)
+        nb = bucket_pow2(max_new_tokens, lo=1)
+        padded = np.zeros((b, sb), np.int32)
+        padded[:, :s] = prompts
         with self._scope():
             cache = self.api.init_cache(b, self.sc.max_len, self.mc)
             self._key, k = jax.random.split(self._key)
             toks = self._gen(
-                self.params, jnp.asarray(prompts, jnp.int32), cache, k,
-                int(max_new_tokens),
+                self.params, jnp.asarray(padded), cache, k, jnp.int32(s),
+                int(nb),
             )
-        return self._to_host(toks)
+        return self._to_host(toks)[:, :max_new_tokens]
 
     # ---- continuous batching over a request queue ----
     def serve(self, requests: List[np.ndarray], max_new_tokens: int) -> List[np.ndarray]:
         """Each request: 1-D prompt array. Returns generated arrays, in order.
 
-        Slot-parallel: up to max_batch requests decode together; finished
-        slots take the next queued request between chunks (its prefill runs
-        as a batch-1 prefill — into that slot's cache region under the
-        contiguous layout, or straight into its allocated pages under
-        `kv_layout="paged"`, where admission is gated by the allocator's
-        free-page count instead of slot width; a production engine would
-        chunk prefills into the decode batch)."""
+        Routing: `step_mode="mixed"` (and a packed-capable stack) runs the
+        chunked-prefill mixed varlen loop; otherwise the paged or
+        contiguous sequential loop. All three share the Scheduler's slot
+        lifecycle and are token-identical under greedy sampling."""
         with self._scope():
-            if self._page_layout is not None:
+            if self._mixed_ok:
+                return self._serve_mixed(requests, max_new_tokens)
+            # fall back along the CONFIGURED memory model: a mixed request
+            # on a non-packed-capable stack must not silently switch an
+            # explicitly contiguous engine onto the page pool
+            if self._page_layout is not None and self.sc.kv_layout == "paged":
                 return self._serve_paged(requests, max_new_tokens)
             return self._serve_impl(requests, max_new_tokens)
 
+    def _check_len(self, rid: int, n_prompt: int, max_new_tokens: int) -> None:
+        if n_prompt + max_new_tokens > self.sc.max_len:
+            raise ValueError(
+                f"request {rid}: prompt {n_prompt} + {max_new_tokens}"
+                f" exceeds max_len {self.sc.max_len}"
+            )
+
+    def _set_tbl_row(self, cache, slot: int, table: List[int]):
+        """Mirror one slot's allocator block table into every layer's
+        device `tbl` leaf (zero-padded: unmapped logical pages point at
+        the garbage page). Shared by the paged and mixed loops."""
+        row = np.zeros((self._page_layout.pages_per_seq,), np.int32)
+        row[: len(table)] = table
+        row_j = jnp.asarray(row)
+        return _map_paged(cache, tbl=lambda x: x.at[:, slot].set(row_j[None]))
+
+    def _prefill_bucketed(self, prompt: np.ndarray, cache, *, start_pos: int = 0):
+        """Prefill `prompt[start_pos:]` into a batch-1 cache view with the
+        token axis padded to a power-of-two bucket (prefill_lm masks the
+        padding rows), so distinct prompt lengths share compiled programs."""
+        tail = np.asarray(prompt[start_pos:])
+        n = len(tail)
+        nb = self._bucket(n)
+        padded = np.zeros((1, nb), np.int32)
+        padded[0, :n] = tail
+        return self._prefill(
+            self.params, jnp.asarray(padded), cache,
+            jnp.int32(start_pos), jnp.asarray([n], jnp.int32),
+        )
+
     def _serve_impl(self, requests: List[np.ndarray], max_new_tokens: int) -> List[np.ndarray]:
-        results: List[Optional[np.ndarray]] = [None] * len(requests)
-        queue = list(enumerate(requests))
-        active: List[dict] = []
         b = self.sc.max_batch
+        sched = Scheduler(requests, max_new_tokens, b, self.sc.eos_id)
         cache = self.api.init_cache(b, self.sc.max_len, self.mc)
         tok = jnp.zeros((b,), jnp.int32)
         pos = jnp.zeros((b,), jnp.int32)
-        slot_req = [-1] * b
-        slot_out: List[List[int]] = [[] for _ in range(b)]
         chunk_n = max(1, min(self.sc.decode_chunk, max_new_tokens))
 
         def _write_slot(c, o, slot):
@@ -289,61 +379,42 @@ class Engine:
             sampled token is output token 0 (same as `generate`); requests
             that complete immediately are finalized and the next is taken."""
             nonlocal cache, tok, pos
-            while queue:
-                rid, prompt = queue.pop(0)
+            while (head := sched.take_head()) is not None:
+                rid, prompt = head
+                self._check_len(rid, len(prompt), max_new_tokens)
                 one_cache = self.api.init_cache(1, self.sc.max_len, self.mc)
-                logits, one_cache = prefill_lm(
-                    self.params, jnp.asarray(prompt[None], jnp.int32), one_cache, self.mc
-                )
+                logits, one_cache = self._prefill_bucketed(prompt, one_cache)
                 self._key, k = jax.random.split(self._key)
                 t0 = int(self._to_host(sample_token(logits, k, self.sc))[0])
-                done = max_new_tokens <= 1 or (self.sc.eos_id >= 0 and t0 == self.sc.eos_id)
-                if done:
-                    results[rid] = np.asarray([t0], np.int32)
+                if not sched.admit_or_finish(slot, rid, prompt, t0):
                     continue
-                slot_req[slot] = rid
-                slot_out[slot] = [t0]
-                cache = jax.tree.map(lambda c, o: _write_slot(c, o, slot), cache, one_cache)
+                cache = jax.tree.map(
+                    lambda c, o: _write_slot(c, o, slot), cache, one_cache
+                )
                 tok = tok.at[slot].set(t0)
                 pos = pos.at[slot].set(len(prompt))
                 return
-            slot_req[slot] = -1
 
         for s in range(b):
             assign(s)
 
-        self.peak_active = max(self.peak_active, sum(r >= 0 for r in slot_req))
-        while any(r >= 0 for r in slot_req):
+        self.peak_active = sched.note_peak()
+        while sched.has_active():
             self._key, k = jax.random.split(self._key)
             cache, tok, pos, toks = self._chunk(
                 self.params, cache, tok, pos, k, chunk_n
             )
             toks_np = self._to_host(toks)  # one sync per chunk
-            finished = []
-            for s in range(b):
-                rid = slot_req[s]
-                if rid < 0:
-                    continue
-                for step in range(chunk_n):
-                    t = int(toks_np[step, s])
-                    slot_out[s].append(t)
-                    done = len(slot_out[s]) >= max_new_tokens or (
-                        self.sc.eos_id >= 0 and t == self.sc.eos_id
-                    )
-                    if done:  # later tokens in this chunk are speculative garbage
-                        results[rid] = np.asarray(slot_out[s], np.int32)
-                        finished.append(s)
-                        break
-            for s in finished:
+            for s in sched.absorb_chunk(toks_np):
+                sched.retire(s)
                 assign(s)  # refill overwrites the slot's cache / tok / pos
-            self.peak_active = max(
-                self.peak_active, sum(r >= 0 for r in slot_req)
-            )
-        return [r if r is not None else np.zeros((0,), np.int32) for r in results]
+            self.peak_active = sched.note_peak()
+        self.ttft = dict(sched.first_token_at)
+        return sched.results_list()
 
     # ---- paged continuous batching (DESIGN.md §3.4) ----
     def _serve_paged(self, requests: List[np.ndarray], max_new_tokens: int) -> List[np.ndarray]:
-        """Continuous batching over a page-pool KV cache.
+        """Sequential continuous batching over a page-pool KV cache.
 
         Differences from the contiguous loop:
 
@@ -366,9 +437,8 @@ class Engine:
 
         lay = self._page_layout
         page = lay.page_size
-        results: List[Optional[np.ndarray]] = [None] * len(requests)
-        queue = list(enumerate(requests))
         b = self.sc.max_batch
+        sched = Scheduler(requests, max_new_tokens, b, self.sc.eos_id)
         alloc = PagedKVAllocator(lay.n_pages, page)
         cache = self.api.init_cache(
             b, self.sc.max_len, self.mc,
@@ -376,10 +446,6 @@ class Engine:
         )
         tok = jnp.zeros((b,), jnp.int32)
         pos = jnp.zeros((b,), jnp.int32)
-        slot_req = [-1] * b
-        slot_out: List[List[int]] = [[] for _ in range(b)]
-        slot_len = [0] * b  # host mirror: positions materialized so far
-        slot_prompt: List[Optional[np.ndarray]] = [None] * b
         chunk_n = max(1, min(self.sc.decode_chunk, max_new_tokens))
 
         def best_prefix(prompt: np.ndarray):
@@ -390,10 +456,10 @@ class Engine:
             if not self._can_share_prefix:
                 return -1, 0
             best_s, best_n = -1, 0
-            for s in range(b):
-                if slot_req[s] < 0 or slot_prompt[s] is None:
+            for s, sl in enumerate(sched.slots):
+                if not sl.live or sl.prompt is None:
                     continue
-                other = slot_prompt[s]
+                other = sl.prompt
                 m = min(len(prompt), len(other))
                 n = int(np.argmin(np.equal(prompt[:m], other[:m]))) \
                     if not np.array_equal(prompt[:m], other[:m]) else m
@@ -403,15 +469,6 @@ class Engine:
             if best_n < page:
                 return -1, 0
             return best_s, best_n
-
-        def set_tbl_row(c, slot: int, table: List[int]):
-            row = np.zeros((lay.pages_per_seq,), np.int32)
-            row[: len(table)] = table
-            row_j = jnp.asarray(row)
-            return _map_paged(
-                c,
-                tbl=lambda x: x.at[:, slot].set(row_j[None]),
-            )
 
         def copy_pages(c, cows):
             if not cows:
@@ -429,14 +486,10 @@ class Engine:
             cannot — the request waits for pages to free. FIFO order is
             preserved: later requests never jump a blocked head."""
             nonlocal cache, tok, pos
-            while queue:
-                rid, prompt = queue[0]
+            while (head := sched.head()) is not None:
+                rid, prompt = head
                 n_prompt = len(prompt)
-                if n_prompt + max_new_tokens > self.sc.max_len:
-                    raise ValueError(
-                        f"request {rid}: prompt {n_prompt} + {max_new_tokens}"
-                        f" exceeds max_len {self.sc.max_len}"
-                    )
+                self._check_len(rid, n_prompt, max_new_tokens)
                 # speculative post-EOS chunk steps need slack, but tables
                 # are only ⌈max_len/page⌉ wide — writes past max_len land
                 # on the garbage page instead (the in-table clamp), so the
@@ -447,28 +500,28 @@ class Engine:
                 if not alloc.can_admit(reserve, shared_tokens=shared):
                     # sharing never costs more pages than an unshared admit,
                     # so there is no cheaper retry — wait for frees
-                    if any(r >= 0 for r in slot_req):
+                    if sched.has_active():
                         return False  # live sequences will free pages
                     raise PageError(
                         f"request {rid} needs {pages_for(reserve, page)} pages"
                         f" but the pool holds {lay.n_pages - 1}"
                     )
-                queue.pop(0)
+                sched.take_head()
                 cows = alloc.admit(
                     rid, prompt_len=n_prompt, reserve_tokens=reserve,
-                    share_from=slot_req[parent_slot] if parent_slot >= 0 else None,
+                    share_from=(
+                        sched.slots[parent_slot].rid if parent_slot >= 0 else None
+                    ),
                     shared_tokens=shared,
                 )
                 cache = copy_pages(cache, cows)
-                cache = set_tbl_row(cache, slot, alloc.table(rid))
+                cache = self._set_tbl_row(cache, slot, alloc.table(rid))
                 # tail-only prefill: shared pages already hold [0, shared)
-                tail = np.asarray(prompt[shared:])
                 view = _map_paged(
                     cache, batch=lambda x: x[:, slot:slot + 1]
                 )
-                logits, view = prefill_lm(
-                    self.params, jnp.asarray(tail[None], jnp.int32), view,
-                    self.mc, start_pos=shared,
+                logits, view = self._prefill_bucketed(
+                    np.asarray(prompt), view, start_pos=shared
                 )
                 cache = _map_paged(
                     cache, view,
@@ -477,77 +530,197 @@ class Engine:
                 )
                 self._key, k = jax.random.split(self._key)
                 t0 = int(self._to_host(sample_token(logits, k, self.sc))[0])
-                done = max_new_tokens <= 1 or (
-                    self.sc.eos_id >= 0 and t0 == self.sc.eos_id
-                )
-                if done:
-                    results[rid] = np.asarray([t0], np.int32)
+                if not sched.admit_or_finish(slot, rid, prompt, t0):
                     alloc.free(rid)
-                    cache = set_tbl_row(cache, slot, [])
+                    cache = self._set_tbl_row(cache, slot, [])
                     continue
-                slot_req[slot] = rid
-                slot_out[slot] = [t0]
-                slot_len[slot] = n_prompt
-                slot_prompt[slot] = np.asarray(prompt)
                 tok = tok.at[slot].set(t0)
                 pos = pos.at[slot].set(n_prompt)
                 return True
             return False
 
-        def retire(slot: int):
-            alloc.free(slot_req[slot])
-            slot_req[slot] = -1
-            slot_prompt[slot] = None
-
         for s in range(b):
             assign(s)
 
-        self.peak_active = max(self.peak_active, sum(r >= 0 for r in slot_req))
-        while any(r >= 0 for r in slot_req):
+        self.peak_active = sched.note_peak()
+        while sched.has_active():
             # materialize pages for this chunk's writes; mirror grown tables
-            for s in range(b):
-                if slot_req[s] < 0:
+            for s, sl in enumerate(sched.slots):
+                if not sl.live:
                     continue
-                before = len(alloc.table(slot_req[s]))
+                before = len(alloc.table(sl.rid))
                 # clamp to max_len: table width is ⌈max_len/page⌉ and writes
                 # past it clamp to the garbage page in _paged_attn_step
                 cows = alloc.extend(
-                    slot_req[s], min(slot_len[s] + chunk_n, self.sc.max_len)
+                    sl.rid, min(sl.kv + chunk_n, self.sc.max_len)
                 )
                 cache = copy_pages(cache, cows)
-                if cows or len(alloc.table(slot_req[s])) != before:
-                    cache = set_tbl_row(cache, s, alloc.table(slot_req[s]))
+                if cows or len(alloc.table(sl.rid)) != before:
+                    cache = self._set_tbl_row(cache, s, alloc.table(sl.rid))
             self._key, k = jax.random.split(self._key)
             cache, tok, pos, toks = self._chunk(
                 self.params, cache, tok, pos, k, chunk_n
             )
             toks_np = self._to_host(toks)  # one sync per chunk
-            finished = []
-            for s in range(b):
-                rid = slot_req[s]
-                if rid < 0:
-                    continue
-                slot_len[s] = min(slot_len[s] + chunk_n, self.sc.max_len)
-                for step in range(chunk_n):
-                    t = int(toks_np[step, s])
-                    slot_out[s].append(t)
-                    done = len(slot_out[s]) >= max_new_tokens or (
-                        self.sc.eos_id >= 0 and t == self.sc.eos_id
-                    )
-                    if done:  # later tokens in this chunk are speculative
-                        results[rid] = np.asarray(slot_out[s], np.int32)
-                        finished.append(s)
-                        break
+            finished = sched.absorb_chunk(toks_np)
             for s in finished:
-                retire(s)
+                alloc.free(sched.retire(s))
                 # the freed pages may be reassigned immediately — point the
                 # dead slot's table at the garbage page before that happens
-                cache = set_tbl_row(cache, s, [])
-            for s in range(b):  # refill every empty slot the pool now admits
-                if slot_req[s] < 0 and queue:
+                cache = self._set_tbl_row(cache, s, [])
+            for s, sl in enumerate(sched.slots):  # refill what the pool admits
+                if not sl.live and sched.head() is not None:
                     if not assign(s):
                         break
-            self.peak_active = max(
-                self.peak_active, sum(r >= 0 for r in slot_req)
+            self.peak_active = sched.note_peak()
+        self.ttft = dict(sched.first_token_at)
+        return sched.results_list()
+
+    # ---- mixed varlen continuous batching (DESIGN.md §3.5) ----
+    def _serve_mixed(self, requests: List[np.ndarray], max_new_tokens: int) -> List[np.ndarray]:
+        """Chunked-prefill continuous batching: ONE jitted packed varlen
+        step per iteration, carrying every decoding slot's pending token
+        and the next prefill chunks of admitted prompts.
+
+        vs. the sequential loops: a newly admitted long prompt no longer
+        runs a whole-prompt prefill dispatch that stalls every decoding
+        sequence — its prompt drips in `prefill_chunk`-token pieces
+        interleaved with decode rows, so time-to-first-token of everything
+        behind it drops (BENCH_serve.json tracks this). Iterations with NO
+        prefill in flight take the decode fast path instead: the same
+        jitted `decode_chunk`-token loop as the sequential engines (one
+        dispatch + one sync per chunk, not per token), so steady-state
+        decode throughput is the sequential engine's — the packed step
+        only pays its per-step sync while it is actually buying prefill
+        interleaving. Admission is by free pages like `_serve_paged` (no
+        prefix sharing here: chunks already amortize prefill, and the
+        packer stays simple)."""
+        from repro.kernels.tuning import bucket_pow2, choose_varlen_blocks
+        from repro.runtime.kvcache import PagedKVAllocator, PageError, pages_for
+
+        lay = self._page_layout
+        page = lay.page_size
+        b = self.sc.max_batch
+        sched = Scheduler(requests, max_new_tokens, b, self.sc.eos_id)
+        alloc = PagedKVAllocator(lay.n_pages, page)
+        cache = self.api.init_cache(
+            b, self.sc.max_len, self.mc,
+            layout="paged", page_size=page, n_pages=lay.n_pages,
+        )
+        budget = self.sc.token_budget or (b + self.sc.prefill_chunk)
+        pchunk = max(1, min(self.sc.prefill_chunk, budget))
+        chunk_n = max(1, min(self.sc.decode_chunk, max_new_tokens))
+        hd = self.mc.head_dim_
+        # segment hint: with >1 slot the pack mixes 1-token decode rows
+        # into every prefill step, and each pads to block_q — keep the
+        # tile at the sublane minimum; a lone slot packs one prefill
+        # chunk per step, so the chunk itself is the segment
+        block_q = choose_varlen_blocks(
+            bucket_pow2(budget, lo=8), hd, hd,
+            group=self.mc.n_heads // self.mc.n_kv_heads, page=page,
+            segment_hint=1 if b > 1 else pchunk,
+        ).block_q
+
+        def try_admit():
+            nonlocal cache
+            while (slot := sched.free_slot()) is not None and sched.head():
+                rid, prompt = sched.head()
+                n_prompt = len(prompt)
+                self._check_len(rid, n_prompt, max_new_tokens)
+                # chunk_n slack: decode-only phases run `decode_chunk`
+                # lockstep steps whose post-EOS tail writes speculatively,
+                # exactly like _serve_paged (clamped to max_len — the
+                # in-table garbage-page clamp absorbs the rest)
+                reserve = min(n_prompt + max_new_tokens + chunk_n,
+                              self.sc.max_len)
+                if not alloc.can_admit(reserve):
+                    if sched.has_active():
+                        return  # live sequences will free pages
+                    raise PageError(
+                        f"request {rid} needs {pages_for(reserve, page)} pages"
+                        f" but the pool holds {lay.n_pages - 1}"
+                    )
+                sched.take_head()
+                alloc.admit(rid, prompt_len=n_prompt, reserve_tokens=reserve)
+                cache = self._set_tbl_row(cache, slot, alloc.table(rid))
+                sched.admit_prefilling(slot, rid, prompt)
+
+        def dispatch(plan: StepPlan) -> np.ndarray:
+            """Pack the plan into flat block_q-aligned arrays (bucketed to
+            a power of two) and run the jitted mixed step."""
+            nonlocal cache
+            off = 0
+            spans = []
+            for seg in plan.segments:
+                spans.append(off)
+                off += -(-len(seg.tokens) // block_q) * block_q
+            total = bucket_pow2(max(off, 1), lo=block_q)
+            tokens = np.zeros((total,), np.int32)
+            seq_ids = np.full((total,), -1, np.int32)
+            positions = np.full((total,), -1, np.int32)
+            kv_len = np.zeros((b,), np.int32)
+            last_rows = np.full((b,), -1, np.int32)
+            for seg, o in zip(plan.segments, spans):
+                n = len(seg.tokens)
+                tokens[o:o + n] = seg.tokens
+                seq_ids[o:o + n] = seg.slot
+                positions[o:o + n] = np.arange(seg.start, seg.start + n)
+                kv_len[seg.slot] = seg.start + n
+                if seg.emits:
+                    last_rows[seg.slot] = o + n - 1
+            self._key, k = jax.random.split(self._key)
+            cache, toks = self._mixed(
+                self.params, cache,
+                jnp.asarray(tokens), jnp.asarray(seq_ids),
+                jnp.asarray(positions), jnp.asarray(kv_len),
+                jnp.asarray(last_rows), k, block_q,
             )
-        return [r if r is not None else np.zeros((0,), np.int32) for r in results]
+            return self._to_host(toks)  # one sync per mixed step
+
+        def decode_chunk_phase():
+            """No prefill in flight: the sequential engines' jitted
+            multi-token decode loop (one dispatch + one sync per
+            `decode_chunk` tokens). Device tok/pos are rebuilt from the
+            scheduler's host state, so packed steps and chunk phases
+            interleave freely; dead slots carry zeroed table rows, so
+            their lockstep writes land on the garbage page."""
+            nonlocal cache
+            for s, sl in enumerate(sched.slots):
+                if not sl.live:
+                    continue
+                before = len(alloc.table(sl.rid))
+                alloc.extend(sl.rid, min(sl.kv + chunk_n, self.sc.max_len))
+                if len(alloc.table(sl.rid)) != before:
+                    cache = self._set_tbl_row(cache, s, alloc.table(sl.rid))
+            tok = jnp.asarray([sl.pending for sl in sched.slots], jnp.int32)
+            pos = jnp.asarray([sl.kv for sl in sched.slots], jnp.int32)
+            self._key, k = jax.random.split(self._key)
+            cache, _, _, toks = self._chunk(
+                self.params, cache, tok, pos, k, chunk_n
+            )
+            return self._to_host(toks)  # one sync per chunk
+
+        try_admit()
+        self.peak_active = sched.note_peak()
+        while sched.has_active():
+            if not any(sl.prefilling for sl in sched.slots):
+                finished = sched.absorb_chunk(decode_chunk_phase())
+            else:
+                plan = sched.plan_step(budget, pchunk)
+                # materialize pages for the step's writes; mirror tables
+                for seg in plan.segments:
+                    rid = sched.slots[seg.slot].rid
+                    before = len(alloc.table(rid))
+                    end = min(seg.start + len(seg.tokens), self.sc.max_len)
+                    if end > alloc.seq_len(rid):
+                        alloc.extend(rid, end)  # no sharing → never CoWs
+                    if len(alloc.table(rid)) != before:
+                        cache = self._set_tbl_row(cache, seg.slot, alloc.table(rid))
+                finished = sched.commit(plan, dispatch(plan))
+            for s in finished:
+                alloc.free(sched.retire(s))
+                cache = self._set_tbl_row(cache, s, [])
+            try_admit()
+            self.peak_active = sched.note_peak()
+        self.ttft = dict(sched.first_token_at)
+        return sched.results_list()

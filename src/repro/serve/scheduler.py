@@ -1,0 +1,255 @@
+"""Continuous-batching scheduler: slot lifecycle + token-budget step plans.
+
+The host-side state machine shared by EVERY serve path (DESIGN.md §3.5).
+The engine's three loops — contiguous chunked decode, paged chunked decode,
+and the mixed varlen step — used to each carry their own copy of the same
+bookkeeping (request queue, per-slot output accumulation, EOS / max-token
+completion, FIFO refill, peak-concurrency tracking). That now lives here
+exactly once; the engine keeps only what actually differs per path: how
+memory is admitted (slot width vs free pages) and what gets dispatched.
+
+Two consumption styles:
+
+  * chunked (`absorb_chunk`) — the sequential engines decode
+    `decode_chunk` tokens per dispatch in slot lockstep; the scheduler
+    walks the [chunk, n_slots] token block, appends per slot until its
+    completion condition fires (later tokens in the chunk are speculative
+    garbage, exactly the old engines' convention) and reports finished
+    slots for refill.
+
+  * mixed (`plan_step` / `commit`) — chunked-prefill continuous batching:
+    each step packs every DECODING slot's one pending token (decode slots
+    are planned first and the budget floor is the decoding-slot count, so
+    decode can never starve behind a long prompt) plus up to
+    `token_budget` remaining tokens of PREFILLING slots' prompts in FIFO
+    order, split into `prefill_chunk`-sized pieces. A segment whose chunk
+    consumes the last prompt token emits that sequence's first sampled
+    token; decode segments emit always; mid-prompt segments emit nothing.
+    `commit` applies the sampled tokens and returns finished slots.
+
+FIFO is preserved throughout: admission is strictly head-of-line (the
+caller asks for `head()` and either admits it or waits — later requests
+never jump a blocked head), and prefill budget is granted in request-id
+order.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["Scheduler", "Segment", "StepPlan", "Slot"]
+
+
+@dataclasses.dataclass
+class Slot:
+    """One batch slot's host-side state."""
+
+    rid: int = -1  # request id (−1 = free)
+    prompt: Optional[np.ndarray] = None
+    out: List[int] = dataclasses.field(default_factory=list)
+    fed: int = 0  # prompt tokens consumed by prefill chunks (mixed path)
+    kv: int = 0  # KV positions materialized in the cache
+    pending: int = 0  # next decode input token (mixed path)
+
+    @property
+    def live(self) -> bool:
+        return self.rid >= 0
+
+    @property
+    def prefilling(self) -> bool:
+        return self.live and self.prompt is not None and self.fed < len(self.prompt)
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """One slot's contribution to a mixed step's packed batch."""
+
+    slot: int
+    tokens: np.ndarray  # token ids fed this step
+    start: int  # absolute KV position of tokens[0]
+    emits: bool  # does this segment's last row get sampled?
+
+
+@dataclasses.dataclass(frozen=True)
+class StepPlan:
+    segments: Tuple[Segment, ...]
+    n_tokens: int  # Σ len(seg.tokens) — the test-pinned budget accounting
+
+
+class Scheduler:
+    def __init__(self, requests: Sequence[np.ndarray], max_new_tokens: int,
+                 n_slots: int, eos_id: int):
+        self.results: List[Optional[np.ndarray]] = [None] * len(requests)
+        self.queue: List[Tuple[int, np.ndarray]] = list(enumerate(requests))
+        self.slots = [Slot() for _ in range(n_slots)]
+        self.max_new_tokens = max_new_tokens
+        self.eos_id = eos_id
+        self.peak_active = 0
+        # time-to-first-token per request, seconds since construction —
+        # the serving-latency signal BENCH_serve.json tracks
+        self.first_token_at: Dict[int, float] = {}
+        self._t0 = time.monotonic()
+
+    def _mark_first_token(self, rid: int) -> None:
+        if rid not in self.first_token_at:
+            self.first_token_at[rid] = time.monotonic() - self._t0
+
+    # ---- queue / admission (FIFO: head-of-line only) ----
+    def head(self) -> Optional[Tuple[int, np.ndarray]]:
+        return self.queue[0] if self.queue else None
+
+    def take_head(self) -> Optional[Tuple[int, np.ndarray]]:
+        return self.queue.pop(0) if self.queue else None
+
+    def free_slot(self) -> Optional[int]:
+        for s, slot in enumerate(self.slots):
+            if not slot.live:
+                return s
+        return None
+
+    def active_count(self) -> int:
+        return sum(slot.live for slot in self.slots)
+
+    def has_active(self) -> bool:
+        return any(slot.live for slot in self.slots)
+
+    def note_peak(self) -> int:
+        self.peak_active = max(self.peak_active, self.active_count())
+        return self.peak_active
+
+    # ---- completion ----
+    def _done(self, out: List[int]) -> bool:
+        return len(out) >= self.max_new_tokens or (
+            self.eos_id >= 0 and out[-1] == self.eos_id
+        )
+
+    def finish(self, rid: int, out: List[int]) -> None:
+        self.results[rid] = np.asarray(out, np.int32)
+
+    def admit_or_finish(self, slot: int, rid: int, prompt: np.ndarray,
+                        first_token: int) -> bool:
+        """Sequential-path admission: the prompt is already prefilled and
+        its first token sampled. Requests that complete immediately
+        (max_new_tokens ≤ 1 or instant EOS) are finalized without taking
+        the slot; returns True when the slot was taken."""
+        self._mark_first_token(rid)
+        if self._done([first_token]):
+            self.finish(rid, [first_token])
+            return False
+        sl = self.slots[slot]
+        sl.rid, sl.prompt, sl.out = rid, np.asarray(prompt), [first_token]
+        sl.fed = sl.kv = len(prompt)
+        sl.pending = first_token
+        return True
+
+    def admit_prefilling(self, slot: int, rid: int, prompt: np.ndarray) -> None:
+        """Mixed-path admission: the prompt will be fed in chunks."""
+        sl = self.slots[slot]
+        sl.rid, sl.prompt, sl.out = rid, np.asarray(prompt), []
+        sl.fed = sl.kv = 0
+        sl.pending = 0
+
+    def retire(self, slot: int) -> int:
+        """Free a slot (results must already be recorded); returns its rid."""
+        rid = self.slots[slot].rid
+        self.slots[slot] = Slot()
+        return rid
+
+    # ---- chunked consumption (contiguous + paged sequential loops) ----
+    def absorb_chunk(self, toks_np: np.ndarray) -> List[int]:
+        """Walk a [chunk, n_slots] sampled-token block in slot lockstep;
+        tokens after a slot's completion are speculative garbage and are
+        discarded. Records finished results and returns finished slots
+        (NOT yet retired — the engine frees memory first)."""
+        finished: List[int] = []
+        for s, sl in enumerate(self.slots):
+            if not sl.live:
+                continue
+            for step in range(toks_np.shape[0]):
+                t = int(toks_np[step, s])
+                sl.out.append(t)
+                sl.kv += 1
+                sl.pending = t  # next decode input if a packed step follows
+                if self._done(sl.out):
+                    self.finish(sl.rid, sl.out)
+                    finished.append(s)
+                    break
+        return finished
+
+    # ---- mixed-step planning (chunked-prefill continuous batching) ----
+    def plan_step(self, token_budget: int, prefill_chunk: int) -> StepPlan:
+        """One mixed step's packed work list.
+
+        Decode slots first — every decoding slot contributes its pending
+        token, and the effective budget is floored at that count, so a
+        wall of prefill can never starve decode. Remaining budget goes to
+        prefilling slots' next prompt chunks in request-id (FIFO) order.
+        """
+        segs: List[Segment] = []
+        decoding = [
+            s for s, sl in enumerate(self.slots)
+            if sl.live and not sl.prefilling
+        ]
+        budget = max(int(token_budget), len(decoding))
+        for s in decoding:
+            sl = self.slots[s]
+            segs.append(Segment(
+                slot=s, tokens=np.asarray([sl.pending], np.int32),
+                start=sl.kv, emits=True,
+            ))
+            budget -= 1
+        prefilling = sorted(
+            (s for s, sl in enumerate(self.slots) if sl.prefilling),
+            key=lambda s: self.slots[s].rid,
+        )
+        for s in prefilling:
+            if budget <= 0:
+                break
+            sl = self.slots[s]
+            # ≥ 1: budget > 0 here, prefill_chunk ≥ 1, and a prefilling
+            # slot always has unfed prompt left
+            n = min(prefill_chunk, len(sl.prompt) - sl.fed, budget)
+            segs.append(Segment(
+                slot=s,
+                tokens=np.asarray(sl.prompt[sl.fed:sl.fed + n], np.int32),
+                start=sl.fed,
+                emits=sl.fed + n == len(sl.prompt),
+            ))
+            budget -= n
+        return StepPlan(
+            segments=tuple(segs), n_tokens=sum(len(g.tokens) for g in segs)
+        )
+
+    def commit(self, plan: StepPlan, sampled: np.ndarray) -> List[int]:
+        """Apply one mixed step's sampled tokens ([n_slots], garbage at
+        non-emitting slots). Returns finished slots (engine retires them
+        after freeing their memory)."""
+        finished: List[int] = []
+        for seg in plan.segments:
+            sl = self.slots[seg.slot]
+            n = len(seg.tokens)
+            sl.kv += n
+            if sl.prefilling:
+                sl.fed += n
+            if not seg.emits:
+                continue
+            t = int(sampled[seg.slot])
+            sl.out.append(t)
+            sl.pending = t
+            if len(sl.out) == 1:
+                self._mark_first_token(sl.rid)
+            if self._done(sl.out):
+                self.finish(sl.rid, sl.out)
+                finished.append(seg.slot)
+        return finished
+
+    # ---- results ----
+    def results_list(self) -> List[np.ndarray]:
+        return [
+            r if r is not None else np.zeros((0,), np.int32)
+            for r in self.results
+        ]
