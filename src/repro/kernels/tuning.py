@@ -45,6 +45,7 @@ __all__ = [
     "choose_ring_schedule",
     "choose_page_size",
     "choose_page_layout",
+    "choose_cache_policy",
     "choose_varlen_blocks",
     "bucket_pow2",
     "prefill_vmem_bytes",
@@ -291,6 +292,44 @@ def choose_page_layout(
     n_pages = max(2, -(-pool_tokens // page) + 1)
     return PageLayout(
         page_size=page, n_pages=n_pages, pages_per_seq=-(-max_len // page)
+    )
+
+
+def choose_cache_policy(
+    n_pages: int,
+    page_size: int,
+    *,
+    min_free_pages: Optional[int] = None,
+    max_cached_pages: Optional[int] = None,
+):
+    """Retention heuristics for the radix prefix cache (DESIGN.md §3.6).
+
+    The cache trades pool headroom for prefill reuse, and the two knobs
+    bound each side of that trade:
+
+      * min_free_pages — eviction watermark. Donations evict LRU entries
+        until this many pages are physically free, so a fresh admission
+        usually finds pages without paying eviction latency on its own
+        critical path. Default: 1/16 of the pool (≥ 1) — small enough
+        that a hot shared prefix survives, large enough that the common
+        single-page admission never blocks on eviction.
+      * max_cached_pages — hard cap on retained pages. Default: the whole
+        usable pool — retention is free (cached pages are reclaimed on
+        demand before anything else gives), so the only reason to cap
+        below that is to bound the host-side tree walk; callers serving
+        adversarial (never-repeating) traffic can set it low or to 0 to
+        disable retention.
+
+    Explicit values are honored as given (0 is meaningful: a 0 watermark
+    never proactively evicts; a 0 cap disables retention)."""
+    from repro.runtime.kvcache import CachePolicy  # lazy: no cycle
+
+    if min_free_pages is None:
+        min_free_pages = max(1, n_pages // 16)
+    if max_cached_pages is None:
+        max_cached_pages = max(n_pages - 1, 0)
+    return CachePolicy(
+        min_free_pages=min_free_pages, max_cached_pages=max_cached_pages
     )
 
 

@@ -2,6 +2,12 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch paper-llama \
         --requests 6 --max-new-tokens 16
+
+Per-request time-to-first-token is printed for EVERY step mode (the
+scheduler tracks it per request id from enqueue to first token, so a
+priority-swapped or preempted request reports the waiting time it really
+accrued), and the paged engines print the prefix-cache / preemption
+counters from `Engine.stats()` (DESIGN.md §3.6).
 """
 
 from __future__ import annotations
@@ -16,6 +22,21 @@ from repro import configs
 from repro.models import get_model
 from repro.runtime import checkpoint as ckpt
 from repro.serve import Engine, ServeConfig
+
+
+def _parse_priorities(spec, n_requests):
+    """--priorities "2,0,1,..." (1:1 with requests) or "mixed" (alternate
+    two classes — a quick way to see preemptive scheduling act)."""
+    if spec is None:
+        return None
+    if spec == "mixed":
+        return [i % 2 for i in range(n_requests)]
+    prios = [int(x) for x in spec.split(",")]
+    if len(prios) != n_requests:
+        raise SystemExit(
+            f"--priorities lists {len(prios)} values for {n_requests} requests"
+        )
+    return prios
 
 
 def main(argv=None):
@@ -45,6 +66,19 @@ def main(argv=None):
                    help="packed tokens per mixed step (0 → heuristic)")
     p.add_argument("--prefill-chunk", type=int, default=16,
                    help="max prompt tokens one sequence feeds per mixed step")
+    p.add_argument("--shared-prefix-len", type=int, default=0,
+                   help="prepend a shared system prompt of this many tokens "
+                        "to every request (exercises the radix prefix "
+                        "cache, DESIGN.md §3.6)")
+    p.add_argument("--priorities", default=None,
+                   help='comma-separated ints (1:1 with requests) or '
+                        '"mixed" — higher value is served first and may '
+                        'preempt lower (DESIGN.md §3.6)')
+    p.add_argument("--no-prefix-cache", action="store_true",
+                   help="disable the radix prefix cache")
+    p.add_argument("--no-preemption", action="store_true",
+                   help="worst-case reservation admission instead of "
+                        "optimistic allocation + preemption")
     args = p.parse_args(argv)
 
     cfg = configs.get_smoke_config(args.arch) if args.smoke else configs.get_config(args.arch)
@@ -60,7 +94,7 @@ def main(argv=None):
 
     eng = Engine(params, cfg, ServeConfig(
         max_batch=args.max_batch,
-        max_len=args.prompt_len + args.max_new_tokens + 8,
+        max_len=args.shared_prefix_len + args.prompt_len + args.max_new_tokens + 8,
         temperature=args.temperature,
         seed=args.seed,
         kv_layout=args.kv_layout,
@@ -69,14 +103,24 @@ def main(argv=None):
         step_mode=args.step_mode,
         token_budget=args.token_budget,
         prefill_chunk=args.prefill_chunk,
+        prefix_cache=not args.no_prefix_cache,
+        preemption=not args.no_preemption,
     ))
     rng = np.random.default_rng(args.seed)
+    shared = rng.integers(
+        0, cfg.vocab_size, (args.shared_prefix_len,)
+    ).astype(np.int32)
     reqs = [
-        rng.integers(0, cfg.vocab_size, (args.prompt_len,)).astype(np.int32)
+        np.concatenate([
+            shared,
+            rng.integers(0, cfg.vocab_size, (args.prompt_len,)).astype(np.int32),
+        ])
         for _ in range(args.requests)
     ]
+    priorities = _parse_priorities(args.priorities, len(reqs))
     t0 = time.time()
-    outs = eng.serve(reqs, max_new_tokens=args.max_new_tokens)
+    outs = eng.serve(reqs, max_new_tokens=args.max_new_tokens,
+                     priorities=priorities)
     dt = time.time() - t0
     total_tokens = sum(len(o) for o in outs)
     for i, o in enumerate(outs):
@@ -86,10 +130,21 @@ def main(argv=None):
     print(f"{total_tokens} tokens in {dt:.2f}s → {total_tokens/dt:.1f} tok/s "
           f"(batched decode over {args.max_batch} slots, {layout}, {mode}, "
           f"peak {eng.peak_active} concurrent)")
-    if eng.ttft:
+    if eng.ttft:  # every step mode reports per-request TTFT
+        print("time-to-first-token (enqueue → first token, per request):")
+        for rid in sorted(eng.ttft):
+            prio = f" prio={priorities[rid]}" if priorities is not None else ""
+            print(f"  request {rid}:{prio} {eng.ttft[rid]*1e3:8.1f} ms")
         ttft = [eng.ttft[r] for r in sorted(eng.ttft)]
-        print(f"time-to-first-token: mean {np.mean(ttft)*1e3:.1f} ms, "
-              f"max {np.max(ttft)*1e3:.1f} ms")
+        print(f"  mean {np.mean(ttft)*1e3:.1f} ms, max {np.max(ttft)*1e3:.1f} ms")
+    st = eng.stats()
+    if st["prefix_cache_enabled"] or st["preemption_enabled"]:
+        print(f"serving core: prefix-cache hit rate "
+              f"{100 * st['hit_rate']:.1f}% "
+              f"({st['hit_tokens']}/{st['prompt_tokens']} prompt tokens, "
+              f"{st.get('cached_pages', 0)} pages retained), "
+              f"{st['preemptions']} preemptions, "
+              f"{st.get('evictions', 0)} evictions")
     return 0
 
 

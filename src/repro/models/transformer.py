@@ -806,11 +806,16 @@ def prefill_lm(params: dict, tokens: jax.Array, cache: dict, cfg: ModelConfig,
     TPU serving uses `forward_packed` (the varlen mixed step); this path
     favors exactness and works for every architecture.
 
-    start_pos > 0 prefllls only a *tail*: `tokens` are the positions
+    start_pos > 0 prefills only a *tail*: `tokens` are the positions
     [start_pos, start_pos + s) and the cache is assumed to already hold
     the first start_pos positions — the paged engine's shared-prefix
-    admission (KV pages reused from a matching live prompt, DESIGN.md
-    §3.4). Only valid for pure global-attention stacks: ring-region and
+    admission (KV pages aliased from a live parent, DESIGN.md §3.4) and
+    the radix prefix cache's warm-hit resume (pages matched out of the
+    content-addressed tree, DESIGN.md §3.6) both enter here. FLASH-D is
+    what makes this resume state-free: a finished tile leaves only (O, Λ)
+    behind — no running max or pending division — so continuing from a
+    page boundary needs nothing beyond the cached K/V pages themselves.
+    Only valid for pure global-attention stacks: ring-region and
     recurrent layers carry state the skipped steps would have produced.
     It may be a traced i32 scalar, so varying tails reuse one compilation.
 

@@ -1,4 +1,7 @@
 from repro.serve.engine import Engine, ServeConfig, sample_token
-from repro.serve.scheduler import Scheduler, Segment, StepPlan
+from repro.serve.scheduler import Request, Scheduler, Segment, StepPlan
 
-__all__ = ["Engine", "ServeConfig", "sample_token", "Scheduler", "Segment", "StepPlan"]
+__all__ = [
+    "Engine", "ServeConfig", "sample_token",
+    "Request", "Scheduler", "Segment", "StepPlan",
+]

@@ -1,10 +1,12 @@
 """Batched serving engine: continuous batching over contiguous, paged, or
-packed-varlen KV memory.
+packed-varlen KV memory, with automatic prefix caching and preemptive
+priority scheduling (DESIGN.md §3.4–§3.6).
 
-Requests join a slot array; finished slots are refilled from a FIFO queue.
-Slot lifecycle (queue, per-slot outputs, EOS/max-token completion, refill,
-peak-concurrency accounting) lives in `repro.serve.scheduler.Scheduler` —
-shared by every path below; this module owns memory admission and device
+Requests join a slot array; finished slots are refilled from a priority
+queue (FIFO within a class). Slot lifecycle (queue, per-slot outputs,
+EOS/max-token completion, refill, preemption bookkeeping, peak-concurrency
+and per-request TTFT accounting) lives in `repro.serve.scheduler.Scheduler`
+— shared by every path below; this module owns memory admission and device
 dispatch only. Sampling: greedy / temperature / top-k.
 
 Three serving modes (ServeConfig.kv_layout × ServeConfig.step_mode):
@@ -13,20 +15,39 @@ Three serving modes (ServeConfig.kv_layout × ServeConfig.step_mode):
     memory commits max_batch × max_len tokens up front.
   paged (DESIGN.md §3.4) — KV lives in a global page pool with
     per-sequence block tables (runtime/kvcache.py); admission is by FREE
-    PAGES, prompts sharing a page-aligned prefix with a live sequence
-    reuse its pages (CoW boundary copy) and prefill only the tail, and
-    decode runs the block-table scalar-prefetch kernel under `*_pallas`.
+    PAGES and decode runs the block-table scalar-prefetch kernel under
+    `*_pallas`.
   mixed (step_mode="mixed", DESIGN.md §3.5) — chunked-prefill continuous
     batching over the paged pool: every step packs each decoding slot's
     one pending token TOGETHER WITH the next prefill chunks of admitted
     prompts into one flat varlen batch and dispatches ONE jitted
-    `forward_packed` step — prefill and decode are the same kernel
-    (`kernels/flashd_varlen`), so a long prompt no longer stalls decoding
-    sequences for a whole-prompt prefill dispatch. Iterations with no
-    prefill in flight use the sequential chunked decode fast path, so
-    steady-state decode costs what the paged engine's does. Requires a
-    pure global-attention stack (`transformer.packed_mixers_ok`); other
-    stacks fall back to the sequential paged/contiguous loops.
+    `forward_packed` step.
+
+Cache-aware, preemptible serving core (DESIGN.md §3.6) — paged + mixed:
+
+  * automatic prefix caching — the allocator's content-addressed radix
+    tree persists ACROSS serve() calls on this engine (`self._alloc` and
+    the device page pool are engine-lifetime state). Admission walks the
+    tree with the prompt's page chain; matched full pages are aliased
+    into the new block table and prefill starts at the first uncached
+    token (`prefill_lm(start_pos=…)` / the mixed packer's `fed0`), so a
+    warm system prompt costs O(new tokens) TTFT. Prompts are indexed once
+    their prefill completes (live sharing); retirement donates the whole
+    clean token stream — including generated tokens — so a multi-turn
+    follow-up that replays the previous conversation hits the cache too.
+  * preemptive scheduling — with `ServeConfig.preemption` (default on),
+    worst-case `reserve_tokens` admission is replaced by optimistic
+    per-chunk allocation: a request is admitted when its PROMPT fits, and
+    growth draws the free pool. When the pool (or the slot array, given a
+    higher-priority arrival) is exhausted, the scheduler's victim — the
+    lowest-priority, youngest slot — is preempted: its pages are donated
+    to the prefix cache (making resume nearly free) and the request is
+    re-queued with recompute-on-resume, which keeps every output stream
+    token-identical to an unconstrained run while letting the pool be
+    oversubscribed (pool < worst-case demand still completes).
+
+`Engine.stats()` exposes the hit-rate / preemption / eviction counters,
+cumulative over the engine's lifetime.
 
 Static-shape bucketing (DESIGN.md §3.5): prompt lengths and packed-batch
 sizes are padded to powers of two (`tuning.bucket_pow2`) before they reach
@@ -52,7 +73,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import functools
-from typing import List
+from typing import Dict, List, Optional, Sequence, Set
 
 import jax
 import jax.numpy as jnp
@@ -60,7 +81,7 @@ import numpy as np
 
 from repro.models import ModelConfig, get_model
 from repro.models.transformer import forward_packed, packed_mixers_ok, prefill_lm
-from repro.serve.scheduler import Scheduler, StepPlan
+from repro.serve.scheduler import Request, Scheduler, StepPlan
 
 __all__ = ["ServeConfig", "Engine", "sample_token"]
 
@@ -78,7 +99,17 @@ class ServeConfig:
     kv_layout: str = "contiguous"  # "paged": page-pool KV in `serve`
     page_size: int = 0  # 0 → repro.kernels.tuning heuristic
     kv_pool_tokens: int = 0  # pool size in tokens; 0 → max_batch·max_len
-    prefix_sharing: bool = True  # share common prompt-prefix pages (CoW)
+    # prefix reuse: `prefix_sharing` is the soundness gate (global-attn
+    # stacks only — auto-disabled on hybrid stacks), `prefix_cache` the
+    # mechanism (the radix tree, which subsumes the old live-scan sharing:
+    # live prompts are indexed at prefill). Either False disables ALL
+    # prefix reuse — every prompt prefills in full.
+    prefix_sharing: bool = True
+    # ---- radix prefix cache + preemption (DESIGN.md §3.6) ----
+    prefix_cache: bool = True  # content-addressed page cache across requests
+    cache_min_free_pages: int = -1  # eviction watermark; -1 → tuning heuristic
+    cache_max_pages: int = -1  # retained-page cap; -1 → tuning heuristic
+    preemption: bool = True  # optimistic admission + victim preemption
     # ---- mixed varlen step (DESIGN.md §3.5) ----
     step_mode: str = "sequential"  # "mixed": chunked-prefill packed steps
     token_budget: int = 0  # packed tokens per mixed step; 0 → heuristic
@@ -134,6 +165,19 @@ def sample_token(logits: jax.Array, key, cfg: ServeConfig) -> jax.Array:
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
 
 
+class _PoolCtx:
+    """Mutable per-serve() context of the paged loops: the device cache
+    tree plus the slot → allocator-sequence map and which slots' prompts
+    are already indexed in the radix tree."""
+
+    __slots__ = ("cache", "seq_of", "inserted")
+
+    def __init__(self, cache):
+        self.cache = cache
+        self.seq_of: Dict[int, int] = {}
+        self.inserted: Set[int] = set()
+
+
 class Engine:
     def __init__(self, params, model_cfg: ModelConfig, serve_cfg: ServeConfig,
                  *, sharding_ctx=None):
@@ -186,7 +230,7 @@ class Engine:
             and self._page_layout is not None
             and packed_mixers_ok(model_cfg)
         )
-        # prefix sharing skips the shared positions' prefill steps, which is
+        # prefix reuse skips the shared positions' prefill steps, which is
         # only sound when EVERY mixer reads the paged cache: ring
         # (local/chunked) and SSM/RG-LRU layers carry state those steps
         # would have produced (see prefill_lm's start_pos contract)
@@ -198,6 +242,20 @@ class Engine:
                 for m, _ in (*model_cfg.pattern, *model_cfg.remainder)
             )
         )
+        # radix prefix cache (DESIGN.md §3.6): page-content addressing is
+        # sound exactly when prefix reuse is (KV at position p is a pure
+        # function of tokens [0, p] for a global-attention stack)
+        self._cache_on = self._can_share_prefix and serve_cfg.prefix_cache
+        # engine-lifetime paged state: the allocator (and its radix tree)
+        # plus the device page pool persist across serve() calls so cached
+        # prefixes survive between request batches
+        self._alloc = None
+        self._paged_cache = None
+        self._seq_base = 0  # allocator sequence ids, unique across calls
+        self._stats = {
+            "prefix_lookups": 0, "prefix_hits": 0, "hit_tokens": 0,
+            "prompt_tokens": 0, "preemptions": 0,
+        }
 
     def _scope(self):
         """Sharding scope for traces/dispatches: activates the ctx and the
@@ -223,6 +281,28 @@ class Engine:
         from repro.kernels.tuning import bucket_pow2  # lazy: no cycle
 
         return bucket_pow2(n, lo=8, hi=self.sc.max_len)
+
+    # ---- observability ----
+    def stats(self) -> dict:
+        """Serving counters, cumulative over this engine's lifetime:
+        prefix-cache hit rate (token-weighted), preemption / eviction /
+        donation counts, pool occupancy, and the last serve() call's
+        per-request TTFT."""
+        s = dict(self._stats)
+        s["hit_rate"] = s["hit_tokens"] / max(s["prompt_tokens"], 1)
+        s["prefix_cache_enabled"] = self._cache_on
+        s["preemption_enabled"] = bool(self.sc.preemption)
+        if self._alloc is not None:
+            s.update(
+                evictions=self._alloc.evictions,
+                donated_pages=self._alloc.donated_pages,
+                cached_pages=self._alloc.cached_pages,
+                pages_in_use=self._alloc.pages_in_use,
+                free_pages=self._alloc.free_pages,
+            )
+        s["peak_active"] = self.peak_active
+        s["ttft"] = dict(self.ttft)
+        return s
 
     # ---- jitted device loops ----
     def _gen_fn(self, params, prompts, cache, key, real_len, max_new_tokens: int):
@@ -315,22 +395,28 @@ class Engine:
         return self._to_host(toks)[:, :max_new_tokens]
 
     # ---- continuous batching over a request queue ----
-    def serve(self, requests: List[np.ndarray], max_new_tokens: int) -> List[np.ndarray]:
+    def serve(self, requests: List[np.ndarray], max_new_tokens: int,
+              priorities: Optional[Sequence[int]] = None) -> List[np.ndarray]:
         """Each request: 1-D prompt array. Returns generated arrays, in order.
+
+        `priorities` (optional, higher = more urgent, default all-0 FIFO)
+        steer admission order and — with `ServeConfig.preemption` — let a
+        high-priority arrival preempt a lower-priority victim.
 
         Routing: `step_mode="mixed"` (and a packed-capable stack) runs the
         chunked-prefill mixed varlen loop; otherwise the paged or
         contiguous sequential loop. All three share the Scheduler's slot
-        lifecycle and are token-identical under greedy sampling."""
+        lifecycle and are token-identical under greedy sampling — with
+        the prefix cache and preemption enabled or disabled."""
         with self._scope():
             if self._mixed_ok:
-                return self._serve_mixed(requests, max_new_tokens)
+                return self._serve_mixed(requests, max_new_tokens, priorities)
             # fall back along the CONFIGURED memory model: a mixed request
             # on a non-packed-capable stack must not silently switch an
             # explicitly contiguous engine onto the page pool
             if self._page_layout is not None and self.sc.kv_layout == "paged":
-                return self._serve_paged(requests, max_new_tokens)
-            return self._serve_impl(requests, max_new_tokens)
+                return self._serve_paged(requests, max_new_tokens, priorities)
+            return self._serve_impl(requests, max_new_tokens, priorities)
 
     def _check_len(self, rid: int, n_prompt: int, max_new_tokens: int) -> None:
         if n_prompt + max_new_tokens > self.sc.max_len:
@@ -362,9 +448,12 @@ class Engine:
             jnp.int32(start_pos), jnp.asarray([n], jnp.int32),
         )
 
-    def _serve_impl(self, requests: List[np.ndarray], max_new_tokens: int) -> List[np.ndarray]:
+    # ---- contiguous continuous batching ----
+    def _serve_impl(self, requests: List[np.ndarray], max_new_tokens: int,
+                    priorities=None) -> List[np.ndarray]:
         b = self.sc.max_batch
-        sched = Scheduler(requests, max_new_tokens, b, self.sc.eos_id)
+        sched = Scheduler(requests, max_new_tokens, b, self.sc.eos_id,
+                          priorities=priorities)
         cache = self.api.init_cache(b, self.sc.max_len, self.mc)
         tok = jnp.zeros((b,), jnp.int32)
         pos = jnp.zeros((b,), jnp.int32)
@@ -376,27 +465,45 @@ class Engine:
 
         def assign(slot: int):
             """Prefill the next queued request into `slot`. The prefill's
-            sampled token is output token 0 (same as `generate`); requests
-            that complete immediately are finalized and the next is taken."""
+            sampled token is output token 0 (same as `generate`); a
+            resumed request's effective prompt replays its pre-preemption
+            tokens (recompute-on-resume). Requests that complete
+            immediately are finalized and the next is taken."""
             nonlocal cache, tok, pos
-            while (head := sched.take_head()) is not None:
-                rid, prompt = head
-                self._check_len(rid, len(prompt), max_new_tokens)
+            while (req := sched.take_head()) is not None:
+                toks = req.tokens
+                self._check_len(req.rid, len(req.prompt), max_new_tokens)
                 one_cache = self.api.init_cache(1, self.sc.max_len, self.mc)
-                logits, one_cache = self._prefill_bucketed(prompt, one_cache)
+                logits, one_cache = self._prefill_bucketed(toks, one_cache)
                 self._key, k = jax.random.split(self._key)
                 t0 = int(self._to_host(sample_token(logits, k, self.sc))[0])
-                if not sched.admit_or_finish(slot, rid, prompt, t0):
+                if not sched.admit_request(slot, req, t0):
                     continue
                 cache = jax.tree.map(
                     lambda c, o: _write_slot(c, o, slot), cache, one_cache
                 )
                 tok = tok.at[slot].set(t0)
-                pos = pos.at[slot].set(len(prompt))
+                pos = pos.at[slot].set(len(toks))
                 return
+
+        def preempt_for_priority():
+            """A queued request of strictly higher priority than a live
+            slot evicts that slot (lowest-priority, youngest first): the
+            victim re-queues with recompute-on-resume, the arrival takes
+            its place. Slot-array pressure is the contiguous engine's
+            analogue of page pressure."""
+            if not self.sc.preemption:
+                return
+            while (req := sched.head()) is not None and sched.free_slot() is None:
+                v = sched.victim_slot(below=req.priority)
+                if v is None:
+                    return
+                sched.preempt(v)
+                assign(v)
 
         for s in range(b):
             assign(s)
+        preempt_for_priority()
 
         self.peak_active = sched.note_peak()
         while sched.has_active():
@@ -408,176 +515,312 @@ class Engine:
             for s in sched.absorb_chunk(toks_np):
                 sched.retire(s)
                 assign(s)  # refill overwrites the slot's cache / tok / pos
+            preempt_for_priority()
             self.peak_active = sched.note_peak()
         self.ttft = dict(sched.first_token_at)
+        self._stats["preemptions"] += sched.preemptions
         return sched.results_list()
 
-    # ---- paged continuous batching (DESIGN.md §3.4) ----
-    def _serve_paged(self, requests: List[np.ndarray], max_new_tokens: int) -> List[np.ndarray]:
+    # ---- paged-pool shared machinery (DESIGN.md §3.4 + §3.6) ----
+    def _paged_state(self):
+        """Engine-lifetime paged state: allocator (radix tree included)
+        and the device page pool, created lazily and reused across
+        serve() calls so cached prefixes persist between request batches."""
+        if self._alloc is None:
+            from repro.kernels.tuning import choose_cache_policy
+            from repro.runtime.kvcache import CachePolicy, PagedKVAllocator
+
+            lay = self._page_layout
+            if self._cache_on:
+                policy = choose_cache_policy(
+                    lay.n_pages, lay.page_size,
+                    min_free_pages=(
+                        None if self.sc.cache_min_free_pages < 0
+                        else self.sc.cache_min_free_pages
+                    ),
+                    max_cached_pages=(
+                        None if self.sc.cache_max_pages < 0
+                        else self.sc.cache_max_pages
+                    ),
+                )
+            else:
+                policy = CachePolicy(max_cached_pages=0)
+            self._alloc = PagedKVAllocator(
+                lay.n_pages, lay.page_size, cache_policy=policy
+            )
+            self._paged_cache = self.api.init_cache(
+                self.sc.max_batch, self.sc.max_len, self.mc,
+                layout="paged", page_size=lay.page_size, n_pages=lay.n_pages,
+            )
+        return self._alloc, self._paged_cache
+
+    def _reset_paged_state(self):
+        """Drop the persistent pool after a failed serve (live sequences
+        would otherwise leak into the next call). The cache restarts cold."""
+        self._alloc = None
+        self._paged_cache = None
+
+    def _copy_pages(self, cache, cows):
+        if not cows:
+            return cache
+        # one jitted gather-scatter for ALL owed copies per leaf, with
+        # the pool buffer donated: XLA updates the pages in place
+        # instead of rewriting a pool-sized array per CowCopy
+        srcs = jnp.asarray([cw.src for cw in cows], jnp.int32)
+        dsts = jnp.asarray([cw.dst for cw in cows], jnp.int32)
+        return _map_paged(cache, pool=lambda x: _copy_pool_pages(x, srcs, dsts))
+
+    def _pool_retire(self, sched: Scheduler, alloc, ctx: _PoolCtx, s: int) -> None:
+        """Retire a finished slot: donate its clean token stream's pages
+        to the radix tree (or plain-free them with the cache off) and
+        point the dead slot's table row at the garbage page before the
+        freed pages can be reassigned."""
+        stream = sched.slots[s].cache_tokens()
+        seq = ctx.seq_of.pop(s)
+        ctx.inserted.discard(s)
+        if self._cache_on:
+            alloc.donate(seq, stream)
+        else:
+            alloc.free(seq)
+        sched.retire(s)
+        ctx.cache = self._set_tbl_row(ctx.cache, s, [])
+
+    def _pool_preempt(self, sched: Scheduler, alloc, ctx: _PoolCtx, s: int) -> None:
+        """Victim preemption: donate the slot's pages (a resumed match
+        makes recompute-on-resume nearly free — FLASH-D's (O, Λ) carry
+        needs no state beyond the cached pages to continue from a page
+        boundary) and re-queue the request."""
+        stream = sched.slots[s].cache_tokens()
+        seq = ctx.seq_of.pop(s)
+        ctx.inserted.discard(s)
+        sched.preempt(s)
+        if self._cache_on:
+            alloc.donate(seq, stream)
+        else:
+            alloc.free(seq)
+        ctx.cache = self._set_tbl_row(ctx.cache, s, [])
+
+    def _pool_grow(self, sched: Scheduler, alloc, ctx: _PoolCtx, s: int,
+                   want: int) -> bool:
+        """Materialize pages so slot `s` can write up to `want` positions,
+        preempting victims under page pressure (optimistic per-chunk
+        allocation). Returns False when `s` itself was the victim."""
+        from repro.runtime.kvcache import PageError
+
+        while True:
+            seq = ctx.seq_of[s]
+            before = len(alloc.table(seq))
+            try:
+                cows = alloc.extend(seq, want)
+            except PageError:
+                v = sched.victim_slot() if self.sc.preemption else None
+                if v is None or sched.active_count() == 1:
+                    raise
+                self._pool_preempt(sched, alloc, ctx, v)
+                if v == s:
+                    return False
+                continue
+            ctx.cache = self._copy_pages(ctx.cache, cows)
+            if cows or len(alloc.table(seq)) != before:
+                ctx.cache = self._set_tbl_row(ctx.cache, s, alloc.table(seq))
+            return True
+
+    def _pool_reserve(self, req: Request, max_new_tokens: int,
+                      chunk_n: int) -> int:
+        """Admission reservation: just the prompt under preemption
+        (optimistic per-chunk allocation, DESIGN.md §3.6) or the worst
+        case (prompt + remaining new tokens + speculative chunk slack,
+        clamped to max_len — writes past it hit the garbage page) without."""
+        n = len(req.tokens)
+        if self.sc.preemption:
+            return n
+        remaining = max_new_tokens - len(req.out)
+        return min(n + remaining + chunk_n, self.sc.max_len)
+
+    def _pool_match(self, alloc, toks: np.ndarray):
+        """Radix lookup for an admission, capped so ≥ 1 token prefills."""
+        if not self._cache_on:
+            return None
+        return alloc.match_prefix(toks, max_tokens=len(toks) - 1)
+
+    def _preempting_could_admit(self, sched: Scheduler, alloc, ctx: _PoolCtx,
+                                req: Request, reserve: int, cached) -> bool:
+        """Upper bound on admission-pressure preemption: even rolling back
+        EVERY strictly-lower-priority victim frees at most their table
+        pages — if that still cannot cover the arrival, preempting would
+        discard running work for nothing, so the head waits instead."""
+        from repro.runtime.kvcache import pages_for
+
+        need = pages_for(reserve, alloc.page_size)
+        if cached is not None:
+            need -= len(cached.pages)
+        bound = alloc.free_pages + alloc.evictable_pages
+        for s, sl in enumerate(sched.slots):
+            if sl.live and sl.priority < req.priority:
+                bound += len(alloc.table(ctx.seq_of[s]))
+        return need <= bound
+
+    def _note_admission(self, toks, cached) -> None:
+        self._stats["prefix_lookups"] += 1
+        self._stats["prompt_tokens"] += len(toks)
+        if cached is not None and cached.n_tokens > 0:
+            self._stats["prefix_hits"] += 1
+            self._stats["hit_tokens"] += cached.n_tokens
+
+    # ---- paged continuous batching (DESIGN.md §3.4 + §3.6) ----
+    def _serve_paged(self, requests: List[np.ndarray], max_new_tokens: int,
+                     priorities=None) -> List[np.ndarray]:
         """Sequential continuous batching over a page-pool KV cache.
 
         Differences from the contiguous loop:
 
-          * admission is by FREE PAGES, not slot count: a request is
-            admitted when the pool can cover its worst case
-            (prompt + max_new_tokens + one decode chunk of speculative
-            slack, minus shared prefix pages); a blocked head-of-line
-            request waits for frees, so short sequences pack the pool far
-            denser than `max_batch × max_len` slots would;
-          * prompts sharing a page-aligned-or-longer prefix with a live
-            sequence reuse its KV pages (full pages by reference, the
-            boundary page as a CoW copy) and prefill only the tail;
+          * admission is by FREE PAGES, not slot count: with preemption, a
+            request is admitted as soon as its PROMPT fits (growth is
+            optimistic and backed by victim preemption); without, the
+            worst case is reserved up front and a blocked head waits for
+            frees. Priority order is respected either way, and a
+            higher-priority arrival may preempt a lower-priority victim;
+          * prompts walk the radix prefix cache: matched full pages are
+            aliased into the block table and only the tail is prefilled
+            (`start_pos`), so a warm shared prefix costs O(new tokens);
           * before every chunk the allocator materializes pages covering
-            the chunk's writes and the engine mirrors grown block tables
-            to the device; finished slots free their pages and point
-            their table row at the garbage page, so lockstep speculative
-            writes from dead slots stay harmless.
+            the chunk's writes (preempting under pressure) and the engine
+            mirrors grown block tables to the device; finished slots
+            donate their pages to the cache and point their table row at
+            the garbage page, so lockstep speculative writes from dead
+            slots stay harmless.
         """
-        from repro.runtime.kvcache import PagedKVAllocator, PageError, pages_for
+        from repro.runtime.kvcache import PageError, pages_for
 
         lay = self._page_layout
         page = lay.page_size
         b = self.sc.max_batch
-        sched = Scheduler(requests, max_new_tokens, b, self.sc.eos_id)
-        alloc = PagedKVAllocator(lay.n_pages, page)
-        cache = self.api.init_cache(
-            b, self.sc.max_len, self.mc,
-            layout="paged", page_size=page, n_pages=lay.n_pages,
-        )
+        sched = Scheduler(requests, max_new_tokens, b, self.sc.eos_id,
+                          priorities=priorities)
+        alloc, cache0 = self._paged_state()
+        ctx = _PoolCtx(cache0)
         tok = jnp.zeros((b,), jnp.int32)
         pos = jnp.zeros((b,), jnp.int32)
         chunk_n = max(1, min(self.sc.decode_chunk, max_new_tokens))
 
-        def best_prefix(prompt: np.ndarray):
-            """Longest common prompt prefix with a live sequence — the
-            prefix-sharing candidate. Worth taking only when it covers at
-            least one full page (a shorter match saves nothing: the
-            boundary CoW copy costs the same page a fresh alloc would)."""
-            if not self._can_share_prefix:
-                return -1, 0
-            best_s, best_n = -1, 0
-            for s, sl in enumerate(sched.slots):
-                if not sl.live or sl.prompt is None:
-                    continue
-                other = sl.prompt
-                m = min(len(prompt), len(other))
-                n = int(np.argmin(np.equal(prompt[:m], other[:m]))) \
-                    if not np.array_equal(prompt[:m], other[:m]) else m
-                if n > best_n:
-                    best_s, best_n = s, n
-            best_n = min(best_n, len(prompt) - 1)  # the tail must run ≥ 1 token
-            if best_n < page:
-                return -1, 0
-            return best_s, best_n
-
-        def copy_pages(c, cows):
-            if not cows:
-                return c
-            # one jitted gather-scatter for ALL owed copies per leaf, with
-            # the pool buffer donated: XLA updates the pages in place
-            # instead of rewriting a pool-sized array per CowCopy
-            srcs = jnp.asarray([cw.src for cw in cows], jnp.int32)
-            dsts = jnp.asarray([cw.dst for cw in cows], jnp.int32)
-            return _map_paged(c, pool=lambda x: _copy_pool_pages(x, srcs, dsts))
-
         def assign(slot: int) -> bool:
-            """Admit the head-of-line request into `slot` if the pool can
-            cover it. Returns False (and leaves the queue intact) when it
-            cannot — the request waits for pages to free. FIFO order is
+            """Admit the highest-priority queued request into `slot` if
+            the pool can cover it (evicting cached pages, then preempting
+            strictly-lower-priority victims, as needed). Returns False
+            (and leaves the queue intact) when it cannot — the request
+            waits. Head-of-line order within the priority order is
             preserved: later requests never jump a blocked head."""
-            nonlocal cache, tok, pos
-            while (head := sched.head()) is not None:
-                rid, prompt = head
-                n_prompt = len(prompt)
-                self._check_len(rid, n_prompt, max_new_tokens)
-                # speculative post-EOS chunk steps need slack, but tables
-                # are only ⌈max_len/page⌉ wide — writes past max_len land
-                # on the garbage page instead (the in-table clamp), so the
-                # reservation never needs to exceed max_len
-                reserve = min(n_prompt + max_new_tokens + chunk_n,
-                              self.sc.max_len)
-                parent_slot, shared = best_prefix(np.asarray(prompt))
-                if not alloc.can_admit(reserve, shared_tokens=shared):
-                    # sharing never costs more pages than an unshared admit,
-                    # so there is no cheaper retry — wait for frees
+            nonlocal tok, pos
+            while (req := sched.head()) is not None:
+                toks = req.tokens
+                n = len(toks)
+                self._check_len(req.rid, len(req.prompt), max_new_tokens)
+                reserve = self._pool_reserve(req, max_new_tokens, chunk_n)
+                cached = self._pool_match(alloc, toks)
+                if not alloc.can_admit(reserve, cached=cached):
+                    if self.sc.preemption and self._preempting_could_admit(
+                        sched, alloc, ctx, req, reserve, cached
+                    ) and (
+                        v := sched.victim_slot(below=req.priority)
+                    ) is not None:
+                        self._pool_preempt(sched, alloc, ctx, v)
+                        continue  # re-match: donation may extend the prefix
                     if sched.has_active():
                         return False  # live sequences will free pages
                     raise PageError(
-                        f"request {rid} needs {pages_for(reserve, page)} pages"
-                        f" but the pool holds {lay.n_pages - 1}"
+                        f"request {req.rid} needs {pages_for(reserve, page)}"
+                        f" pages but the pool holds {lay.n_pages - 1}"
                     )
                 sched.take_head()
-                cows = alloc.admit(
-                    rid, prompt_len=n_prompt, reserve_tokens=reserve,
-                    share_from=(
-                        sched.slots[parent_slot].rid if parent_slot >= 0 else None
-                    ),
-                    shared_tokens=shared,
-                )
-                cache = copy_pages(cache, cows)
-                cache = self._set_tbl_row(cache, slot, alloc.table(rid))
-                # tail-only prefill: shared pages already hold [0, shared)
+                seq = self._seq_base
+                self._seq_base += 1
+                alloc.admit(seq, prompt_len=n, reserve_tokens=reserve,
+                            cached=cached)
+                self._note_admission(toks, cached)
+                start = cached.n_tokens if cached is not None else 0
+                ctx.cache = self._set_tbl_row(ctx.cache, slot, alloc.table(seq))
+                # tail-only prefill: cached pages already hold [0, start)
                 view = _map_paged(
-                    cache, batch=lambda x: x[:, slot:slot + 1]
+                    ctx.cache, batch=lambda x: x[:, slot:slot + 1]
                 )
                 logits, view = self._prefill_bucketed(
-                    np.asarray(prompt), view, start_pos=shared
+                    toks, view, start_pos=start
                 )
-                cache = _map_paged(
-                    cache, view,
+                ctx.cache = _map_paged(
+                    ctx.cache, view,
                     pool=lambda x, o: o,  # updated pool (slot's pages only)
                     batch=lambda x, o: x.at[:, slot].set(o[:, 0]),
                 )
                 self._key, k = jax.random.split(self._key)
                 t0 = int(self._to_host(sample_token(logits, k, self.sc))[0])
-                if not sched.admit_or_finish(slot, rid, prompt, t0):
-                    alloc.free(rid)
-                    cache = self._set_tbl_row(cache, slot, [])
+                if not sched.admit_request(slot, req, t0):
+                    # finished on its first token: its pages already hold
+                    # the whole prompt's KV — donate them
+                    if self._cache_on:
+                        alloc.donate(seq, toks)
+                    else:
+                        alloc.free(seq)
+                    ctx.cache = self._set_tbl_row(ctx.cache, slot, [])
                     continue
+                ctx.seq_of[slot] = seq
+                if self._cache_on:  # index the live prompt (its KV is valid now)
+                    alloc.insert(seq, toks)
+                    ctx.inserted.add(slot)
                 tok = tok.at[slot].set(t0)
-                pos = pos.at[slot].set(n_prompt)
+                pos = pos.at[slot].set(n)
                 return True
             return False
 
-        for s in range(b):
-            assign(s)
-
-        self.peak_active = sched.note_peak()
-        while sched.has_active():
-            # materialize pages for this chunk's writes; mirror grown tables
-            for s, sl in enumerate(sched.slots):
-                if not sl.live:
-                    continue
-                before = len(alloc.table(sl.rid))
-                # clamp to max_len: table width is ⌈max_len/page⌉ and writes
-                # past it clamp to the garbage page in _paged_attn_step
-                cows = alloc.extend(
-                    sl.rid, min(sl.kv + chunk_n, self.sc.max_len)
-                )
-                cache = copy_pages(cache, cows)
-                if cows or len(alloc.table(sl.rid)) != before:
-                    cache = self._set_tbl_row(cache, s, alloc.table(sl.rid))
-            self._key, k = jax.random.split(self._key)
-            cache, tok, pos, toks = self._chunk(
-                self.params, cache, tok, pos, k, chunk_n
-            )
-            toks_np = self._to_host(toks)  # one sync per chunk
-            finished = sched.absorb_chunk(toks_np)
-            for s in finished:
-                alloc.free(sched.retire(s))
-                # the freed pages may be reassigned immediately — point the
-                # dead slot's table at the garbage page before that happens
-                cache = self._set_tbl_row(cache, s, [])
-            for s, sl in enumerate(sched.slots):  # refill what the pool admits
-                if not sl.live and sched.head() is not None:
+        def refill():
+            for s in range(b):
+                if not sched.slots[s].live and sched.head() is not None:
                     if not assign(s):
                         break
+            if not self.sc.preemption:
+                return
+            # a higher-priority arrival may evict a lower-priority victim
+            while (req := sched.head()) is not None and sched.free_slot() is None:
+                v = sched.victim_slot(below=req.priority)
+                if v is None:
+                    return
+                self._pool_preempt(sched, alloc, ctx, v)
+                if not assign(v):
+                    return
+
+        try:
+            refill()
             self.peak_active = sched.note_peak()
+            while sched.has_active():
+                # materialize pages for this chunk's writes (clamped to
+                # max_len: the table is ⌈max_len/page⌉ wide and writes past
+                # it clamp to the garbage page in _paged_attn_step)
+                for s in range(b):
+                    sl = sched.slots[s]
+                    if sl.live:
+                        self._pool_grow(
+                            sched, alloc, ctx, s,
+                            min(sl.kv + chunk_n, self.sc.max_len),
+                        )
+                self._key, k = jax.random.split(self._key)
+                ctx.cache, tok, pos, toks = self._chunk(
+                    self.params, ctx.cache, tok, pos, k, chunk_n
+                )
+                toks_np = self._to_host(toks)  # one sync per chunk
+                for s in sched.absorb_chunk(toks_np):
+                    self._pool_retire(sched, alloc, ctx, s)
+                refill()
+                self.peak_active = sched.note_peak()
+        except Exception:
+            self._reset_paged_state()
+            raise
+        self._paged_cache = ctx.cache
         self.ttft = dict(sched.first_token_at)
+        self._stats["preemptions"] += sched.preemptions
         return sched.results_list()
 
-    # ---- mixed varlen continuous batching (DESIGN.md §3.5) ----
-    def _serve_mixed(self, requests: List[np.ndarray], max_new_tokens: int) -> List[np.ndarray]:
+    # ---- mixed varlen continuous batching (DESIGN.md §3.5 + §3.6) ----
+    def _serve_mixed(self, requests: List[np.ndarray], max_new_tokens: int,
+                     priorities=None) -> List[np.ndarray]:
         """Chunked-prefill continuous batching: ONE jitted packed varlen
         step per iteration, carrying every decoding slot's pending token
         and the next prefill chunks of admitted prompts.
@@ -592,21 +835,20 @@ class Engine:
         dispatch + one sync per chunk, not per token), so steady-state
         decode throughput is the sequential engine's — the packed step
         only pays its per-step sync while it is actually buying prefill
-        interleaving. Admission is by free pages like `_serve_paged` (no
-        prefix sharing here: chunks already amortize prefill, and the
-        packer stays simple)."""
+        interleaving. Admission is by free pages like `_serve_paged`, and
+        the radix prefix cache applies here too: chunked prefill starts at
+        the first UNCACHED token (`fed0`), so a warm shared prefix skips
+        its chunks entirely."""
         from repro.kernels.tuning import bucket_pow2, choose_varlen_blocks
-        from repro.runtime.kvcache import PagedKVAllocator, PageError, pages_for
+        from repro.runtime.kvcache import PageError, pages_for
 
         lay = self._page_layout
         page = lay.page_size
         b = self.sc.max_batch
-        sched = Scheduler(requests, max_new_tokens, b, self.sc.eos_id)
-        alloc = PagedKVAllocator(lay.n_pages, page)
-        cache = self.api.init_cache(
-            b, self.sc.max_len, self.mc,
-            layout="paged", page_size=page, n_pages=lay.n_pages,
-        )
+        sched = Scheduler(requests, max_new_tokens, b, self.sc.eos_id,
+                          priorities=priorities)
+        alloc, cache0 = self._paged_state()
+        ctx = _PoolCtx(cache0)
         budget = self.sc.token_budget or (b + self.sc.prefill_chunk)
         pchunk = max(1, min(self.sc.prefill_chunk, budget))
         chunk_n = max(1, min(self.sc.decode_chunk, max_new_tokens))
@@ -622,33 +864,59 @@ class Engine:
         ).block_q
 
         def try_admit():
-            nonlocal cache
-            while (slot := sched.free_slot()) is not None and sched.head():
-                rid, prompt = sched.head()
-                n_prompt = len(prompt)
-                self._check_len(rid, n_prompt, max_new_tokens)
-                # chunk_n slack: decode-only phases run `decode_chunk`
-                # lockstep steps whose post-EOS tail writes speculatively,
-                # exactly like _serve_paged (clamped to max_len — the
-                # in-table garbage-page clamp absorbs the rest)
-                reserve = min(n_prompt + max_new_tokens + chunk_n,
-                              self.sc.max_len)
-                if not alloc.can_admit(reserve):
+            while (req := sched.head()) is not None:
+                slot = sched.free_slot()
+                if slot is None:
+                    if self.sc.preemption and (
+                        v := sched.victim_slot(below=req.priority)
+                    ) is not None:
+                        self._pool_preempt(sched, alloc, ctx, v)
+                        slot = v
+                    else:
+                        return
+                toks = req.tokens
+                n = len(toks)
+                self._check_len(req.rid, len(req.prompt), max_new_tokens)
+                reserve = self._pool_reserve(req, max_new_tokens, chunk_n)
+                cached = self._pool_match(alloc, toks)
+                if not alloc.can_admit(reserve, cached=cached):
+                    if self.sc.preemption and self._preempting_could_admit(
+                        sched, alloc, ctx, req, reserve, cached
+                    ) and (
+                        v := sched.victim_slot(below=req.priority)
+                    ) is not None:
+                        self._pool_preempt(sched, alloc, ctx, v)
+                        continue  # re-match: donation may extend the prefix
                     if sched.has_active():
                         return  # live sequences will free pages
                     raise PageError(
-                        f"request {rid} needs {pages_for(reserve, page)} pages"
-                        f" but the pool holds {lay.n_pages - 1}"
+                        f"request {req.rid} needs {pages_for(reserve, page)}"
+                        f" pages but the pool holds {lay.n_pages - 1}"
                     )
                 sched.take_head()
-                alloc.admit(rid, prompt_len=n_prompt, reserve_tokens=reserve)
-                cache = self._set_tbl_row(cache, slot, alloc.table(rid))
-                sched.admit_prefilling(slot, rid, prompt)
+                seq = self._seq_base
+                self._seq_base += 1
+                alloc.admit(seq, prompt_len=n, reserve_tokens=reserve,
+                            cached=cached)
+                self._note_admission(toks, cached)
+                fed0 = cached.n_tokens if cached is not None else 0
+                ctx.cache = self._set_tbl_row(ctx.cache, slot, alloc.table(seq))
+                sched.admit_request_prefilling(slot, req, fed0=fed0)
+                ctx.seq_of[slot] = seq
+
+        def note_prefilled():
+            """Index prompts whose prefill just completed (their pages
+            hold valid KV from here on) so concurrent admissions match."""
+            if not self._cache_on:
+                return
+            for s, sl in enumerate(sched.slots):
+                if sl.live and not sl.prefilling and s not in ctx.inserted:
+                    alloc.insert(ctx.seq_of[s], sl.prompt)
+                    ctx.inserted.add(s)
 
         def dispatch(plan: StepPlan) -> np.ndarray:
             """Pack the plan into flat block_q-aligned arrays (bucketed to
             a power of two) and run the jitted mixed step."""
-            nonlocal cache
             off = 0
             spans = []
             for seg in plan.segments:
@@ -669,8 +937,8 @@ class Engine:
                 if seg.emits:
                     last_rows[seg.slot] = o + n - 1
             self._key, k = jax.random.split(self._key)
-            cache, toks = self._mixed(
-                self.params, cache,
+            ctx.cache, toks = self._mixed(
+                self.params, ctx.cache,
                 jnp.asarray(tokens), jnp.asarray(seq_ids),
                 jnp.asarray(positions), jnp.asarray(kv_len),
                 jnp.asarray(last_rows), k, block_q,
@@ -684,43 +952,53 @@ class Engine:
             scheduler's host state, so packed steps and chunk phases
             interleave freely; dead slots carry zeroed table rows, so
             their lockstep writes land on the garbage page."""
-            nonlocal cache
-            for s, sl in enumerate(sched.slots):
-                if not sl.live:
-                    continue
-                before = len(alloc.table(sl.rid))
-                alloc.extend(sl.rid, min(sl.kv + chunk_n, self.sc.max_len))
-                if len(alloc.table(sl.rid)) != before:
-                    cache = self._set_tbl_row(cache, s, alloc.table(sl.rid))
+            for s in range(b):
+                sl = sched.slots[s]
+                if sl.live:
+                    self._pool_grow(sched, alloc, ctx, s,
+                                    min(sl.kv + chunk_n, self.sc.max_len))
             tok = jnp.asarray([sl.pending for sl in sched.slots], jnp.int32)
             pos = jnp.asarray([sl.kv for sl in sched.slots], jnp.int32)
             self._key, k = jax.random.split(self._key)
-            cache, _, _, toks = self._chunk(
-                self.params, cache, tok, pos, k, chunk_n
+            ctx.cache, _, _, toks = self._chunk(
+                self.params, ctx.cache, tok, pos, k, chunk_n
             )
             return self._to_host(toks)  # one sync per chunk
 
-        try_admit()
-        self.peak_active = sched.note_peak()
-        while sched.has_active():
-            if not any(sl.prefilling for sl in sched.slots):
-                finished = sched.absorb_chunk(decode_chunk_phase())
-            else:
+        def plan_grown() -> StepPlan:
+            """Plan a packed step and materialize its pages; any victim
+            preemption invalidates the plan (a dead slot's segment must
+            not dispatch), so re-plan until a whole pass stays stable."""
+            while True:
                 plan = sched.plan_step(budget, pchunk)
-                # materialize pages for the step's writes; mirror tables
+                p0 = sched.preemptions
                 for seg in plan.segments:
-                    rid = sched.slots[seg.slot].rid
-                    before = len(alloc.table(rid))
                     end = min(seg.start + len(seg.tokens), self.sc.max_len)
-                    if end > alloc.seq_len(rid):
-                        alloc.extend(rid, end)  # no sharing → never CoWs
-                    if len(alloc.table(rid)) != before:
-                        cache = self._set_tbl_row(cache, seg.slot, alloc.table(rid))
-                finished = sched.commit(plan, dispatch(plan))
-            for s in finished:
-                alloc.free(sched.retire(s))
-                cache = self._set_tbl_row(cache, s, [])
+                    if end > alloc.seq_len(ctx.seq_of[seg.slot]):
+                        self._pool_grow(sched, alloc, ctx, seg.slot, end)
+                    if sched.preemptions != p0:
+                        break
+                if sched.preemptions == p0:
+                    return plan
+
+        try:
             try_admit()
             self.peak_active = sched.note_peak()
+            while sched.has_active():
+                if not any(sl.prefilling for sl in sched.slots):
+                    finished = sched.absorb_chunk(decode_chunk_phase())
+                else:
+                    plan = plan_grown()
+                    finished = sched.commit(plan, dispatch(plan))
+                note_prefilled()
+                for s in finished:
+                    self._pool_retire(sched, alloc, ctx, s)
+                try_admit()
+                self.peak_active = sched.note_peak()
+        except Exception:
+            self._reset_paged_state()
+            raise
+        self._paged_cache = ctx.cache
         self.ttft = dict(sched.first_token_at)
+        self._stats["preemptions"] += sched.preemptions
         return sched.results_list()

@@ -1,12 +1,32 @@
-"""Continuous-batching scheduler: slot lifecycle + token-budget step plans.
+"""Continuous-batching scheduler: slot lifecycle, priority classes,
+preemption, and token-budget step plans.
 
-The host-side state machine shared by EVERY serve path (DESIGN.md §3.5).
-The engine's three loops — contiguous chunked decode, paged chunked decode,
-and the mixed varlen step — used to each carry their own copy of the same
-bookkeeping (request queue, per-slot output accumulation, EOS / max-token
-completion, FIFO refill, peak-concurrency tracking). That now lives here
-exactly once; the engine keeps only what actually differs per path: how
-memory is admitted (slot width vs free pages) and what gets dispatched.
+The host-side state machine shared by EVERY serve path (DESIGN.md §3.5,
+§3.6). The engine's three loops — contiguous chunked decode, paged chunked
+decode, and the mixed varlen step — used to each carry their own copy of
+the same bookkeeping (request queue, per-slot output accumulation, EOS /
+max-token completion, refill, peak-concurrency tracking). That now lives
+here exactly once; the engine keeps only what actually differs per path:
+how memory is admitted (slot width vs free pages) and what gets
+dispatched.
+
+Priority + preemption (DESIGN.md §3.6):
+
+  * every request carries a priority class (higher value = more urgent;
+    default 0 for all = pure FIFO). `head()` returns the highest-priority
+    queued request, FIFO (arrival order) within a class — admission is
+    still strictly head-of-line *per the priority order*: later requests
+    never jump an equal-or-higher-priority blocked head.
+  * `victim_slot()` implements victim selection: the lowest-priority live
+    slot, decoding slots before prefilling ones (a decoding slot holds
+    more reclaimable KV), youngest admission first — so the oldest
+    highest-priority work is never the one rolled back.
+  * `preempt(slot)` rolls a live slot back into the queue with
+    *recompute-on-resume*: its already-generated tokens are appended to
+    its prompt, so the resumed prefill replays exactly the token stream
+    greedy decoding would have produced and the final outputs are
+    token-identical to an unpreempted run (the engine frees / donates the
+    slot's memory). `Request.tokens` is that effective prefill input.
 
 Two consumption styles:
 
@@ -21,16 +41,17 @@ Two consumption styles:
     each step packs every DECODING slot's one pending token (decode slots
     are planned first and the budget floor is the decoding-slot count, so
     decode can never starve behind a long prompt) plus up to
-    `token_budget` remaining tokens of PREFILLING slots' prompts in FIFO
-    order, split into `prefill_chunk`-sized pieces. A segment whose chunk
-    consumes the last prompt token emits that sequence's first sampled
-    token; decode segments emit always; mid-prompt segments emit nothing.
-    `commit` applies the sampled tokens and returns finished slots.
+    `token_budget` remaining tokens of PREFILLING slots' prompts in
+    priority-then-FIFO order, split into `prefill_chunk`-sized pieces. A
+    segment whose chunk consumes the last prompt token emits that
+    sequence's first sampled token; decode segments emit always;
+    mid-prompt segments emit nothing. `commit` applies the sampled tokens
+    and returns finished slots.
 
-FIFO is preserved throughout: admission is strictly head-of-line (the
-caller asks for `head()` and either admits it or waits — later requests
-never jump a blocked head), and prefill budget is granted in request-id
-order.
+Time-to-first-token is tracked per REQUEST ID from enqueue (scheduler
+construction — every request is enqueued then) to the first token the
+request ever emits; re-admission after preemption never re-arms it, and a
+priority-swapped head keeps the waiting time it actually accrued.
 """
 
 from __future__ import annotations
@@ -41,7 +62,30 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["Scheduler", "Segment", "StepPlan", "Slot"]
+__all__ = ["Request", "Scheduler", "Segment", "StepPlan", "Slot"]
+
+
+@dataclasses.dataclass
+class Request:
+    """One queued unit of work, including preemption resume state."""
+
+    rid: int
+    prompt: np.ndarray  # the ORIGINAL prompt
+    out: List[int] = dataclasses.field(default_factory=list)  # pre-preemption output
+    priority: int = 0
+
+    @property
+    def tokens(self) -> np.ndarray:
+        """Effective prefill input: original prompt + tokens generated
+        before preemption (recompute-on-resume keeps tokens identical)."""
+        if not self.out:
+            return np.asarray(self.prompt)
+        return np.concatenate(
+            [np.asarray(self.prompt), np.asarray(self.out, np.int32)]
+        )
+
+    def __iter__(self):  # legacy (rid, prompt) unpacking
+        return iter((self.rid, self.tokens))
 
 
 @dataclasses.dataclass
@@ -49,8 +93,12 @@ class Slot:
     """One batch slot's host-side state."""
 
     rid: int = -1  # request id (−1 = free)
-    prompt: Optional[np.ndarray] = None
+    prompt: Optional[np.ndarray] = None  # EFFECTIVE prefill tokens (incl. resume)
+    orig_prompt: Optional[np.ndarray] = None  # the request's original prompt
     out: List[int] = dataclasses.field(default_factory=list)
+    resumed: int = 0  # len(out) carried in from a preemption
+    priority: int = 0
+    admit_seq: int = -1  # admission order (victim selection: youngest first)
     fed: int = 0  # prompt tokens consumed by prefill chunks (mixed path)
     kv: int = 0  # KV positions materialized in the cache
     pending: int = 0  # next decode input token (mixed path)
@@ -62,6 +110,17 @@ class Slot:
     @property
     def prefilling(self) -> bool:
         return self.live and self.prompt is not None and self.fed < len(self.prompt)
+
+    def cache_tokens(self) -> np.ndarray:
+        """Token ids whose KV the slot's cache positions [0, kv) hold: the
+        effective prompt followed by post-resume generated tokens. This is
+        what retirement donates to the radix prefix cache."""
+        new = self.out[self.resumed:]
+        stream = np.concatenate(
+            [np.asarray(self.prompt, np.int32),
+             np.asarray(new, np.int32)]
+        ) if new else np.asarray(self.prompt, np.int32)
+        return stream[: self.kv]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,15 +141,27 @@ class StepPlan:
 
 class Scheduler:
     def __init__(self, requests: Sequence[np.ndarray], max_new_tokens: int,
-                 n_slots: int, eos_id: int):
+                 n_slots: int, eos_id: int,
+                 priorities: Optional[Sequence[int]] = None):
+        if priorities is not None and len(priorities) != len(requests):
+            raise ValueError("priorities must match requests 1:1")
         self.results: List[Optional[np.ndarray]] = [None] * len(requests)
-        self.queue: List[Tuple[int, np.ndarray]] = list(enumerate(requests))
+        self.queue: List[Request] = [
+            Request(rid=i, prompt=np.asarray(r),
+                    priority=int(priorities[i]) if priorities is not None else 0)
+            for i, r in enumerate(requests)
+        ]
         self.slots = [Slot() for _ in range(n_slots)]
         self.max_new_tokens = max_new_tokens
         self.eos_id = eos_id
         self.peak_active = 0
-        # time-to-first-token per request, seconds since construction —
-        # the serving-latency signal BENCH_serve.json tracks
+        self.preemptions = 0
+        self._admit_counter = 0
+        # time-to-first-token per request id, seconds from enqueue (every
+        # request enqueues at construction) to the first token the request
+        # EVER emits — recorded once, never re-armed by a preemption
+        # resume; the serving-latency signal BENCH_serve.json /
+        # BENCH_prefix.json track
         self.first_token_at: Dict[int, float] = {}
         self._t0 = time.monotonic()
 
@@ -98,12 +169,20 @@ class Scheduler:
         if rid not in self.first_token_at:
             self.first_token_at[rid] = time.monotonic() - self._t0
 
-    # ---- queue / admission (FIFO: head-of-line only) ----
-    def head(self) -> Optional[Tuple[int, np.ndarray]]:
-        return self.queue[0] if self.queue else None
+    # ---- queue / admission (priority head-of-line) ----
+    def _head_index(self) -> Optional[int]:
+        if not self.queue:
+            return None
+        return min(range(len(self.queue)),
+                   key=lambda i: (-self.queue[i].priority, self.queue[i].rid))
 
-    def take_head(self) -> Optional[Tuple[int, np.ndarray]]:
-        return self.queue.pop(0) if self.queue else None
+    def head(self) -> Optional[Request]:
+        i = self._head_index()
+        return self.queue[i] if i is not None else None
+
+    def take_head(self) -> Optional[Request]:
+        i = self._head_index()
+        return self.queue.pop(i) if i is not None else None
 
     def free_slot(self) -> Optional[int]:
         for s, slot in enumerate(self.slots):
@@ -121,6 +200,39 @@ class Scheduler:
         self.peak_active = max(self.peak_active, self.active_count())
         return self.peak_active
 
+    # ---- preemption ----
+    def victim_slot(self, *, below: Optional[int] = None,
+                    exclude: Tuple[int, ...] = ()) -> Optional[int]:
+        """The slot to roll back under pressure: lowest priority first
+        (optionally strictly below `below` — admission preemption never
+        preempts an equal-priority peer), decoding before prefilling
+        (decoding slots hold more reclaimable KV), youngest admission
+        first. None when no live slot qualifies."""
+        best, best_key = None, None
+        for s, sl in enumerate(self.slots):
+            if not sl.live or s in exclude:
+                continue
+            if below is not None and sl.priority >= below:
+                continue
+            key = (sl.priority, 1 if sl.prefilling else 0, -sl.admit_seq)
+            if best_key is None or key < best_key:
+                best, best_key = s, key
+        return best
+
+    def preempt(self, slot: int) -> Request:
+        """Roll `slot` back into the queue with recompute-on-resume: the
+        requeued request's prefill input is its original prompt plus every
+        token it already generated, so the resumed stream is token-
+        identical. The caller releases the slot's memory."""
+        sl = self.slots[slot]
+        assert sl.live, "preempting a dead slot"
+        req = Request(rid=sl.rid, prompt=np.asarray(sl.orig_prompt),
+                      out=list(sl.out), priority=sl.priority)
+        self.queue.append(req)  # head() orders by (priority, rid)
+        self.slots[slot] = Slot()
+        self.preemptions += 1
+        return req
+
     # ---- completion ----
     def _done(self, out: List[int]) -> bool:
         return len(out) >= self.max_new_tokens or (
@@ -130,28 +242,57 @@ class Scheduler:
     def finish(self, rid: int, out: List[int]) -> None:
         self.results[rid] = np.asarray(out, np.int32)
 
-    def admit_or_finish(self, slot: int, rid: int, prompt: np.ndarray,
-                        first_token: int) -> bool:
-        """Sequential-path admission: the prompt is already prefilled and
-        its first token sampled. Requests that complete immediately
-        (max_new_tokens ≤ 1 or instant EOS) are finalized without taking
+    def admit_request(self, slot: int, req: Request, first_token: int) -> bool:
+        """Sequential-path admission of a (possibly resumed) request: the
+        effective prompt is already prefilled and its next token sampled.
+        Requests that complete immediately are finalized without taking
         the slot; returns True when the slot was taken."""
-        self._mark_first_token(rid)
-        if self._done([first_token]):
-            self.finish(rid, [first_token])
+        if not req.out:
+            self._mark_first_token(req.rid)
+        out = list(req.out) + [first_token]
+        if self._done(out):
+            self.finish(req.rid, out)
             return False
         sl = self.slots[slot]
-        sl.rid, sl.prompt, sl.out = rid, np.asarray(prompt), [first_token]
-        sl.fed = sl.kv = len(prompt)
+        sl.rid, sl.out = req.rid, out
+        sl.prompt = req.tokens
+        sl.orig_prompt = np.asarray(req.prompt)
+        sl.resumed = len(req.out)
+        sl.priority = req.priority
+        sl.admit_seq = self._admit_counter
+        self._admit_counter += 1
+        sl.fed = sl.kv = len(sl.prompt)
         sl.pending = first_token
         return True
 
-    def admit_prefilling(self, slot: int, rid: int, prompt: np.ndarray) -> None:
-        """Mixed-path admission: the prompt will be fed in chunks."""
+    def admit_or_finish(self, slot: int, rid: int, prompt: np.ndarray,
+                        first_token: int) -> bool:
+        """Legacy sequential-path admission (fresh request, priority 0)."""
+        return self.admit_request(
+            slot, Request(rid=rid, prompt=np.asarray(prompt)), first_token
+        )
+
+    def admit_request_prefilling(self, slot: int, req: Request,
+                                 *, fed0: int = 0) -> None:
+        """Mixed-path admission: the effective prompt will be fed in
+        chunks, starting at `fed0` (positions below it are already in the
+        cache — the radix prefix hit, DESIGN.md §3.6)."""
         sl = self.slots[slot]
-        sl.rid, sl.prompt, sl.out = rid, np.asarray(prompt), []
-        sl.fed = sl.kv = 0
+        sl.rid, sl.out = req.rid, list(req.out)
+        sl.prompt = req.tokens
+        sl.orig_prompt = np.asarray(req.prompt)
+        sl.resumed = len(req.out)
+        sl.priority = req.priority
+        sl.admit_seq = self._admit_counter
+        self._admit_counter += 1
+        sl.fed = sl.kv = fed0
         sl.pending = 0
+
+    def admit_prefilling(self, slot: int, rid: int, prompt: np.ndarray) -> None:
+        """Legacy mixed-path admission (fresh request, priority 0)."""
+        self.admit_request_prefilling(
+            slot, Request(rid=rid, prompt=np.asarray(prompt))
+        )
 
     def retire(self, slot: int) -> int:
         """Free a slot (results must already be recorded); returns its rid."""
@@ -187,7 +328,8 @@ class Scheduler:
         Decode slots first — every decoding slot contributes its pending
         token, and the effective budget is floored at that count, so a
         wall of prefill can never starve decode. Remaining budget goes to
-        prefilling slots' next prompt chunks in request-id (FIFO) order.
+        prefilling slots' next prompt chunks in priority-then-request-id
+        (FIFO within a class) order.
         """
         segs: List[Segment] = []
         decoding = [
@@ -204,7 +346,7 @@ class Scheduler:
             budget -= 1
         prefilling = sorted(
             (s for s, sl in enumerate(self.slots) if sl.prefilling),
-            key=lambda s: self.slots[s].rid,
+            key=lambda s: (-self.slots[s].priority, self.slots[s].rid),
         )
         for s in prefilling:
             if budget <= 0:
@@ -231,6 +373,8 @@ class Scheduler:
         finished: List[int] = []
         for seg in plan.segments:
             sl = self.slots[seg.slot]
+            if not sl.live:  # preempted after planning (engine re-plans, but stay safe)
+                continue
             n = len(seg.tokens)
             sl.kv += n
             if sl.prefilling:
@@ -240,7 +384,7 @@ class Scheduler:
             t = int(sampled[seg.slot])
             sl.out.append(t)
             sl.pending = t
-            if len(sl.out) == 1:
+            if len(sl.out) == sl.resumed + 1 and sl.resumed == 0:
                 self._mark_first_token(sl.rid)
             if self._done(sl.out):
                 self.finish(sl.rid, sl.out)

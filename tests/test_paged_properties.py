@@ -245,9 +245,11 @@ def test_paged_shared_prefix_cow_after_divergence(engine_fixture):
 
 
 def test_paged_admission_waits_for_free_pages(engine_fixture):
-    """A pool too small for all requests at once still completes every
-    one (head-of-line requests wait for frees), and outputs match the
-    ample-pool engine."""
+    """Without preemption, admission reserves the worst case: a pool too
+    small for all requests at once still completes every one (head-of-line
+    requests wait for frees) and outputs match the ample-pool engine. With
+    preemption (the default), the same pool is oversubscribed instead —
+    every request admits optimistically and outputs stay identical."""
     from repro.serve import Engine, ServeConfig
 
     cfg, params = engine_fixture
@@ -259,12 +261,21 @@ def test_paged_admission_waits_for_free_pages(engine_fixture):
     want = ample.serve(reqs, 4)
     tight = Engine(params, cfg, ServeConfig(
         max_batch=4, max_len=32, kv_layout="paged", page_size=8,
-        kv_pool_tokens=48, prefix_sharing=False))
+        kv_pool_tokens=48, prefix_sharing=False, preemption=False))
     got = tight.serve(reqs, 4)
     assert all(o.shape == (4,) for o in got)
     # the tight pool cannot host all four worst-case reservations at once
     assert tight.peak_active < 4
     for a, c in zip(want, got):
+        np.testing.assert_array_equal(a, c)
+    # preemptive mode: optimistic per-chunk allocation admits all four at
+    # once and resolves the growth pressure by preemption, token-identical
+    over = Engine(params, cfg, ServeConfig(
+        max_batch=4, max_len=32, kv_layout="paged", page_size=8,
+        kv_pool_tokens=48, prefix_sharing=False))
+    got2 = over.serve(reqs, 4)
+    assert over.peak_active == 4
+    for a, c in zip(want, got2):
         np.testing.assert_array_equal(a, c)
 
 

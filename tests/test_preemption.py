@@ -1,0 +1,355 @@
+"""Preemptive priority scheduling + prefix caching at the serve level
+(DESIGN.md §3.6).
+
+The acceptance contract of the cache-aware, preemptible serving core: all
+three serve loops (contiguous, paged sequential, mixed varlen) stay
+TOKEN-IDENTICAL with the radix prefix cache and preemption enabled or
+disabled — including under forced preemption (pool < worst-case demand),
+priority-reordered admission, and multi-turn warm-cache serving — for the
+jnp and Pallas attention impls. Plus the host-side protocol pieces:
+victim selection order, recompute-on-resume state, per-request-id TTFT.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import paper_llama
+from repro.models import get_model
+from repro.serve import Engine, Request, Scheduler, ServeConfig
+
+
+def _cfg(**kw):
+    return dataclasses.replace(
+        paper_llama.CONFIG, n_layers=2, d_model=48, n_heads=4, n_kv_heads=2,
+        d_ff=96, head_dim=12, vocab_size=64, vocab_pad_multiple=64, **kw,
+    )
+
+
+@pytest.fixture(scope="module")
+def engine_fixture():
+    cfg = _cfg()
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _shared_prefix_reqs(rng, vocab, prefix_len, tails):
+    prefix = rng.integers(0, vocab, (prefix_len,)).astype(np.int32)
+    return [
+        np.concatenate([prefix, rng.integers(0, vocab, (n,)).astype(np.int32)])
+        for n in tails
+    ]
+
+
+# ---------------------------------------------------------------------------
+# host-side protocol
+# ---------------------------------------------------------------------------
+
+def test_victim_selection_order():
+    """Lowest priority first, decoding before prefilling, youngest
+    admission first; `below=` restricts to strictly lower priority."""
+    reqs = [np.asarray([1, 2, 3])] * 4
+    sched = Scheduler(reqs, 5, 4, eos_id=-1, priorities=[2, 0, 0, 1])
+    for s in range(3):
+        req = sched.take_head()
+        sched.admit_request(s, req, first_token=7)
+    # heads came out priority-first: rids 0 (pri 2), 3 (pri 1), 1 (pri 0)
+    assert [sched.slots[s].rid for s in range(3)] == [0, 3, 1]
+    sched.admit_request_prefilling(3, sched.take_head())  # rid 2, pri 0
+    # lowest priority and DECODING wins over the equal-priority prefilling
+    assert sched.victim_slot() == 2
+    assert sched.victim_slot(below=1) == 2
+    assert sched.victim_slot(below=0) is None
+    assert sched.victim_slot(exclude=(2, 3)) == 1
+    # after the pri-0 slots are gone, pri-1 is next; pri-2 last
+    sched.preempt(2)
+    sched.preempt(3)
+    assert sched.victim_slot() == 1
+    assert sched.victim_slot(below=2) == 1
+    sched.preempt(1)
+    assert sched.victim_slot() == 0
+    assert sched.victim_slot(below=2) is None
+
+
+def test_preempt_recompute_on_resume_state():
+    """A preempted slot re-queues with its generated tokens folded into
+    the prefill input, and a resumed admission continues the stream."""
+    sched = Scheduler([np.asarray([5, 6])], 4, 1, eos_id=-1)
+    req = sched.take_head()
+    sched.admit_request(0, req, first_token=9)
+    sched.absorb_chunk(np.asarray([[3]], np.int32))  # out = [9, 3]
+    back = sched.preempt(0)
+    assert back.rid == 0 and back.out == [9, 3]
+    np.testing.assert_array_equal(back.tokens, [5, 6, 9, 3])
+    assert sched.preemptions == 1 and not sched.slots[0].live
+    # resume: the effective prompt was prefilled, the next token sampled
+    req2 = sched.take_head()
+    assert req2.rid == 0
+    sched.admit_request(0, req2, first_token=4)
+    sl = sched.slots[0]
+    assert sl.out == [9, 3, 4] and sl.resumed == 2
+    np.testing.assert_array_equal(sl.prompt, [5, 6, 9, 3])
+    # completion counts the WHOLE output
+    finished = sched.absorb_chunk(np.asarray([[1]], np.int32))
+    assert finished == [0]
+    assert sched.results[0].tolist() == [9, 3, 4, 1]
+    # cache_tokens excludes the not-yet-fed final sample
+    assert sl.cache_tokens().tolist() == [5, 6, 9, 3, 4][: sl.kv]
+
+
+def test_ttft_tracked_per_request_id_not_per_slot():
+    """TTFT is armed once per request id: recorded at the FIRST token the
+    request ever emits, never re-armed by preemption/resume, and recorded
+    even for head-swapped (priority-reordered) admissions."""
+    sched = Scheduler([np.asarray([1])] * 3, 4, 1, eos_id=-1,
+                      priorities=[0, 0, 5])
+    req = sched.take_head()
+    assert req.rid == 2  # priority swapped the head
+    sched.admit_request(0, req, first_token=7)
+    assert 2 in sched.first_token_at
+    t_first = sched.first_token_at[2]
+    sched.absorb_chunk(np.asarray([[1]], np.int32))
+    sched.preempt(0)
+    resumed = sched.take_head()
+    assert resumed.rid == 2
+    sched.admit_request(0, resumed, first_token=9)
+    assert sched.first_token_at[2] == t_first, "resume must not re-arm TTFT"
+    # a request that finishes instantly still records its TTFT
+    sched2 = Scheduler([np.asarray([1])], 1, 1, eos_id=-1)
+    assert not sched2.admit_request(0, sched2.take_head(), first_token=3)
+    assert 0 in sched2.first_token_at
+
+
+def test_plan_step_orders_prefill_by_priority():
+    sched = Scheduler([np.asarray([1, 2, 3, 4])] * 3, 4, 3, eos_id=-1,
+                      priorities=[0, 2, 1])
+    for s in range(3):
+        sched.admit_request_prefilling(s, sched.take_head())
+    plan = sched.plan_step(token_budget=6, prefill_chunk=4)
+    # budget 6, chunks of 4: the two highest-priority prompts get chunks
+    assert [sched.slots[g.slot].rid for g in plan.segments] == [1, 2]
+
+
+# ---------------------------------------------------------------------------
+# engine: token identity with caching / preemption on and off
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("attn_impl", ["flashd", "flashd_pallas"])
+def test_serve_token_identity_cache_and_preemption(engine_fixture, attn_impl):
+    """cache on == cache off == contiguous seed engine, for the paged and
+    mixed loops, on shared-prefix traffic (jnp and Pallas impls)."""
+    cfg, params = engine_fixture
+    if attn_impl != "flashd":
+        cfg = dataclasses.replace(cfg, attn_impl=attn_impl)
+    rng = np.random.default_rng(0)
+    reqs = _shared_prefix_reqs(rng, cfg.vocab_size, 10, (3, 2, 5, 4))
+    n_new = 4
+    want = Engine(params, cfg, ServeConfig(max_batch=2, max_len=32)).serve(
+        reqs, n_new)
+    variants = [
+        ServeConfig(max_batch=2, max_len=32, kv_layout="paged", page_size=8),
+        ServeConfig(max_batch=2, max_len=32, kv_layout="paged", page_size=8,
+                    prefix_cache=False),
+        ServeConfig(max_batch=2, max_len=32, kv_layout="paged", page_size=8,
+                    preemption=False),
+        ServeConfig(max_batch=2, max_len=32, step_mode="mixed", page_size=8,
+                    prefill_chunk=4, token_budget=8),
+        ServeConfig(max_batch=2, max_len=32, step_mode="mixed", page_size=8,
+                    prefill_chunk=4, token_budget=8, prefix_cache=False,
+                    preemption=False),
+    ]
+    for sc in variants:
+        got = Engine(params, cfg, sc).serve(reqs, n_new)
+        for a, b in zip(want, got):
+            np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("step_mode", ["sequential", "mixed"])
+def test_forced_preemption_oversubscribed_pool(engine_fixture, step_mode):
+    """The acceptance criterion: a pool SMALLER than the worst-case demand
+    completes every request via preemption, token-identical to the
+    unconstrained run, and actually preempts."""
+    cfg, params = engine_fixture
+    rng = np.random.default_rng(1)
+    reqs = [rng.integers(0, cfg.vocab_size, (10,)).astype(np.int32)
+            for _ in range(4)]
+    n_new = 8
+    want = Engine(params, cfg, ServeConfig(max_batch=4, max_len=32)).serve(
+        reqs, n_new)
+    # worst case: 4 × ⌈(10+8)/4⌉ = 20 pages; give it 12
+    sc = ServeConfig(max_batch=4, max_len=32, kv_layout="paged", page_size=4,
+                     kv_pool_tokens=48, step_mode=step_mode,
+                     prefill_chunk=4, token_budget=8)
+    eng = Engine(params, cfg, sc)
+    got = eng.serve(reqs, n_new, priorities=[0, 1, 0, 1])
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(a, b)
+    st = eng.stats()
+    assert st["preemptions"] > 0, "the tight pool must have preempted"
+    assert eng.peak_active == 4, "optimistic admission oversubscribes"
+
+
+@pytest.mark.parametrize("step_mode", ["sequential", "mixed"])
+def test_multi_turn_shared_system_prompt_warm_cache(engine_fixture, step_mode):
+    """The radix cache persists across serve() calls: a second turn that
+    replays the system prompt (and the first turn's whole conversation)
+    hits the cache, skips the cached prefill, and stays token-identical
+    to a cold engine."""
+    cfg, params = engine_fixture
+    rng = np.random.default_rng(2)
+    system = rng.integers(0, cfg.vocab_size, (17,)).astype(np.int32)
+    u1 = rng.integers(0, cfg.vocab_size, (3,)).astype(np.int32)
+    u2 = rng.integers(0, cfg.vocab_size, (4,)).astype(np.int32)
+    n_new = 4
+    sc = ServeConfig(max_batch=2, max_len=48, page_size=4,
+                     kv_layout="paged", step_mode=step_mode,
+                     prefill_chunk=4, token_budget=8)
+    eng = Engine(params, cfg, sc)
+    ref = Engine(params, cfg, ServeConfig(max_batch=2, max_len=48))
+
+    turn1 = np.concatenate([system, u1])
+    w1 = ref.serve([turn1], n_new)
+    g1 = eng.serve([turn1], n_new)
+    np.testing.assert_array_equal(w1[0], g1[0])
+    cold = dict(eng.stats())
+    assert cold["hit_tokens"] == 0
+
+    # turn 2 = the whole first conversation + a new user message
+    turn2 = np.concatenate([turn1, w1[0], u2])
+    w2 = ref.serve([turn2], n_new)
+    g2 = eng.serve([turn2], n_new)
+    np.testing.assert_array_equal(w2[0], g2[0])
+    warm = eng.stats()
+    # the cached prefix covers ≥ the system prompt's full pages
+    assert warm["hit_tokens"] >= (len(system) // 4) * 4
+    assert warm["prefix_hits"] == 1
+    # a sibling request sharing only the system prompt also hits
+    turn1b = np.concatenate([system, u2])
+    w3 = ref.serve([turn1b], n_new)
+    g3 = eng.serve([turn1b], n_new)
+    np.testing.assert_array_equal(w3[0], g3[0])
+    assert eng.stats()["hit_tokens"] > warm["hit_tokens"]
+
+
+def test_priorities_reorder_admission_not_tokens(engine_fixture):
+    """Priorities change WHO WAITS, never what anyone says: outputs are
+    identical to the FIFO run, and the high-priority latecomer is served
+    first (smallest TTFT) despite arriving last."""
+    cfg, params = engine_fixture
+    rng = np.random.default_rng(3)
+    reqs = [rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32)
+            for _ in range(4)]
+    sc = ServeConfig(max_batch=1, max_len=32, kv_layout="paged", page_size=8)
+    fifo = Engine(params, cfg, sc)
+    want = fifo.serve(reqs, 4)
+    prio = Engine(params, cfg, sc)
+    got = prio.serve(reqs, 4, priorities=[0, 0, 0, 9])
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(a, b)
+    assert min(prio.ttft, key=prio.ttft.get) == 3
+    assert max(fifo.ttft, key=fifo.ttft.get) == 3
+
+
+def test_contiguous_priority_preemption_token_identity(engine_fixture):
+    """The contiguous loop honors priorities (slot-array pressure is its
+    preemption trigger) and keeps token identity with the FIFO run."""
+    cfg, params = engine_fixture
+    rng = np.random.default_rng(4)
+    reqs = [rng.integers(0, cfg.vocab_size, (5,)).astype(np.int32)
+            for _ in range(4)]
+    sc = ServeConfig(max_batch=2, max_len=32)
+    want = Engine(params, cfg, sc).serve(reqs, 4)
+    eng = Engine(params, cfg, sc)
+    got = eng.serve(reqs, 4, priorities=[3, 0, 1, 2])
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(a, b)
+    # priority order shows up in the TTFT ordering (0 first, then 3, 2, 1)
+    order = sorted(eng.ttft, key=eng.ttft.get)
+    assert order[0] == 0 and order[-1] == 1
+
+
+def test_admission_preemption_bounded_by_reachable_pages(engine_fixture):
+    """A high-priority arrival that could NEVER fit — even after rolling
+    back every strictly-lower-priority victim — must not preempt anyone:
+    running work is only discarded when it can actually buy admission."""
+    from repro.serve.engine import _PoolCtx
+    from repro.serve.scheduler import Request
+
+    cfg, params = engine_fixture
+    eng = Engine(params, cfg, ServeConfig(
+        max_batch=3, max_len=64, kv_layout="paged", page_size=4,
+        kv_pool_tokens=48))  # 12 usable pages
+    alloc, cache = eng._paged_state()
+    sched = Scheduler([np.asarray([1])] * 3, 4, 3, eos_id=-1,
+                      priorities=[9, 0, 5])
+    ctx = _PoolCtx(cache)
+    # pri-9 slot holds 8 pages, pri-0 slot holds 2 → 2 free
+    alloc.admit(0, 32, 32)
+    sched.admit_request(0, sched.take_head(), first_token=7)
+    ctx.seq_of[0] = 0
+    alloc.admit(1, 8, 8)
+    # heads order by priority: next head is rid 2 (pri 5); admit rid 1 last
+    req_mid = sched.take_head()
+    assert req_mid.rid == 2 and req_mid.priority == 5
+    sched.admit_request(1, sched.take_head(), first_token=7)
+    ctx.seq_of[1] = 1
+    # pri-5 arrival needing 6 pages: free 2 + victim(pri<5) pages 2 = 4 <
+    # 6 → preempting the pri-0 slot would be fruitless
+    assert not eng._preempting_could_admit(
+        sched, alloc, ctx, req_mid, reserve=24, cached=None)
+    # needing 4 pages it IS reachable (2 free + the pri-0 victim's 2)
+    assert eng._preempting_could_admit(
+        sched, alloc, ctx, req_mid, reserve=16, cached=None)
+    # a lower-priority arrival has no victims at all: bound = free pages
+    req_low = Request(rid=9, prompt=np.asarray([1]), priority=0)
+    assert not eng._preempting_could_admit(
+        sched, alloc, ctx, req_low, reserve=16, cached=None)
+
+
+def test_stats_counters_shape(engine_fixture):
+    cfg, params = engine_fixture
+    rng = np.random.default_rng(5)
+    eng = Engine(params, cfg, ServeConfig(
+        max_batch=2, max_len=32, kv_layout="paged", page_size=8))
+    eng.serve([rng.integers(0, cfg.vocab_size, (9,)).astype(np.int32)], 3)
+    st = eng.stats()
+    for key in ("prefix_lookups", "prefix_hits", "hit_tokens",
+                "prompt_tokens", "hit_rate", "preemptions", "evictions",
+                "cached_pages", "donated_pages", "pages_in_use",
+                "free_pages", "peak_active", "ttft"):
+        assert key in st, key
+    assert st["prefix_lookups"] == 1 and st["prompt_tokens"] == 9
+    assert 0.0 <= st["hit_rate"] <= 1.0
+    assert st["prefix_cache_enabled"] and st["preemption_enabled"]
+    # cache-off engines report the cache as disabled and never donate
+    off = Engine(params, cfg, ServeConfig(
+        max_batch=2, max_len=32, kv_layout="paged", page_size=8,
+        prefix_cache=False))
+    off.serve([rng.integers(0, cfg.vocab_size, (9,)).astype(np.int32)], 3)
+    st = off.stats()
+    assert not st["prefix_cache_enabled"]
+    assert st["cached_pages"] == 0 and st["donated_pages"] == 0
+
+
+def test_failed_serve_resets_pool_state(engine_fixture):
+    """A serve() that dies (pool too small for one request) must not leak
+    live sequences into the engine's persistent pool: the next serve
+    starts from a clean allocator."""
+    from repro.runtime.kvcache import PageError
+
+    cfg, params = engine_fixture
+    rng = np.random.default_rng(6)
+    eng = Engine(params, cfg, ServeConfig(
+        max_batch=2, max_len=64, kv_layout="paged", page_size=8,
+        kv_pool_tokens=16))
+    with pytest.raises(PageError):
+        eng.serve([rng.integers(0, cfg.vocab_size, (30,)).astype(np.int32)], 8)
+    assert eng._alloc is None  # persistent state dropped
+    small = [rng.integers(0, cfg.vocab_size, (4,)).astype(np.int32)]
+    want = Engine(params, cfg, ServeConfig(max_batch=2, max_len=64)).serve(
+        small, 3)
+    got = eng.serve(small, 3)
+    np.testing.assert_array_equal(want[0], got[0])

@@ -1,0 +1,348 @@
+"""Radix prefix cache: shadow-model property suite (DESIGN.md §3.6).
+
+The serving engines trust the allocator's content-addressed radix tree for
+three properties:
+
+  * longest-prefix-match correctness — `match_prefix` returns exactly the
+    longest full-page prefix of the query that any inserted/donated token
+    stream shares (the tree is the union of page chains, and every chain
+    is a prefix of some stream);
+  * isolation — no live sequence ever holds a writable shared page: radix
+    matches alias only full pages strictly below the owner's length, and
+    eviction never reclaims a page any table references;
+  * conservation — donated pages are retained (not leaked, not freed),
+    dedup donation frees duplicates, eviction returns pages to the pool,
+    and `pages_in_use + free + reserved` always covers the pool exactly.
+
+These tests drive randomized engine-shaped schedules (admit-with-lookup →
+insert → extend → donate/free, under varying share pressure) against an
+independent shadow model of the donated streams, calling the allocator's
+own `check()` — which now also asserts the tree invariants (every node
+live-or-LRU, Σ refcounts == table refs + tree refs, chain depth == table
+index) — after every step.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.runtime.kvcache import (
+    GARBAGE_PAGE,
+    CachePolicy,
+    PagedKVAllocator,
+    PageError,
+    pages_for,
+)
+
+
+def _common_full_pages(q, s, page):
+    """Longest full-page common prefix (tokens) of streams q and s — the
+    brute-force oracle for match_prefix."""
+    m = min(len(q), len(s))
+    n = 0
+    while n + page <= m and np.array_equal(q[n:n + page], s[n:n + page]):
+        n += page
+    return n
+
+
+def _stream(rng, bases, page, max_extra):
+    """A token stream sharing a random-length prefix with one of `bases`
+    (page-aligned overlap is common but not guaranteed) plus a fresh tail
+    — the multi-turn / shared-system-prompt shape."""
+    base = bases[int(rng.integers(0, len(bases)))]
+    keep = int(rng.integers(0, len(base) + 1))
+    extra = int(rng.integers(1, max_extra + 1))
+    return np.concatenate([
+        base[:keep], rng.integers(100, 100 + 7, size=(extra,))
+    ]).astype(np.int64)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    page=st.sampled_from([4, 8]),
+    share_depth=st.integers(min_value=1, max_value=4),
+)
+def test_radix_longest_prefix_match_shadow_model(seed, page, share_depth):
+    """Randomized admit/insert/extend/donate/free schedule on an ample
+    pool (no demand eviction): match_prefix must equal the brute-force
+    longest full-page common prefix over every stream the tree has been
+    given, and every invariant holds at every step."""
+    rng = np.random.default_rng(seed)
+    alloc = PagedKVAllocator(256, page)  # ample: nothing is evicted
+    bases = [rng.integers(0, 9, size=(share_depth * page,)) for _ in range(3)]
+    indexed: list = []  # streams whose full pages the tree has seen
+    live: dict = {}  # seq → dict(stream, len)
+    next_seq = 0
+
+    def oracle(q, cap):
+        best = 0
+        for s in indexed:
+            best = max(best, _common_full_pages(q[:cap], s, page))
+        return best
+
+    for _ in range(60):
+        op = rng.choice(["admit", "extend", "retire"])
+        if op == "admit":
+            prompt = _stream(rng, bases, page, 2 * page)
+            cap = len(prompt) - 1
+            m = alloc.match_prefix(prompt, max_tokens=cap)
+            want = oracle(prompt, cap)
+            assert m.n_tokens == want, (
+                f"match {m.n_tokens} != oracle {want} for {prompt.tolist()}"
+            )
+            assert m.n_tokens % page == 0
+            assert len(m.pages) == m.n_tokens // page
+            alloc.admit(next_seq, len(prompt), len(prompt), cached=m)
+            # matched pages sit at their chain index in the new table
+            assert alloc.table(next_seq)[: len(m.pages)] == list(m.pages)
+            alloc.insert(next_seq, prompt)  # live indexing (prefill done)
+            indexed.append(prompt)
+            live[next_seq] = {"stream": prompt, "len": len(prompt)}
+            next_seq += 1
+        elif op == "extend" and live:
+            seq = int(rng.choice(list(live)))
+            grow = int(rng.integers(1, page + 2))
+            st_ = live[seq]
+            cows = alloc.extend(seq, st_["len"] + grow)
+            # radix-matched prefixes are full pages strictly below the
+            # owner's length: growth never lands on a shared page
+            assert cows == []
+            st_["stream"] = np.concatenate([
+                st_["stream"][: st_["len"]],
+                rng.integers(200, 207, size=(grow,)),
+            ])
+            st_["len"] += grow
+        elif op == "retire" and live:
+            seq = int(rng.choice(list(live)))
+            st_ = live.pop(seq)
+            if rng.random() < 0.7:
+                alloc.donate(seq, st_["stream"][: st_["len"]])
+                indexed.append(st_["stream"][: st_["len"]])
+            else:
+                alloc.free(seq)
+        alloc.check()
+        assert (alloc.pages_in_use + alloc.free_pages + alloc.reserved_pages
+                == alloc.n_pages - 1)
+        # every live table references only materialized, non-garbage pages
+        for seq in live:
+            tbl = alloc.table(seq)
+            assert GARBAGE_PAGE not in tbl
+            assert len(tbl) == pages_for(live[seq]["len"], page)
+
+    # drain: cached pages stay, table pages of live seqs release
+    for seq in list(live):
+        alloc.free(seq)
+    alloc.check()
+    assert alloc.pages_in_use == alloc.cached_pages
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    page=st.sampled_from([4, 8]),
+    n_pages=st.integers(min_value=10, max_value=24),
+)
+def test_radix_under_pressure_stays_sound(seed, page, n_pages):
+    """With a tight pool (demand eviction active), completeness is off the
+    table but soundness is not: every match must be a prefix of SOME
+    stream ever given to the tree, eviction never touches a
+    table-referenced page (check() asserts), and admissions that
+    can_admit promises succeed."""
+    rng = np.random.default_rng(seed)
+    alloc = PagedKVAllocator(n_pages, page,
+                             cache_policy=CachePolicy(min_free_pages=1))
+    bases = [rng.integers(0, 5, size=(2 * page,)) for _ in range(2)]
+    indexed: list = []
+    live: dict = {}
+    next_seq = 0
+    for _ in range(50):
+        if live and (rng.random() < 0.4 or len(live) > 2):
+            seq = int(rng.choice(list(live)))
+            stream = live.pop(seq)
+            alloc.donate(seq, stream)
+            indexed.append(stream)
+        else:
+            prompt = _stream(rng, bases, page, page)
+            m = alloc.match_prefix(prompt, max_tokens=len(prompt) - 1)
+            if m.n_tokens:  # soundness: the match is a known chain
+                assert any(
+                    _common_full_pages(prompt, s, page) >= m.n_tokens
+                    for s in indexed
+                )
+            if not alloc.can_admit(len(prompt), cached=m):
+                continue
+            alloc.admit(next_seq, len(prompt), len(prompt), cached=m)
+            alloc.insert(next_seq, prompt)
+            indexed.append(prompt)
+            live[next_seq] = prompt
+            next_seq += 1
+        alloc.check()
+
+
+def test_radix_donation_dedupes_and_survives_donor():
+    """Donating the same content twice retains it once (the duplicate's
+    pages free); the cache outlives every donor and serves later matches."""
+    page = 4
+    alloc = PagedKVAllocator(32, page)
+    stream = np.arange(11)
+    alloc.admit(0, 11, 11)
+    alloc.donate(0, stream)
+    alloc.check()
+    assert alloc.cached_pages == 2  # two full pages; the 3-token tail freed
+    base = alloc.pages_in_use
+    alloc.admit(1, 11, 11)  # same content, computed fresh (cold admission)
+    alloc.donate(1, stream)
+    alloc.check()
+    assert alloc.cached_pages == 2, "duplicate donation must dedupe"
+    assert alloc.pages_in_use == base, "duplicate pages must free"
+    m = alloc.match_prefix(np.concatenate([stream, [9, 9]]))
+    assert m.n_tokens == 8
+    # the warm admission aliases the cached pages: only the tail is fresh
+    before = alloc.pages_in_use
+    alloc.admit(2, 11, 11, cached=m)
+    assert alloc.pages_in_use == before + 1
+    assert alloc.table(2)[:2] == list(m.pages)
+    alloc.check()
+
+
+def test_radix_eviction_is_lru_and_spares_live_pages():
+    """Pressure evicts the least-recently-used unreferenced chain first;
+    pages aliased by a live table are never reclaimed."""
+    page = 4
+    alloc = PagedKVAllocator(9, page)  # 8 usable
+    old = np.arange(8)
+    new = np.arange(50, 58)
+    alloc.admit(0, 8, 8)
+    alloc.donate(0, old)  # older chain (2 pages)
+    alloc.admit(1, 8, 8)
+    alloc.donate(1, new)  # newer chain (2 pages)
+    # pin the NEWER chain with a live alias — eviction must take the older
+    m = alloc.match_prefix(np.concatenate([new, [1]]), max_tokens=8)
+    assert m.n_tokens == 8
+    alloc.admit(2, 9, 9, cached=m)
+    alloc.check()
+    # 5 pages held (2 old + 2 new + 1 fresh); ask for the remaining 3 + 2
+    alloc.admit(3, 5 * page, 5 * page)  # needs 5 → must evict the old chain
+    alloc.check()
+    assert alloc.evictions == 2
+    assert alloc.match_prefix(old).n_tokens == 0, "old chain evicted"
+    assert alloc.match_prefix(np.concatenate([new, [1]]),
+                              max_tokens=8).n_tokens == 8, "live chain kept"
+    assert alloc.table(2)[:2] == list(m.pages)
+
+
+def test_radix_match_cap_always_leaves_a_token():
+    """A fully cached prompt still prefills ≥ 1 token: the engine's cap
+    (prompt_len − 1) drops the final full page, and admit() rejects a
+    match that would cover the whole prompt."""
+    from repro.runtime.kvcache import PrefixMatch
+
+    page = 4
+    alloc = PagedKVAllocator(16, page)
+    stream = np.arange(8)
+    alloc.admit(0, 8, 8)
+    alloc.donate(0, stream)
+    m = alloc.match_prefix(stream, max_tokens=7)
+    assert m.n_tokens == 4  # second page excluded by the cap
+    full = alloc.match_prefix(stream)
+    assert full.n_tokens == 8
+    with pytest.raises(PageError):
+        alloc.admit(1, 8, 8, cached=full)  # nothing left to prefill
+    alloc.admit(1, 8, 8, cached=m)
+    alloc.check()
+
+
+def test_radix_stale_match_rejected_after_eviction():
+    """An admission holding a match whose pages were since evicted must
+    fail loudly instead of aliasing freed pages."""
+    page = 4
+    alloc = PagedKVAllocator(6, page)  # 5 usable
+    alloc.admit(0, 8, 8)
+    alloc.donate(0, np.arange(8))
+    m = alloc.match_prefix(np.arange(9), max_tokens=8)
+    assert m.n_tokens == 8
+    alloc.admit(1, 5 * page, 5 * page)  # evicts the whole cache
+    assert alloc.cached_pages == 0
+    with pytest.raises(PageError):
+        alloc.admit(2, 9, 9, cached=m)
+    alloc.check()
+
+
+def test_extend_failure_is_atomic():
+    """An extend the pool cannot cover fails BEFORE mutating: table, len,
+    refcounts and free list are exactly as they were (the preemptible
+    engines retry the same extend after victim selection)."""
+    page = 4
+    alloc = PagedKVAllocator(6, page)  # 5 usable
+    alloc.admit(0, 2 * page, 2 * page)
+    alloc.admit(1, 2 * page, 2 * page)
+    before = (alloc.table(0), alloc.seq_len(0), alloc.free_pages,
+              alloc.pages_in_use)
+    with pytest.raises(PageError):
+        alloc.extend(0, 5 * page)  # needs 3 more, 1 free
+    assert (alloc.table(0), alloc.seq_len(0), alloc.free_pages,
+            alloc.pages_in_use) == before
+    alloc.check()
+    alloc.free(1)  # victim released → the same extend now succeeds
+    alloc.extend(0, 5 * page)
+    alloc.check()
+
+
+def test_cache_policy_watermark_and_cap():
+    """min_free_pages evicts down after donations; max_cached_pages caps
+    retention; 0 disables it; the tuning heuristic fills the defaults."""
+    from repro.kernels.tuning import choose_cache_policy
+
+    page = 4
+    cap = PagedKVAllocator(32, page,
+                           cache_policy=CachePolicy(max_cached_pages=3))
+    for seq, lo in enumerate((0, 100, 200)):
+        cap.admit(seq, 2 * page, 2 * page)
+        cap.donate(seq, np.arange(lo, lo + 2 * page))
+        cap.check()
+    assert cap.cached_pages <= 3
+
+    water = PagedKVAllocator(6, page,  # 5 usable
+                             cache_policy=CachePolicy(min_free_pages=3))
+    water.admit(0, 4 * page, 4 * page)
+    water.donate(0, np.arange(4 * page))
+    water.check()
+    assert len(water._free) >= 3  # watermark enforced right after donation
+    assert water.cached_pages == 2
+
+    off = PagedKVAllocator(16, page,
+                           cache_policy=CachePolicy(max_cached_pages=0))
+    off.admit(0, 2 * page, 2 * page)
+    off.donate(0, np.arange(2 * page))
+    off.check()
+    assert off.cached_pages == 0 and off.pages_in_use == 0
+
+    pol = choose_cache_policy(64, 16)
+    assert pol.min_free_pages == 4 and pol.max_cached_pages == 63
+    pol = choose_cache_policy(64, 16, min_free_pages=0, max_cached_pages=7)
+    assert pol.min_free_pages == 0 and pol.max_cached_pages == 7
+
+
+def test_radix_live_insert_enables_concurrent_sharing():
+    """A live prompt indexed via insert() is matchable while its owner
+    still runs (the within-burst shared-system-prompt case), and the
+    owner's retirement hands the pages over without a copy."""
+    page = 4
+    alloc = PagedKVAllocator(32, page)
+    prompt = np.arange(10)
+    alloc.admit(0, 10, 10)
+    alloc.insert(0, prompt)
+    alloc.check()
+    m = alloc.match_prefix(np.concatenate([prompt[:8], [7, 7, 7]]))
+    assert m.n_tokens == 8 and list(m.pages) == alloc.table(0)[:2]
+    alloc.admit(1, 11, 11, cached=m)
+    alloc.check()
+    assert alloc.refcount(alloc.table(0)[0]) == 3  # seq0 + seq1 + tree
+    alloc.donate(0, prompt)  # owner retires; child keeps the pages
+    alloc.check()
+    assert alloc.refcount(alloc.table(1)[0]) == 2  # seq1 + tree
+    alloc.free(1)
+    alloc.check()
+    assert alloc.pages_in_use == alloc.cached_pages == 2
