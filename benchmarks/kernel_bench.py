@@ -127,6 +127,7 @@ def run(report):
     _emit_json("BENCH_paged.json", _bench_paged(report, smoke))
     _emit_json("BENCH_serve.json", _bench_serve(report, smoke))
     _emit_json("BENCH_prefix.json", _bench_prefix(report, smoke))
+    _emit_json("BENCH_chaos.json", _bench_chaos(report, smoke))
     _emit_json("BENCH_ring.json", _bench_ring(report, smoke))
 
 
@@ -410,6 +411,83 @@ def _bench_serve(report, smoke: bool) -> dict:
              / out["engines"]["paged_sequential"]["ttft_mean_s"])
     report("serve_mixed_vs_sequential_ttft", ratio,
            "mean-TTFT ratio under long-prompt arrival (<1 is the win)")
+    return out
+
+
+def _bench_chaos(report, smoke: bool) -> dict:
+    """Serving under chaos injection (DESIGN.md §3.7).
+
+    One request batch served at fault rates 0% / 5% / 20% (fresh engine
+    per rate, same seed → deterministic). Tracked signals per rate:
+    goodput (fraction of requests ending DONE), retries charged, wall
+    time, and p99 TTFT. The lifecycle contract is ASSERTED, not just
+    reported: every request terminal at every rate, survivors
+    token-identical to the fault-free run, and goodput degrades
+    gracefully (1.0 at rate 0, ≥ 0.5 at rate 0.2) instead of collapsing.
+    """
+    import dataclasses as _dc
+
+    from repro.configs import paper_llama
+    from repro.models import get_model
+    from repro.serve import Engine, FaultInjector, ServeConfig
+
+    cfg = _dc.replace(
+        paper_llama.CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, head_dim=16, vocab_size=128, vocab_pad_multiple=64,
+    )
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    if smoke:
+        n_req, p_len, n_new, slots = 6, 8, 8, 2
+    else:
+        n_req, p_len, n_new, slots = 8, 12, 16, 2
+    rng = np.random.default_rng(0)
+    reqs = [rng.integers(0, cfg.vocab_size, (p_len,)).astype(np.int32)
+            for _ in range(n_req)]
+    sc = ServeConfig(max_batch=slots, max_len=p_len + n_new + 8,
+                     kv_layout="paged", page_size=8, max_retries=5)
+
+    out: dict = {"workload": {"n_requests": n_req, "prompt_len": p_len,
+                              "new_tokens": n_new, "slots": slots,
+                              "max_retries": sc.max_retries},
+                 "rates": {}}
+    baseline = None
+    for rate in (0.0, 0.05, 0.20):
+        inj = FaultInjector(rate=rate, seed=0) if rate > 0 else None
+        eng = Engine(params, cfg, sc, fault_injector=inj)
+        t0 = time.perf_counter()
+        outs = eng.serve(reqs, n_new)
+        wall = time.perf_counter() - t0
+        st = eng.stats()
+        status = st["request_status"]
+        assert all(s in ("done", "failed", "expired")
+                   for s in status.values()), status  # all terminal
+        if baseline is None:
+            baseline = outs
+        for i, o in enumerate(outs):  # survivors token-identical
+            if status[i] == "done":
+                assert np.array_equal(baseline[i], o), (rate, i)
+        eng._alloc.check()
+        goodput = sum(s == "done" for s in status.values()) / n_req
+        ttft = sorted(eng.ttft.values())
+        p99 = float(ttft[min(len(ttft) - 1,
+                             int(np.ceil(0.99 * len(ttft))) - 1)]) if ttft else 0.0
+        row = {
+            "goodput": goodput,
+            "done": sum(s == "done" for s in status.values()),
+            "failed": st["failed"], "expired": st["expired"],
+            "retries": st["retried"],
+            "faults_fired": st.get("injected_faults", {}),
+            "wall_s": wall,
+            "tokens_per_sec": sum(map(len, outs)) / wall,
+            "ttft_p99_s": p99,
+        }
+        out["rates"][f"{rate:.2f}"] = row
+        report(f"chaos_rate{int(rate * 100):02d}_goodput", goodput,
+               f"{row['done']}/{n_req} done, {row['retries']} retries, "
+               f"p99 TTFT {p99:.3f}s")
+    assert out["rates"]["0.00"]["goodput"] == 1.0
+    assert out["rates"]["0.20"]["goodput"] >= 0.5, out["rates"]["0.20"]
     return out
 
 

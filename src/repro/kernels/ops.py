@@ -11,6 +11,12 @@ families plug in with `@register_op` instead of another hand-threaded
 import chain, and callers that route dynamically (benchmarks, tuning
 sweeps) resolve them with `get_op(name)`. The module-level functions stay
 importable by name — the registry is the same objects, indexed.
+
+Every op also carries a registered *jnp fallback* — a pure-jnp callable
+with the SAME signature, resolved with `get_fallback(name)`. The serving
+engine's graceful-degradation path (DESIGN.md §3.7) uses `fallback_impl`
+to flip a faulting `*_pallas` attention impl to its jnp twin for the rest
+of a serve; dynamic callers can swap a single op the same way.
 """
 
 from __future__ import annotations
@@ -37,10 +43,14 @@ __all__ = [
     "register_op",
     "get_op",
     "op_names",
+    "register_fallback",
+    "get_fallback",
+    "fallback_impl",
     "on_tpu",
 ]
 
 _REGISTRY: Dict[str, Callable] = {}
+_FALLBACKS: Dict[str, Callable] = {}
 
 
 def register_op(name: str) -> Callable[[Callable], Callable]:
@@ -66,6 +76,36 @@ def get_op(name: str) -> Callable:
 
 def op_names() -> tuple:
     return tuple(sorted(_REGISTRY))
+
+
+def register_fallback(name: str) -> Callable[[Callable], Callable]:
+    """Register the pure-jnp fallback for op `name` (same signature)."""
+
+    def deco(fn: Callable) -> Callable:
+        if name in _FALLBACKS:
+            raise ValueError(f"fallback for {name!r} already registered")
+        _FALLBACKS[name] = fn
+        return fn
+
+    return deco
+
+
+def get_fallback(name: str) -> Callable:
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown kernel op {name!r}; registered: {sorted(_REGISTRY)}"
+        )
+    try:
+        return _FALLBACKS[name]
+    except KeyError:
+        raise KeyError(f"op {name!r} has no registered jnp fallback") from None
+
+
+def fallback_impl(attn_impl: str) -> str:
+    """The jnp twin of a Pallas attention impl name ('flashd_pallas' →
+    'flashd'); non-Pallas impls map to themselves (nothing to downgrade)."""
+    suffix = "_pallas"
+    return attn_impl[: -len(suffix)] if attn_impl.endswith(suffix) else attn_impl
 
 
 def on_tpu() -> bool:
@@ -196,4 +236,104 @@ def pallas_varlen(
         jnp.asarray(kv_len, jnp.int32).reshape(-1),
         scale=scale, window=window, chunk=chunk, block_q=block_q,
         interpret=_interpret(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# jnp fallbacks — same signatures, pure-jnp bodies (graceful degradation)
+# ---------------------------------------------------------------------------
+
+@register_fallback("attention_fwd")
+def jnp_attention_fwd_batched(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    mask: MaskSpec,
+    scale: float,
+    impl: str,
+    block_q: int,
+    block_k: int,
+    skip: bool,
+):
+    from repro.core.attention import _attention_core_fwd  # lazy: avoid cycle
+
+    b, sq, hq, _ = q.shape
+    o, (_, _, _, _, lam) = _attention_core_fwd(
+        q, k, v, mask, scale, impl, block_q, block_k, skip
+    )
+    return o, lam.reshape(b, hq, sq)
+
+
+@register_fallback("decode")
+def jnp_decode(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cache_len: jax.Array,
+    *,
+    scale=None,
+    n_splits: int | None = None,
+    window: int = 0,
+    chunk: int = 0,
+    fused: bool = True,
+):
+    from repro.core.attention import decode_attention  # lazy: avoid cycle
+
+    return decode_attention(
+        q if q.ndim == 4 else q[:, None],
+        k_cache, v_cache,
+        jnp.asarray(cache_len, jnp.int32).reshape(-1),
+        scale=scale, window=window, chunk=chunk, n_splits=n_splits,
+    )
+
+
+@register_fallback("decode_paged")
+def jnp_decode_paged(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tbl: jax.Array,
+    cache_len: jax.Array,
+    *,
+    scale=None,
+    window: int = 0,
+    chunk: int = 0,
+):
+    from repro.core.attention import decode_attention_paged  # lazy: avoid cycle
+
+    return decode_attention_paged(
+        q if q.ndim == 4 else q[:, None],
+        k_pages, v_pages,
+        jnp.asarray(block_tbl, jnp.int32),
+        jnp.asarray(cache_len, jnp.int32).reshape(-1),
+        scale=scale, window=window, chunk=chunk,
+    )
+
+
+@register_fallback("varlen")
+def jnp_varlen(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tbl: jax.Array,
+    seq_ids: jax.Array,
+    q_pos: jax.Array,
+    kv_len: jax.Array,
+    *,
+    scale=None,
+    window: int = 0,
+    chunk: int = 0,
+    block_q: int,
+):
+    from repro.core.attention import varlen_attention  # lazy: avoid cycle
+
+    return varlen_attention(
+        q, k_pages, v_pages,
+        jnp.asarray(block_tbl, jnp.int32),
+        jnp.asarray(seq_ids, jnp.int32),
+        jnp.asarray(q_pos, jnp.int32),
+        jnp.asarray(kv_len, jnp.int32).reshape(-1),
+        scale=scale, window=window, chunk=chunk, impl="flashd",
+        block_q=block_q,
     )

@@ -8,6 +8,11 @@ scheduler tracks it per request id from enqueue to first token, so a
 priority-swapped or preempted request reports the waiting time it really
 accrued), and the paged engines print the prefix-cache / preemption
 counters from `Engine.stats()` (DESIGN.md §3.6).
+
+Fault tolerance (DESIGN.md §3.7): `--fault-rate`/`--fault-seed` turn on
+deterministic chaos injection, `--deadline-ms`/`--max-retries` set the
+per-request lifecycle budgets, and every request's terminal status
+(done / failed / expired) is printed with the retry/downgrade counters.
 """
 
 from __future__ import annotations
@@ -79,6 +84,18 @@ def main(argv=None):
     p.add_argument("--no-preemption", action="store_true",
                    help="worst-case reservation admission instead of "
                         "optimistic allocation + preemption")
+    p.add_argument("--deadline-ms", type=float, default=0.0,
+                   help="per-request deadline in milliseconds (0 → none); "
+                        "overdue requests are cancelled like EOS with "
+                        "status 'expired' (DESIGN.md §3.7)")
+    p.add_argument("--max-retries", type=int, default=3,
+                   help="fault-retry budget per request before it goes "
+                        "terminal-FAILED (DESIGN.md §3.7)")
+    p.add_argument("--fault-rate", type=float, default=0.0,
+                   help="chaos injection: probability each fault-site "
+                        "check fires (0 → no injection)")
+    p.add_argument("--fault-seed", type=int, default=0,
+                   help="seed for the deterministic fault injector")
     args = p.parse_args(argv)
 
     cfg = configs.get_smoke_config(args.arch) if args.smoke else configs.get_config(args.arch)
@@ -105,6 +122,10 @@ def main(argv=None):
         prefill_chunk=args.prefill_chunk,
         prefix_cache=not args.no_prefix_cache,
         preemption=not args.no_preemption,
+        max_retries=args.max_retries,
+        deadline_s=args.deadline_ms / 1e3,
+        fault_rate=args.fault_rate,
+        fault_seed=args.fault_seed,
     ))
     rng = np.random.default_rng(args.seed)
     shared = rng.integers(
@@ -123,8 +144,9 @@ def main(argv=None):
                      priorities=priorities)
     dt = time.time() - t0
     total_tokens = sum(len(o) for o in outs)
+    status = eng.stats()["request_status"]
     for i, o in enumerate(outs):
-        print(f"request {i}: {o.tolist()}")
+        print(f"request {i} [{status.get(i, '?'):>7}]: {o.tolist()}")
     layout = "paged pool" if eng._page_layout is not None else "contiguous slots"
     mode = "mixed varlen steps" if eng._mixed_ok else "sequential chunks"
     print(f"{total_tokens} tokens in {dt:.2f}s → {total_tokens/dt:.1f} tok/s "
@@ -145,6 +167,13 @@ def main(argv=None):
               f"{st.get('cached_pages', 0)} pages retained), "
               f"{st['preemptions']} preemptions, "
               f"{st.get('evictions', 0)} evictions")
+    if args.fault_rate > 0 or args.deadline_ms > 0 or st["retried"]:
+        n_done = sum(s == "done" for s in status.values())
+        print(f"fault tolerance: {n_done}/{len(outs)} done, "
+              f"{st['failed']} failed, {st['expired']} expired, "
+              f"{st['retried']} retries, {st['downgrades']} downgrades "
+              f"(impl now {st['attn_impl']}), "
+              f"faults fired {st.get('injected_faults', {})}")
     return 0
 
 

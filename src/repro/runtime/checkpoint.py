@@ -67,11 +67,15 @@ def save(
     extra: Optional[Dict[str, Any]] = None,
     host_index: int = 0,
 ) -> str:
-    flat = _flatten(tree)
+    """Write a checkpoint. `tree=None` writes a metadata-only checkpoint
+    (manifest + `extra`, no array shards) — used by the serving engine's
+    `snapshot()`, whose state is pure-JSON (token streams, not KV arrays)."""
+    flat = _flatten(tree) if tree is not None else {}
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
     os.makedirs(tmp, exist_ok=True)
-    np.savez(os.path.join(tmp, f"shard_{host_index}.npz"), **flat)
+    if tree is not None:
+        np.savez(os.path.join(tmp, f"shard_{host_index}.npz"), **flat)
     manifest = {
         "step": int(step),
         "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)} for k, v in flat.items()},
@@ -104,7 +108,9 @@ def restore(
     shardings=None,
 ) -> Tuple[Any, Dict[str, Any]]:
     """Load into the structure of `tree_like`; optionally re-place with
-    `shardings` (a pytree of NamedSharding) for elastic re-meshing."""
+    `shardings` (a pytree of NamedSharding) for elastic re-meshing.
+    `tree_like=None` loads only the manifest `extra` (metadata-only
+    checkpoints, see `save`)."""
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
@@ -112,6 +118,8 @@ def restore(
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
+    if tree_like is None:
+        return None, manifest["extra"]
     flat: Dict[str, np.ndarray] = {}
     for fn in sorted(os.listdir(d)):
         if fn.startswith("shard_") and fn.endswith(".npz"):

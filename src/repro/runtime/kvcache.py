@@ -554,6 +554,37 @@ class PagedKVAllocator:
         for pid in table:
             self._decref(pid)
 
+    def reset_live(self) -> int:
+        """Crash-recovery sweep: release every live sequence (the engine
+        could not retire them individually) while keeping the radix tree —
+        and everything it has indexed — intact. Partial-page KV of the
+        released sequences is simply dropped; tree-indexed full pages stay
+        warm. Returns the number of sequences released."""
+        seqs = list(self._tables)
+        for seq in seqs:
+            self.free(seq)
+        return len(seqs)
+
+    def cached_chains(self) -> List[List[int]]:
+        """Root-to-leaf token chains indexed by the radix tree, each a flat
+        token list (length a multiple of page_size). Leaves only — interior
+        prefixes are implied. This is the cache's content in *token* space;
+        `Engine.snapshot()/restore()` re-derives the KV pages from it,
+        exactly, because FLASH-D's (O, Λ) state is a pure function of the
+        token stream (DESIGN.md §3.7)."""
+        out: List[List[int]] = []
+
+        def rec(node: _RadixNode, toks: List[int]) -> None:
+            if not node.children:
+                if node is not self._root:
+                    out.append(toks)
+                return
+            for key, child in node.children.items():
+                rec(child, toks + list(key))
+
+        rec(self._root, [])
+        return out
+
     # ---- invariants (tests call this after every schedule step) ----
     def check(self) -> None:
         assert self._ref[GARBAGE_PAGE] == 0, "garbage page must never be allocated"

@@ -1,6 +1,6 @@
 """Fault tolerance, straggler mitigation, elastic scaling.
 
-Three cooperating pieces, all exercised by tests:
+Cooperating pieces, all exercised by tests:
 
 * `run_resilient` — the restart loop: train inside a supervisor that, on a
   (simulated or real) failure, restores the latest checkpoint — including
@@ -8,10 +8,23 @@ Three cooperating pieces, all exercised by tests:
   identical to an uninterrupted run (bitwise, given deterministic data),
   because all step-state lives in the checkpoint.
 
+* `RetryPolicy` — which exception types are retryable, how many times, and
+  how long to back off between attempts (exponential with deterministic
+  jitter). Shared by `run_resilient` (training restarts) and the serving
+  engine's per-request retry path (DESIGN.md §3.7).
+
+* `FaultInjector` — deterministic, seeded chaos: raises `InjectedFault` at
+  named sites (page_alloc / kernel_dispatch / device_step / host_sync)
+  threaded through the serve loops, either probabilistically (`rate`) or
+  on an explicit per-site occurrence `schedule`. `crash_after_checks`
+  additionally raises one `EngineCrash` — an exception the engine does
+  *not* absorb — to exercise crash recovery + snapshot/restore.
+
 * `StragglerMonitor` — per-step wall-time EWMA + robust z-score; flags
   slow steps/pods and invokes a callback (in production: exclude the pod
   from the next allocation / re-mesh; here: a recorded decision, so the
-  policy is unit-testable without real stragglers).
+  policy is unit-testable without real stragglers). The serving engine
+  reuses it as a per-step watchdog (`Engine.stats()["slow_steps"]`).
 
 * `ElasticPlan` — given a new device count, recompute the mesh shape and
   produce (mesh, shardings) so a checkpoint written at one scale restores
@@ -24,14 +37,152 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Tuple, Type
 
 import jax
 import numpy as np
 
 from repro.runtime import checkpoint as ckpt
 
-__all__ = ["run_resilient", "StragglerMonitor", "ElasticPlan", "plan_mesh"]
+__all__ = [
+    "run_resilient",
+    "RetryPolicy",
+    "FaultInjector",
+    "InjectedFault",
+    "EngineCrash",
+    "StragglerMonitor",
+    "ElasticPlan",
+    "plan_mesh",
+]
+
+
+# ---------------------------------------------------------------------------
+# retry policy (shared by training restarts and the serving retry path)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """How failures are retried: which exception types, how many attempts,
+    and the exponential-backoff/jitter schedule between them.
+
+    Jitter is deterministic (seeded per (seed, attempt)) so retries stay
+    reproducible — the same property the FaultInjector relies on.
+    """
+
+    max_retries: int = 3
+    backoff_base_s: float = 0.0  # 0 → no sleeping (unit-test friendly)
+    backoff_max_s: float = 30.0
+    jitter: float = 0.0  # ±fraction of the delay
+    retryable: Tuple[Type[BaseException], ...] = (RuntimeError,)
+
+    def is_retryable(self, exc: BaseException) -> bool:
+        return isinstance(exc, self.retryable)
+
+    def delay_s(self, attempt: int, *, seed: int = 0) -> float:
+        """Backoff before retry number `attempt` (1-based)."""
+        if self.backoff_base_s <= 0:
+            return 0.0
+        d = min(self.backoff_base_s * (2 ** max(attempt - 1, 0)), self.backoff_max_s)
+        if self.jitter > 0:
+            u = float(np.random.default_rng((seed, attempt)).random())
+            d *= 1.0 + self.jitter * (2.0 * u - 1.0)
+        return d
+
+
+# ---------------------------------------------------------------------------
+# deterministic chaos injection
+# ---------------------------------------------------------------------------
+
+class InjectedFault(RuntimeError):
+    """A simulated recoverable failure raised by `FaultInjector.check`."""
+
+    def __init__(self, site: str, rid: Optional[int] = None, index: int = -1):
+        super().__init__(f"injected fault at {site!r} (occurrence {index}, rid={rid})")
+        self.site = site
+        self.rid = rid
+        self.index = index
+
+
+class EngineCrash(RuntimeError):
+    """A simulated *unrecoverable* failure — the engine must not absorb it.
+
+    Used to exercise the crash-recovery path: the serve loop's exception
+    handler rolls live requests back into the queue (pages donated), the
+    exception propagates, and `Engine.snapshot()/restore()` resumes warm.
+    """
+
+
+class FaultInjector:
+    """Deterministic, seeded fault source for the serving engine.
+
+    Two triggering modes, composable:
+
+    * `rate` — each `check(site)` call fires with probability `rate`, drawn
+      from one seeded stream (deterministic given the call sequence).
+    * `schedule` — explicit `(site, occurrence_index)` pairs; the N-th
+      `check` at that site fires regardless of `rate`. This is what the
+      chaos tests use to target a specific request or step.
+
+    `crash_after_checks=N` raises `EngineCrash` on the N-th check overall
+    (0-based), once — simulating a hard crash mid-serve.
+    """
+
+    SITES = ("page_alloc", "kernel_dispatch", "device_step", "host_sync")
+
+    def __init__(
+        self,
+        rate: float = 0.0,
+        seed: int = 0,
+        *,
+        sites: Optional[Iterable[str]] = None,
+        schedule: Iterable[Tuple[str, int]] = (),
+        crash_after_checks: Optional[int] = None,
+    ):
+        self.rate = float(rate)
+        self.seed = int(seed)
+        self.sites = frozenset(sites) if sites is not None else frozenset(self.SITES)
+        unknown = self.sites - set(self.SITES)
+        if unknown:
+            raise ValueError(f"unknown fault sites: {sorted(unknown)}")
+        self._rng = np.random.default_rng(seed)
+        self._schedule: Dict[str, set] = {}
+        for site, idx in schedule:
+            if site not in self.SITES:
+                raise ValueError(f"unknown fault site in schedule: {site!r}")
+            self._schedule.setdefault(site, set()).add(int(idx))
+        self.crash_after_checks = crash_after_checks
+        self._crashed = False
+        self.calls: Dict[str, int] = {s: 0 for s in self.SITES}
+        self.fired: Dict[str, int] = {s: 0 for s in self.SITES}
+
+    @property
+    def total_calls(self) -> int:
+        return sum(self.calls.values())
+
+    @property
+    def total_fired(self) -> int:
+        return sum(self.fired.values())
+
+    def check(self, site: str, rid: Optional[int] = None) -> None:
+        """Raise `InjectedFault` if this occurrence of `site` is faulted."""
+        if site not in self.SITES:
+            raise ValueError(f"unknown fault site: {site!r}")
+        total = self.total_calls
+        idx = self.calls[site]
+        self.calls[site] += 1
+        if (
+            self.crash_after_checks is not None
+            and not self._crashed
+            and total >= self.crash_after_checks
+        ):
+            self._crashed = True
+            raise EngineCrash(f"injected crash at check #{total} (site {site!r})")
+        fire = idx in self._schedule.get(site, ())
+        if not fire and self.rate > 0.0 and site in self.sites:
+            fire = float(self._rng.random()) < self.rate
+        if fire:
+            self.fired[site] += 1
+            raise InjectedFault(site, rid=rid, index=idx)
 
 
 # ---------------------------------------------------------------------------
@@ -47,9 +198,16 @@ def run_resilient(
     ckpt_every: int = 50,
     max_restarts: int = 10,
     fail_at: Optional[Callable[[int], bool]] = None,
+    retry: Optional[RetryPolicy] = None,
 ) -> Tuple[object, List[Dict]]:
     """Supervised training loop. `step_fn(state, data_step)` returns
-    (state, metrics). `fail_at(step)` raising simulates node failure."""
+    (state, metrics). `fail_at(step)` raising simulates node failure.
+
+    `retry` controls which exception types trigger a restart (default:
+    `RuntimeError` only, the historical behavior) and the jittered backoff
+    slept between restarts; `max_restarts` still caps the restart count.
+    """
+    policy = retry if retry is not None else RetryPolicy()
     history: List[Dict] = []
     restarts = 0
     while True:
@@ -72,10 +230,13 @@ def run_resilient(
                 if step % ckpt_every == 0 or step == total_steps:
                     ckpt.save(ckpt_dir, step, state, extra={"data_step": step})
             return state, history
-        except RuntimeError:
+        except policy.retryable:
             restarts += 1
             if restarts > max_restarts:
                 raise
+            delay = policy.delay_s(restarts)
+            if delay > 0:
+                time.sleep(delay)
             # truncate unpersisted history (those steps will be replayed)
             persisted = ckpt.latest_step(ckpt_dir) or 0
             history = [h for h in history if h["step"] < persisted]
@@ -110,8 +271,12 @@ class StragglerMonitor:
         self._t0 = time.monotonic()
 
     def end_step(self, step: int, elapsed: Optional[float] = None):
-        dt = elapsed if elapsed is not None else time.monotonic() - self._t0
-        self.observe(step, dt)
+        if elapsed is None:
+            if self._t0 is None:  # end without start: nothing to measure
+                return
+            elapsed = time.monotonic() - self._t0
+        self._t0 = None
+        self.observe(step, elapsed)
 
     def observe(self, step: int, dt: float):
         self._n += 1

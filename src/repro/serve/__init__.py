@@ -1,7 +1,26 @@
+from repro.runtime.resilience import (
+    EngineCrash,
+    FaultInjector,
+    InjectedFault,
+    RetryPolicy,
+)
 from repro.serve.engine import Engine, ServeConfig, sample_token
-from repro.serve.scheduler import Request, Scheduler, Segment, StepPlan
+from repro.serve.scheduler import (
+    DONE,
+    EXPIRED,
+    FAILED,
+    QUEUED,
+    RUNNING,
+    TERMINAL,
+    Request,
+    Scheduler,
+    Segment,
+    StepPlan,
+)
 
 __all__ = [
     "Engine", "ServeConfig", "sample_token",
     "Request", "Scheduler", "Segment", "StepPlan",
+    "QUEUED", "RUNNING", "DONE", "FAILED", "EXPIRED", "TERMINAL",
+    "FaultInjector", "InjectedFault", "EngineCrash", "RetryPolicy",
 ]

@@ -66,6 +66,24 @@ Sharded serving: pass a `repro.distributed.sharding.ShardingCtx` and the
 engine activates it (plus the ambient mesh) around every trace/dispatch;
 seq-sharded KV caches route decode through the cross-device FLASH-D merge
 (`repro.distributed.context.cp_decode`, DESIGN.md §4.1).
+
+Fault tolerance (DESIGN.md §3.7): every request gets a lifecycle contract
+— it ends DONE, FAILED (fault-retry budget exhausted), or EXPIRED
+(deadline), never silently dropped. A seeded `FaultInjector` can raise
+simulated failures at four named sites threaded through all three serve
+loops (page_alloc / kernel_dispatch / device_step / host_sync); faults are
+isolated to the request (or step) they hit — the faulted request rolls
+back through the same recompute-on-resume path preemption uses, charged
+against `ServeConfig.max_retries`, while its neighbors keep decoding. A
+real crash no longer resets the page pool: the recovery handler folds
+live slots back into the queue (pages donated — their KV is committed
+state) and keeps the allocator + radix tree warm. `snapshot()/restore()`
+serialize the queue, results, and the radix tree's TOKEN chains through
+`runtime/checkpoint.py` — never KV pages, because FLASH-D's (O, Λ) state
+is a pure function of the token stream and `restore()` recomputes it
+exactly. Repeated kernel faults downgrade a `*_pallas` attention impl to
+its registered jnp fallback for the rest of the engine's life
+(`kernels/ops.py`), recorded in `stats()`.
 """
 
 from __future__ import annotations
@@ -73,7 +91,8 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import functools
-from typing import Dict, List, Optional, Sequence, Set
+import time
+from typing import Dict, List, Optional, Sequence, Set, Union
 
 import jax
 import jax.numpy as jnp
@@ -81,7 +100,8 @@ import numpy as np
 
 from repro.models import ModelConfig, get_model
 from repro.models.transformer import forward_packed, packed_mixers_ok, prefill_lm
-from repro.serve.scheduler import Request, Scheduler, StepPlan
+from repro.runtime.resilience import FaultInjector, InjectedFault, StragglerMonitor
+from repro.serve.scheduler import TERMINAL, Request, Scheduler, StepPlan
 
 __all__ = ["ServeConfig", "Engine", "sample_token"]
 
@@ -114,6 +134,13 @@ class ServeConfig:
     step_mode: str = "sequential"  # "mixed": chunked-prefill packed steps
     token_budget: int = 0  # packed tokens per mixed step; 0 → heuristic
     prefill_chunk: int = 16  # max prompt tokens one sequence feeds per step
+    # ---- fault tolerance (DESIGN.md §3.7) ----
+    max_retries: int = 3  # per-request fault-retry budget (then FAILED)
+    retry_backoff_s: float = 0.0  # base of the exponential requeue backoff
+    deadline_s: float = 0.0  # default per-request deadline; 0 → none
+    fault_rate: float = 0.0  # chaos: per-site injected-fault probability
+    fault_seed: int = 0  # chaos: injector stream seed
+    downgrade_after: int = 3  # consecutive kernel faults before jnp fallback
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -180,30 +207,18 @@ class _PoolCtx:
 
 class Engine:
     def __init__(self, params, model_cfg: ModelConfig, serve_cfg: ServeConfig,
-                 *, sharding_ctx=None):
+                 *, sharding_ctx=None,
+                 fault_injector: Optional[FaultInjector] = None):
         self.params = params
         self.mc = model_cfg
         self.sc = serve_cfg
         self.ctx = sharding_ctx  # Optional[repro.distributed.sharding.ShardingCtx]
         self.api = get_model(model_cfg)
-        self._decode = jax.jit(
-            lambda p, c, t, pos: self.api.decode_step(p, c, t, pos, model_cfg)
-        )
+        self._build_jits()
         self._key = jax.random.PRNGKey(serve_cfg.seed)
         self.host_syncs = 0  # device→host transfers issued by this engine
         self.peak_active = 0  # max concurrent sequences observed by `serve`
         self.ttft = {}  # rid → time-to-first-token of the last serve() call
-        self._gen = jax.jit(self._gen_fn, static_argnums=(5,))
-        self._chunk = jax.jit(self._chunk_fn, static_argnums=(5,))
-        # bucketed prefill: one program per power-of-two prompt bucket;
-        # start_pos rides as a traced scalar so shared-prefix tails of any
-        # length reuse the same program
-        self._prefill = jax.jit(
-            lambda p, t, c, sp, ln: prefill_lm(
-                p, t, c, self.mc, start_pos=sp, lengths=ln
-            )
-        )
-        self._mixed = jax.jit(self._mixed_fn, static_argnums=(8,))
         self._page_layout = None
         if serve_cfg.kv_layout == "paged" or serve_cfg.step_mode == "mixed":
             from repro.kernels.tuning import choose_page_layout  # lazy
@@ -255,7 +270,42 @@ class Engine:
         self._stats = {
             "prefix_lookups": 0, "prefix_hits": 0, "hit_tokens": 0,
             "prompt_tokens": 0, "preemptions": 0,
+            "failed": 0, "retried": 0, "expired": 0,
+            "downgrades": 0, "slow_steps": 0,
         }
+        # ---- fault tolerance (DESIGN.md §3.7) ----
+        if fault_injector is None and serve_cfg.fault_rate > 0:
+            fault_injector = FaultInjector(
+                serve_cfg.fault_rate, serve_cfg.fault_seed
+            )
+        self._injector = fault_injector
+        self._kernel_faults = 0  # consecutive kernel-site faults (downgrade)
+        self._step_faults = 0  # consecutive faulted steps (victim charging)
+        self._step_no = 0  # engine-lifetime serve steps (watchdog key)
+        self._watchdog = StragglerMonitor(on_straggler=self._note_slow_step)
+        self._sched: Optional[Scheduler] = None  # last/current serve's scheduler
+        self._resume_state: Optional[dict] = None  # restored snapshot, pre-resume
+
+    def _build_jits(self) -> None:
+        """(Re)build every jitted entry point. Each wrapper closes over
+        `self.mc` / `self.api`, which jit treats as trace-time constants —
+        so the graceful-degradation path MUST call this after swapping
+        `attn_impl` (mutating `self.mc` alone would keep serving the old
+        compiled programs)."""
+        self._decode = jax.jit(
+            lambda p, c, t, pos: self.api.decode_step(p, c, t, pos, self.mc)
+        )
+        self._gen = jax.jit(self._gen_fn, static_argnums=(5,))
+        self._chunk = jax.jit(self._chunk_fn, static_argnums=(5,))
+        # bucketed prefill: one program per power-of-two prompt bucket;
+        # start_pos rides as a traced scalar so shared-prefix tails of any
+        # length reuse the same program
+        self._prefill = jax.jit(
+            lambda p, t, c, sp, ln: prefill_lm(
+                p, t, c, self.mc, start_pos=sp, lengths=ln
+            )
+        )
+        self._mixed = jax.jit(self._mixed_fn, static_argnums=(8,))
 
     def _scope(self):
         """Sharding scope for traces/dispatches: activates the ctx and the
@@ -282,6 +332,101 @@ class Engine:
 
         return bucket_pow2(n, lo=8, hi=self.sc.max_len)
 
+    # ---- fault injection / degradation (DESIGN.md §3.7) ----
+    def _inj(self, site: str, rid: Optional[int] = None) -> None:
+        if self._injector is not None:
+            self._injector.check(site, rid=rid)
+
+    def _sync(self, x, rid: Optional[int] = None) -> np.ndarray:
+        """Serve-loop device→host sync: the host_sync injection site."""
+        self._inj("host_sync", rid)
+        return self._to_host(x)
+
+    def _note_slow_step(self, step: int, dt: float, ewma: float) -> None:
+        self._stats["slow_steps"] += 1
+
+    def _bump_step(self) -> int:
+        self._step_no += 1
+        return self._step_no
+
+    def _note_fault(self, exc: InjectedFault) -> None:
+        """Record an injected fault; consecutive kernel-site faults on a
+        Pallas impl trigger the jnp downgrade."""
+        if exc.site in ("kernel_dispatch", "device_step"):
+            self._kernel_faults += 1
+            if (self._kernel_faults >= self.sc.downgrade_after
+                    and self.mc.attn_impl.endswith("_pallas")):
+                self._downgrade()
+
+    def _clear_fault_streak(self) -> None:
+        """Any successful dispatch breaks the consecutive-fault streaks."""
+        self._kernel_faults = 0
+        self._step_faults = 0
+
+    def _downgrade(self) -> None:
+        """Graceful degradation: flip the attention impl to its registered
+        jnp fallback and rebuild the jitted entry points (they close over
+        `self.mc` — see `_build_jits`). One-way for the engine's lifetime;
+        recorded in `stats()["downgrades"]` / `["attn_impl"]`."""
+        from repro.kernels.ops import fallback_impl  # lazy: no cycle
+
+        fb = fallback_impl(self.mc.attn_impl)
+        if fb == self.mc.attn_impl:
+            return
+        self._stats["downgrades"] += 1
+        self.mc = dataclasses.replace(self.mc, attn_impl=fb)
+        self.api = get_model(self.mc)
+        self._build_jits()
+        self._kernel_faults = 0
+
+    def _on_step_fault(self, sched: Scheduler, exc: InjectedFault,
+                       release) -> None:
+        """A step-wide injected fault: the step's uncommitted device
+        results were discarded, so retrying it is exact (committed host
+        state never advanced). To guarantee progress under a hostile
+        schedule, after `max_retries` consecutive faulted steps the
+        scheduler's victim slot is charged one retry (requeue, or FAILED
+        when its budget is out) via `release` — which also frees/donates
+        its memory — and the streak resets."""
+        self._note_fault(exc)
+        self._step_faults += 1
+        if self._step_faults > sched.max_retries:
+            self._step_faults = 0
+            v = sched.victim_slot()
+            if v is not None:
+                release(v)
+
+    def _await_backoff(self, sched: Scheduler) -> bool:
+        """No live slot: everything left is queued (usually behind a retry
+        backoff gate). Sleep until the earliest becomes eligible; False
+        when the queue is empty too (serving is over)."""
+        if not sched.queue:
+            return False
+        wait = sched.next_ready_in()
+        if wait is not None and wait > 0:
+            time.sleep(wait)
+        return True
+
+    def _make_sched(self, requests, max_new_tokens: int, priorities,
+                    deadlines) -> Scheduler:
+        if deadlines is None and self.sc.deadline_s > 0:
+            deadlines = [self.sc.deadline_s] * len(requests)
+        sched = Scheduler(
+            requests, max_new_tokens, self.sc.max_batch, self.sc.eos_id,
+            priorities=priorities, deadlines=deadlines,
+            max_retries=self.sc.max_retries,
+            retry_backoff_s=self.sc.retry_backoff_s,
+        )
+        self._sched = sched
+        return sched
+
+    def _finish_serve(self, sched: Scheduler) -> None:
+        self.ttft = dict(sched.first_token_at)
+        self._stats["preemptions"] += sched.preemptions
+        self._stats["retried"] += sched.retried
+        self._stats["failed"] += sched.failed
+        self._stats["expired"] += sched.expired
+
     # ---- observability ----
     def stats(self) -> dict:
         """Serving counters, cumulative over this engine's lifetime:
@@ -302,6 +447,12 @@ class Engine:
             )
         s["peak_active"] = self.peak_active
         s["ttft"] = dict(self.ttft)
+        s["attn_impl"] = self.mc.attn_impl
+        if self._injector is not None:
+            s["injected_faults"] = dict(self._injector.fired)
+            s["fault_checks"] = dict(self._injector.calls)
+        if self._sched is not None:
+            s["request_status"] = dict(self._sched.status)
         return s
 
     # ---- jitted device loops ----
@@ -395,13 +546,23 @@ class Engine:
         return self._to_host(toks)[:, :max_new_tokens]
 
     # ---- continuous batching over a request queue ----
-    def serve(self, requests: List[np.ndarray], max_new_tokens: int,
-              priorities: Optional[Sequence[int]] = None) -> List[np.ndarray]:
-        """Each request: 1-D prompt array. Returns generated arrays, in order.
+    def serve(self, requests: Sequence[Union[np.ndarray, Request]],
+              max_new_tokens: int,
+              priorities: Optional[Sequence[int]] = None,
+              deadlines: Optional[Sequence[Optional[float]]] = None,
+              ) -> List[np.ndarray]:
+        """Each request: 1-D prompt array (or a `Request` carrying resume
+        state, e.g. from a snapshot). Returns generated arrays, in order —
+        one per request, ALWAYS: a FAILED or EXPIRED request's entry holds
+        whatever it generated before going terminal (`stats()
+        ["request_status"]` tells them apart).
 
         `priorities` (optional, higher = more urgent, default all-0 FIFO)
         steer admission order and — with `ServeConfig.preemption` — let a
         high-priority arrival preempt a lower-priority victim.
+        `deadlines` (seconds from enqueue, None = none; default from
+        `ServeConfig.deadline_s`) cancel overdue requests exactly like
+        EOS.
 
         Routing: `step_mode="mixed"` (and a packed-capable stack) runs the
         chunked-prefill mixed varlen loop; otherwise the paged or
@@ -410,13 +571,19 @@ class Engine:
         the prefix cache and preemption enabled or disabled."""
         with self._scope():
             if self._mixed_ok:
-                return self._serve_mixed(requests, max_new_tokens, priorities)
+                return self._serve_mixed(
+                    requests, max_new_tokens, priorities, deadlines
+                )
             # fall back along the CONFIGURED memory model: a mixed request
             # on a non-packed-capable stack must not silently switch an
             # explicitly contiguous engine onto the page pool
             if self._page_layout is not None and self.sc.kv_layout == "paged":
-                return self._serve_paged(requests, max_new_tokens, priorities)
-            return self._serve_impl(requests, max_new_tokens, priorities)
+                return self._serve_paged(
+                    requests, max_new_tokens, priorities, deadlines
+                )
+            return self._serve_impl(
+                requests, max_new_tokens, priorities, deadlines
+            )
 
     def _check_len(self, rid: int, n_prompt: int, max_new_tokens: int) -> None:
         if n_prompt + max_new_tokens > self.sc.max_len:
@@ -449,11 +616,11 @@ class Engine:
         )
 
     # ---- contiguous continuous batching ----
-    def _serve_impl(self, requests: List[np.ndarray], max_new_tokens: int,
-                    priorities=None) -> List[np.ndarray]:
+    def _serve_impl(self, requests, max_new_tokens: int,
+                    priorities=None, deadlines=None) -> List[np.ndarray]:
         b = self.sc.max_batch
-        sched = Scheduler(requests, max_new_tokens, b, self.sc.eos_id,
-                          priorities=priorities)
+        sched = self._make_sched(requests, max_new_tokens, priorities,
+                                 deadlines)
         cache = self.api.init_cache(b, self.sc.max_len, self.mc)
         tok = jnp.zeros((b,), jnp.int32)
         pos = jnp.zeros((b,), jnp.int32)
@@ -468,15 +635,28 @@ class Engine:
             sampled token is output token 0 (same as `generate`); a
             resumed request's effective prompt replays its pre-preemption
             tokens (recompute-on-resume). Requests that complete
-            immediately are finalized and the next is taken."""
+            immediately are finalized and the next is taken. An injected
+            fault is isolated to the request in hand: it re-queues (or
+            goes FAILED) and the next head is tried — the live neighbors
+            never notice."""
             nonlocal cache, tok, pos
             while (req := sched.take_head()) is not None:
                 toks = req.tokens
                 self._check_len(req.rid, len(req.prompt), max_new_tokens)
-                one_cache = self.api.init_cache(1, self.sc.max_len, self.mc)
-                logits, one_cache = self._prefill_bucketed(toks, one_cache)
-                self._key, k = jax.random.split(self._key)
-                t0 = int(self._to_host(sample_token(logits, k, self.sc))[0])
+                try:
+                    self._inj("kernel_dispatch", req.rid)
+                    one_cache = self.api.init_cache(1, self.sc.max_len, self.mc)
+                    logits, one_cache = self._prefill_bucketed(toks, one_cache)
+                    self._inj("device_step", req.rid)
+                    self._key, k = jax.random.split(self._key)
+                    t0 = int(self._sync(
+                        sample_token(logits, k, self.sc), rid=req.rid
+                    )[0])
+                except InjectedFault as e:
+                    self._note_fault(e)
+                    sched.retry_request(req)
+                    continue
+                self._clear_fault_streak()
                 if not sched.admit_request(slot, req, t0):
                     continue
                 cache = jax.tree.map(
@@ -501,24 +681,54 @@ class Engine:
                 sched.preempt(v)
                 assign(v)
 
-        for s in range(b):
-            assign(s)
-        preempt_for_priority()
-
-        self.peak_active = sched.note_peak()
-        while sched.has_active():
-            self._key, k = jax.random.split(self._key)
-            cache, tok, pos, toks = self._chunk(
-                self.params, cache, tok, pos, k, chunk_n
-            )
-            toks_np = self._to_host(toks)  # one sync per chunk
-            for s in sched.absorb_chunk(toks_np):
-                sched.retire(s)
-                assign(s)  # refill overwrites the slot's cache / tok / pos
+        def refill():
+            for s in range(b):
+                if not sched.slots[s].live:
+                    assign(s)
             preempt_for_priority()
+
+        try:
+            refill()
             self.peak_active = sched.note_peak()
-        self.ttft = dict(sched.first_token_at)
-        self._stats["preemptions"] += sched.preemptions
+            while sched.has_active() or sched.queue:
+                for s in sched.expire_overdue():
+                    sched.retire(s)  # the slot's cache region just goes stale
+                if not sched.has_active():
+                    if not self._await_backoff(sched):
+                        break
+                    refill()
+                    continue
+                self._watchdog.start_step()
+                self._key, k = jax.random.split(self._key)
+                try:
+                    self._inj("kernel_dispatch")
+                    cache2, tok2, pos2, toks = self._chunk(
+                        self.params, cache, tok, pos, k, chunk_n
+                    )
+                    self._inj("device_step")
+                    toks_np = self._sync(toks)  # one sync per chunk
+                except InjectedFault as e:
+                    # discard the uncommitted step and retry it — exact,
+                    # because committed host state never advanced
+                    self._on_step_fault(sched, e, sched.fault_slot)
+                    continue
+                self._watchdog.end_step(self._bump_step())
+                self._clear_fault_streak()
+                cache, tok, pos = cache2, tok2, pos2
+                for s in sched.absorb_chunk(toks_np):
+                    sched.retire(s)
+                    assign(s)  # refill overwrites the slot's cache / tok / pos
+                preempt_for_priority()
+                self.peak_active = sched.note_peak()
+        except Exception:
+            # crash recovery: fold live slots back into the queue so a
+            # snapshot() sees every unfinished request (contiguous KV has
+            # no engine-lifetime state to preserve)
+            for s, sl in enumerate(sched.slots):
+                if sl.live:
+                    sched.preempt(s)
+            raise
+        self._finish_serve(sched)
         return sched.results_list()
 
     # ---- paged-pool shared machinery (DESIGN.md §3.4 + §3.6) ----
@@ -554,11 +764,46 @@ class Engine:
             )
         return self._alloc, self._paged_cache
 
-    def _reset_paged_state(self):
-        """Drop the persistent pool after a failed serve (live sequences
-        would otherwise leak into the next call). The cache restarts cold."""
-        self._alloc = None
-        self._paged_cache = None
+    def _recover_paged(self, sched: Scheduler, alloc, ctx: _PoolCtx) -> None:
+        """Crash recovery (DESIGN.md §3.7): roll every live slot back into
+        the queue — pages donated, their KV is committed state — free any
+        orphaned admissions, zero every device table row, and KEEP the
+        allocator, radix tree, and page pool. The pre-PR-6 behavior
+        (dropping the whole pool) killed every in-flight neighbor of one
+        poisoned request and restarted the cache cold; now the escaping
+        exception still reports the crash, but a retry — or a
+        `snapshot()`/`restore()`d successor — resumes warm, and the next
+        serve() admits against an intact pool (`alloc.check()` holds)."""
+        for s, sl in enumerate(sched.slots):
+            if sl.live and s in ctx.seq_of:
+                try:
+                    self._pool_preempt(sched, alloc, ctx, s)
+                except Exception:  # unstructured damage: sweep below
+                    ctx.seq_of.pop(s, None)
+            elif sl.live:
+                sched.preempt(s)  # admitted to the slot but not the pool
+        # sequences admitted but never slot-bound (crash mid-admission)
+        alloc.reset_live()
+        # every slot is dead now: park all table rows on the garbage page
+        for s in range(len(sched.slots)):
+            ctx.cache = self._set_tbl_row(ctx.cache, s, [])
+        self._paged_cache = ctx.cache
+
+    def _pool_fault_slot(self, sched: Scheduler, alloc, ctx: _PoolCtx,
+                         s: int) -> None:
+        """Fault-retry rollback of a live slot: the same memory motion as
+        `_pool_preempt` (donate the valid-KV pages, zero the table row)
+        but the requeue is charged against the request's retry budget —
+        and goes terminal-FAILED when that budget is out."""
+        stream = sched.slots[s].cache_tokens()
+        seq = ctx.seq_of.pop(s)
+        ctx.inserted.discard(s)
+        sched.fault_slot(s)
+        if self._cache_on:
+            alloc.donate(seq, stream)
+        else:
+            alloc.free(seq)
+        ctx.cache = self._set_tbl_row(ctx.cache, s, [])
 
     def _copy_pages(self, cache, cows):
         if not cows:
@@ -668,8 +913,8 @@ class Engine:
             self._stats["hit_tokens"] += cached.n_tokens
 
     # ---- paged continuous batching (DESIGN.md §3.4 + §3.6) ----
-    def _serve_paged(self, requests: List[np.ndarray], max_new_tokens: int,
-                     priorities=None) -> List[np.ndarray]:
+    def _serve_paged(self, requests, max_new_tokens: int,
+                     priorities=None, deadlines=None) -> List[np.ndarray]:
         """Sequential continuous batching over a page-pool KV cache.
 
         Differences from the contiguous loop:
@@ -695,8 +940,8 @@ class Engine:
         lay = self._page_layout
         page = lay.page_size
         b = self.sc.max_batch
-        sched = Scheduler(requests, max_new_tokens, b, self.sc.eos_id,
-                          priorities=priorities)
+        sched = self._make_sched(requests, max_new_tokens, priorities,
+                                 deadlines)
         alloc, cache0 = self._paged_state()
         ctx = _PoolCtx(cache0)
         tok = jnp.zeros((b,), jnp.int32)
@@ -732,27 +977,49 @@ class Engine:
                         f" pages but the pool holds {lay.n_pages - 1}"
                     )
                 sched.take_head()
+                try:
+                    self._inj("page_alloc", req.rid)
+                except InjectedFault as e:
+                    # fault isolation: only the request in hand rolls back
+                    self._note_fault(e)
+                    sched.retry_request(req)
+                    continue
                 seq = self._seq_base
                 self._seq_base += 1
                 alloc.admit(seq, prompt_len=n, reserve_tokens=reserve,
                             cached=cached)
-                self._note_admission(toks, cached)
                 start = cached.n_tokens if cached is not None else 0
                 ctx.cache = self._set_tbl_row(ctx.cache, slot, alloc.table(seq))
-                # tail-only prefill: cached pages already hold [0, start)
-                view = _map_paged(
-                    ctx.cache, batch=lambda x: x[:, slot:slot + 1]
-                )
-                logits, view = self._prefill_bucketed(
-                    toks, view, start_pos=start
-                )
-                ctx.cache = _map_paged(
-                    ctx.cache, view,
-                    pool=lambda x, o: o,  # updated pool (slot's pages only)
-                    batch=lambda x, o: x.at[:, slot].set(o[:, 0]),
-                )
-                self._key, k = jax.random.split(self._key)
-                t0 = int(self._to_host(sample_token(logits, k, self.sc))[0])
+                try:
+                    self._inj("kernel_dispatch", req.rid)
+                    # tail-only prefill: cached pages already hold [0, start)
+                    view = _map_paged(
+                        ctx.cache, batch=lambda x: x[:, slot:slot + 1]
+                    )
+                    logits, view = self._prefill_bucketed(
+                        toks, view, start_pos=start
+                    )
+                    self._inj("device_step", req.rid)
+                    ctx.cache = _map_paged(
+                        ctx.cache, view,
+                        pool=lambda x, o: o,  # updated pool (slot's pages only)
+                        batch=lambda x, o: x.at[:, slot].set(o[:, 0]),
+                    )
+                    self._key, k = jax.random.split(self._key)
+                    t0 = int(self._sync(
+                        sample_token(logits, k, self.sc), rid=req.rid
+                    )[0])
+                except InjectedFault as e:
+                    # the faulted prefill may have left garbage KV in the
+                    # pages — FREE them (donating would poison the radix
+                    # tree's content addressing), zero the row, retry
+                    self._note_fault(e)
+                    alloc.free(seq)
+                    ctx.cache = self._set_tbl_row(ctx.cache, slot, [])
+                    sched.retry_request(req)
+                    continue
+                self._clear_fault_streak()
+                self._note_admission(toks, cached)
                 if not sched.admit_request(slot, req, t0):
                     # finished on its first token: its pages already hold
                     # the whole prompt's KV — donate them
@@ -790,37 +1057,68 @@ class Engine:
         try:
             refill()
             self.peak_active = sched.note_peak()
-            while sched.has_active():
+            while sched.has_active() or sched.queue:
+                for s in sched.expire_overdue():
+                    self._pool_retire(sched, alloc, ctx, s)
+                if not sched.has_active():
+                    if not self._await_backoff(sched):
+                        break
+                    refill()
+                    self.peak_active = sched.note_peak()
+                    continue
                 # materialize pages for this chunk's writes (clamped to
                 # max_len: the table is ⌈max_len/page⌉ wide and writes past
-                # it clamp to the garbage page in _paged_attn_step)
+                # it clamp to the garbage page in _paged_attn_step). A
+                # growth fault is rid-scoped: only that slot rolls back.
                 for s in range(b):
                     sl = sched.slots[s]
-                    if sl.live:
+                    if not sl.live:
+                        continue
+                    try:
+                        self._inj("page_alloc", sl.rid)
                         self._pool_grow(
                             sched, alloc, ctx, s,
                             min(sl.kv + chunk_n, self.sc.max_len),
                         )
+                    except InjectedFault as e:
+                        self._note_fault(e)
+                        self._pool_fault_slot(sched, alloc, ctx, s)
+                if not sched.has_active():
+                    continue
+                self._watchdog.start_step()
                 self._key, k = jax.random.split(self._key)
-                ctx.cache, tok, pos, toks = self._chunk(
-                    self.params, ctx.cache, tok, pos, k, chunk_n
-                )
-                toks_np = self._to_host(toks)  # one sync per chunk
+                try:
+                    self._inj("kernel_dispatch")
+                    cache2, tok2, pos2, toks = self._chunk(
+                        self.params, ctx.cache, tok, pos, k, chunk_n
+                    )
+                    self._inj("device_step")
+                    toks_np = self._sync(toks)  # one sync per chunk
+                except InjectedFault as e:
+                    # discard the uncommitted step and retry it — exact,
+                    # because committed host state never advanced
+                    self._on_step_fault(
+                        sched, e,
+                        lambda v: self._pool_fault_slot(sched, alloc, ctx, v),
+                    )
+                    continue
+                self._watchdog.end_step(self._bump_step())
+                self._clear_fault_streak()
+                ctx.cache, tok, pos = cache2, tok2, pos2
                 for s in sched.absorb_chunk(toks_np):
                     self._pool_retire(sched, alloc, ctx, s)
                 refill()
                 self.peak_active = sched.note_peak()
         except Exception:
-            self._reset_paged_state()
+            self._recover_paged(sched, alloc, ctx)
             raise
         self._paged_cache = ctx.cache
-        self.ttft = dict(sched.first_token_at)
-        self._stats["preemptions"] += sched.preemptions
+        self._finish_serve(sched)
         return sched.results_list()
 
     # ---- mixed varlen continuous batching (DESIGN.md §3.5 + §3.6) ----
-    def _serve_mixed(self, requests: List[np.ndarray], max_new_tokens: int,
-                     priorities=None) -> List[np.ndarray]:
+    def _serve_mixed(self, requests, max_new_tokens: int,
+                     priorities=None, deadlines=None) -> List[np.ndarray]:
         """Chunked-prefill continuous batching: ONE jitted packed varlen
         step per iteration, carrying every decoding slot's pending token
         and the next prefill chunks of admitted prompts.
@@ -845,8 +1143,8 @@ class Engine:
         lay = self._page_layout
         page = lay.page_size
         b = self.sc.max_batch
-        sched = Scheduler(requests, max_new_tokens, b, self.sc.eos_id,
-                          priorities=priorities)
+        sched = self._make_sched(requests, max_new_tokens, priorities,
+                                 deadlines)
         alloc, cache0 = self._paged_state()
         ctx = _PoolCtx(cache0)
         budget = self.sc.token_budget or (b + self.sc.prefill_chunk)
@@ -894,6 +1192,13 @@ class Engine:
                         f" pages but the pool holds {lay.n_pages - 1}"
                     )
                 sched.take_head()
+                try:
+                    self._inj("page_alloc", req.rid)
+                except InjectedFault as e:
+                    # fault isolation: only the request in hand rolls back
+                    self._note_fault(e)
+                    sched.retry_request(req)
+                    continue
                 seq = self._seq_base
                 self._seq_base += 1
                 alloc.admit(seq, prompt_len=n, reserve_tokens=reserve,
@@ -937,13 +1242,19 @@ class Engine:
                 if seg.emits:
                     last_rows[seg.slot] = o + n - 1
             self._key, k = jax.random.split(self._key)
-            ctx.cache, toks = self._mixed(
+            self._inj("kernel_dispatch")
+            cache2, toks = self._mixed(
                 self.params, ctx.cache,
                 jnp.asarray(tokens), jnp.asarray(seq_ids),
                 jnp.asarray(positions), jnp.asarray(kv_len),
                 jnp.asarray(last_rows), k, block_q,
             )
-            return self._to_host(toks)  # one sync per mixed step
+            self._inj("device_step")
+            toks_np = self._sync(toks)  # one sync per mixed step
+            # commit the device cache only past the sync: a step fault
+            # above discards the step entirely, so its retry is exact
+            ctx.cache = cache2
+            return toks_np
 
         def decode_chunk_phase():
             """No prefill in flight: the sequential engines' jitted
@@ -951,54 +1262,231 @@ class Engine:
             `decode_chunk` tokens). Device tok/pos are rebuilt from the
             scheduler's host state, so packed steps and chunk phases
             interleave freely; dead slots carry zeroed table rows, so
-            their lockstep writes land on the garbage page."""
+            their lockstep writes land on the garbage page. Returns None
+            when growth faults emptied the batch (nothing to step).
+            Growth faults are rid-scoped (only that slot rolls back);
+            dispatch/sync faults are step-wide and propagate to the
+            caller's retry handler."""
             for s in range(b):
                 sl = sched.slots[s]
-                if sl.live:
+                if not sl.live:
+                    continue
+                try:
+                    self._inj("page_alloc", sl.rid)
                     self._pool_grow(sched, alloc, ctx, s,
                                     min(sl.kv + chunk_n, self.sc.max_len))
+                except InjectedFault as e:
+                    self._note_fault(e)
+                    self._pool_fault_slot(sched, alloc, ctx, s)
+            if not sched.has_active():
+                return None
             tok = jnp.asarray([sl.pending for sl in sched.slots], jnp.int32)
             pos = jnp.asarray([sl.kv for sl in sched.slots], jnp.int32)
             self._key, k = jax.random.split(self._key)
-            ctx.cache, _, _, toks = self._chunk(
+            self._inj("kernel_dispatch")
+            cache2, _, _, toks = self._chunk(
                 self.params, ctx.cache, tok, pos, k, chunk_n
             )
-            return self._to_host(toks)  # one sync per chunk
+            self._inj("device_step")
+            toks_np = self._sync(toks)  # one sync per chunk
+            ctx.cache = cache2  # commit past the sync (see dispatch)
+            return toks_np
 
         def plan_grown() -> StepPlan:
-            """Plan a packed step and materialize its pages; any victim
-            preemption invalidates the plan (a dead slot's segment must
-            not dispatch), so re-plan until a whole pass stays stable."""
+            """Plan a packed step and materialize its pages; any slot
+            rollback — victim preemption, growth-fault requeue, or a
+            retry budget running out — invalidates the plan (a dead
+            slot's segment must not dispatch), so re-plan until a whole
+            growth pass stays stable."""
             while True:
                 plan = sched.plan_step(budget, pchunk)
-                p0 = sched.preemptions
+                r0 = sched.rollbacks
                 for seg in plan.segments:
                     end = min(seg.start + len(seg.tokens), self.sc.max_len)
-                    if end > alloc.seq_len(ctx.seq_of[seg.slot]):
-                        self._pool_grow(sched, alloc, ctx, seg.slot, end)
-                    if sched.preemptions != p0:
+                    try:
+                        if end > alloc.seq_len(ctx.seq_of[seg.slot]):
+                            self._inj("page_alloc", sched.slots[seg.slot].rid)
+                            self._pool_grow(sched, alloc, ctx, seg.slot, end)
+                    except InjectedFault as e:
+                        self._note_fault(e)
+                        self._pool_fault_slot(sched, alloc, ctx, seg.slot)
+                    if sched.rollbacks != r0:
                         break
-                if sched.preemptions == p0:
+                if sched.rollbacks == r0:
                     return plan
 
         try:
             try_admit()
             self.peak_active = sched.note_peak()
-            while sched.has_active():
-                if not any(sl.prefilling for sl in sched.slots):
-                    finished = sched.absorb_chunk(decode_chunk_phase())
-                else:
-                    plan = plan_grown()
-                    finished = sched.commit(plan, dispatch(plan))
+            while sched.has_active() or sched.queue:
+                for s in sched.expire_overdue():
+                    self._pool_retire(sched, alloc, ctx, s)
+                if not sched.has_active():
+                    if not self._await_backoff(sched):
+                        break
+                    try_admit()
+                    self.peak_active = sched.note_peak()
+                    continue
+                self._watchdog.start_step()
+                try:
+                    if not any(sl.prefilling for sl in sched.slots):
+                        toks_np = decode_chunk_phase()
+                        finished = (sched.absorb_chunk(toks_np)
+                                    if toks_np is not None else [])
+                    else:
+                        plan = plan_grown()
+                        finished = (sched.commit(plan, dispatch(plan))
+                                    if plan.segments else [])
+                except InjectedFault as e:
+                    # discard the uncommitted step and retry it — exact,
+                    # because committed host state never advanced
+                    self._on_step_fault(
+                        sched, e,
+                        lambda v: self._pool_fault_slot(sched, alloc, ctx, v),
+                    )
+                    continue
+                self._watchdog.end_step(self._bump_step())
+                self._clear_fault_streak()
                 note_prefilled()
                 for s in finished:
                     self._pool_retire(sched, alloc, ctx, s)
                 try_admit()
                 self.peak_active = sched.note_peak()
         except Exception:
-            self._reset_paged_state()
+            self._recover_paged(sched, alloc, ctx)
             raise
         self._paged_cache = ctx.cache
-        self.ttft = dict(sched.first_token_at)
-        self._stats["preemptions"] += sched.preemptions
+        self._finish_serve(sched)
         return sched.results_list()
+
+    # ---- crash recovery: serve-state snapshot / restore (DESIGN.md §3.7) ----
+    def snapshot(self, ckpt_dir: str, *, step: int = 0) -> str:
+        """Serialize the last serve() call's surviving state as a
+        metadata-only checkpoint (runtime/checkpoint.py, `tree=None`): the
+        scheduler's unfinished requests (live slots fold in exactly like a
+        preemption — prompt + tokens generated so far), finished results
+        and statuses, the radix cache's content as token chains, and the
+        pool geometry. No KV arrays are saved: FLASH-D's (O, Λ) carry
+        makes KV a pure function of the token stream, so `restore()`
+        recomputes it exactly. Call after a crash (serve() folds live
+        slots into the queue before re-raising) or between serves."""
+        from repro.runtime import checkpoint as ckpt
+
+        sched = self._sched
+        if sched is None:
+            raise RuntimeError("snapshot() before any serve()")
+        now = sched.now()
+        pending = [
+            Request(rid=sl.rid, prompt=np.asarray(sl.orig_prompt),
+                    out=list(sl.out), priority=sl.priority,
+                    deadline=sl.deadline, retries=sl.retries)
+            for sl in sched.slots if sl.live
+        ] + list(sched.queue)
+        state = {
+            "pending": sorted((
+                {"rid": int(r.rid),
+                 "prompt": np.asarray(r.prompt).astype(int).tolist(),
+                 "out": [int(t) for t in r.out],
+                 "priority": int(r.priority),
+                 # deadlines persist as REMAINING seconds: the restored
+                 # scheduler's clock starts at zero
+                 "deadline": (max(0.0, float(r.deadline) - now)
+                              if r.deadline is not None else None),
+                 "retries": int(r.retries)}
+                for r in pending), key=lambda d: d["rid"]),
+            "done": {str(i): np.asarray(r).astype(int).tolist()
+                     for i, r in enumerate(sched.results) if r is not None},
+            "status": {str(k): v for k, v in sched.status.items()},
+            "max_new_tokens": int(sched.max_new_tokens),
+            "seq_base": int(self._seq_base),
+            "chains": (self._alloc.cached_chains()
+                       if self._alloc is not None and self._cache_on else []),
+            "pool": ({"page_size": self._page_layout.page_size,
+                      "n_pages": self._page_layout.n_pages}
+                     if self._page_layout is not None else None),
+        }
+        return ckpt.save(ckpt_dir, step, None, extra={"engine_serve": state})
+
+    def restore(self, ckpt_dir: str, *, step: Optional[int] = None) -> dict:
+        """Load a `snapshot()` into THIS engine (typically a fresh one
+        after a crash): stashes the pending requests for `resume()` and
+        re-warms the radix prefix cache by replaying the snapshot's token
+        chains through prefill — recompute, not array restore, so the
+        rebuilt pages are exact. Chains are only replayed onto a matching
+        pool geometry (same page_size). Returns the raw state dict."""
+        from repro.runtime import checkpoint as ckpt
+
+        _, extra = ckpt.restore(ckpt_dir, None, step=step)
+        state = extra["engine_serve"]
+        self._seq_base = max(self._seq_base, int(state.get("seq_base", 0)))
+        pool = state.get("pool")
+        chains = state.get("chains") or []
+        if (chains and self._cache_on and self._page_layout is not None
+                and pool is not None
+                and int(pool["page_size"]) == self._page_layout.page_size):
+            with self._scope():
+                self._rewarm(chains)
+        self._resume_state = state
+        return state
+
+    def resume(self) -> Dict[int, np.ndarray]:
+        """Finish the restored snapshot's pending requests (one serve()
+        call, deadlines/retry budgets carried over) and return ALL results
+        keyed by the ORIGINAL request ids — already-finished requests come
+        straight from the snapshot. Token-identical to the uninterrupted
+        run: resumed requests re-enter through recompute-on-resume."""
+        state = self._resume_state
+        if state is None:
+            raise RuntimeError("resume() before restore()")
+        self._resume_state = None
+        done = {int(k): np.asarray(v, np.int32)
+                for k, v in state["done"].items()}
+        pending = state["pending"]
+        if pending:
+            reqs = [Request(rid=i, prompt=np.asarray(p["prompt"], np.int32),
+                            out=list(p["out"]), priority=int(p["priority"]),
+                            deadline=p["deadline"], retries=int(p["retries"]))
+                    for i, p in enumerate(pending)]
+            outs = self.serve(reqs, int(state["max_new_tokens"]),
+                              deadlines=[p["deadline"] for p in pending])
+            for p, o in zip(pending, outs):
+                done[int(p["rid"])] = o
+        return done
+
+    def _rewarm(self, chains: List[List[int]]) -> None:
+        """Replay radix-tree token chains into the (fresh) page pool:
+        admit a scratch sequence over batch slot 0, prefill the chain's
+        full pages, donate them back to the tree. Longest chains first so
+        shorter ones ride their cached prefixes; chains that no longer fit
+        (smaller pool) are skipped — the cache is a performance artifact,
+        not correctness state."""
+        alloc, cache = self._paged_state()
+        page = self._page_layout.page_size
+        cap = (self.sc.max_len // page) * page
+        for chain in sorted(chains, key=len, reverse=True):
+            toks = np.asarray(chain[:cap], np.int32)
+            n = (len(toks) // page) * page
+            if n < page:
+                continue
+            toks = toks[:n]
+            m = alloc.match_prefix(toks)
+            if m.n_tokens >= n:
+                continue  # covered by a longer chain's replay
+            cached = m if m.n_tokens > 0 else None
+            if not alloc.can_admit(n, cached=cached):
+                continue
+            seq = self._seq_base
+            self._seq_base += 1
+            alloc.admit(seq, prompt_len=n, reserve_tokens=n, cached=cached)
+            start = cached.n_tokens if cached is not None else 0
+            cache = self._set_tbl_row(cache, 0, alloc.table(seq))
+            view = _map_paged(cache, batch=lambda x: x[:, 0:1])
+            _, view = self._prefill_bucketed(toks, view, start_pos=start)
+            cache = _map_paged(
+                cache, view,
+                pool=lambda x, o: o,
+                batch=lambda x, o: x.at[:, 0].set(o[:, 0]),
+            )
+            alloc.donate(seq, toks)
+            cache = self._set_tbl_row(cache, 0, [])
+        self._paged_cache = cache

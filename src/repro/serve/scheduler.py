@@ -52,27 +52,52 @@ Time-to-first-token is tracked per REQUEST ID from enqueue (scheduler
 construction — every request is enqueued then) to the first token the
 request ever emits; re-admission after preemption never re-arms it, and a
 priority-swapped head keeps the waiting time it actually accrued.
+
+Request lifecycle (DESIGN.md §3.7): every request moves through
+QUEUED → RUNNING → one terminal status — DONE (EOS / max tokens),
+EXPIRED (deadline passed; cancelled exactly like EOS, with whatever it
+generated so far as its result), or FAILED (fault-retry budget
+exhausted). Faulted requests re-queue through the same recompute-on-
+resume path preemption uses (`retry_request` / `fault_slot`), charged
+against a per-request retry budget and deferred by `not_before`
+exponential backoff; within a priority class retried requests sort after
+fresh ones. Nothing is ever silently dropped: `results_list()` has an
+entry and `status` a terminal state for every rid once serving ends.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-__all__ = ["Request", "Scheduler", "Segment", "StepPlan", "Slot"]
+__all__ = [
+    "Request", "Scheduler", "Segment", "StepPlan", "Slot",
+    "QUEUED", "RUNNING", "DONE", "FAILED", "EXPIRED", "TERMINAL",
+]
+
+# ---- request lifecycle states ----
+QUEUED = "queued"
+RUNNING = "running"
+DONE = "done"
+FAILED = "failed"
+EXPIRED = "expired"
+TERMINAL = frozenset({DONE, FAILED, EXPIRED})
 
 
 @dataclasses.dataclass
 class Request:
-    """One queued unit of work, including preemption resume state."""
+    """One queued unit of work, including preemption/retry resume state."""
 
     rid: int
     prompt: np.ndarray  # the ORIGINAL prompt
     out: List[int] = dataclasses.field(default_factory=list)  # pre-preemption output
     priority: int = 0
+    deadline: Optional[float] = None  # scheduler-clock time after which it expires
+    retries: int = 0  # fault retries consumed so far
+    not_before: float = 0.0  # backoff gate: ineligible for admission before this
 
     @property
     def tokens(self) -> np.ndarray:
@@ -102,6 +127,8 @@ class Slot:
     fed: int = 0  # prompt tokens consumed by prefill chunks (mixed path)
     kv: int = 0  # KV positions materialized in the cache
     pending: int = 0  # next decode input token (mixed path)
+    deadline: Optional[float] = None  # scheduler-clock expiry (None = none)
+    retries: int = 0  # fault retries the request has consumed
 
     @property
     def live(self) -> bool:
@@ -140,22 +167,49 @@ class StepPlan:
 
 
 class Scheduler:
-    def __init__(self, requests: Sequence[np.ndarray], max_new_tokens: int,
-                 n_slots: int, eos_id: int,
-                 priorities: Optional[Sequence[int]] = None):
+    def __init__(self, requests: Sequence[Union[np.ndarray, Request]],
+                 max_new_tokens: int, n_slots: int, eos_id: int,
+                 priorities: Optional[Sequence[int]] = None,
+                 deadlines: Optional[Sequence[Optional[float]]] = None,
+                 max_retries: int = 3, retry_backoff_s: float = 0.0):
+        """`requests` items are prompts (np arrays) or `Request` objects —
+        the latter carry resume state (out/priority/deadline/retries) from
+        a snapshot restore; either way rids are re-assigned to index order.
+        `deadlines` are seconds from enqueue (None = no deadline);
+        `max_retries`/`retry_backoff_s` parameterize the fault-retry path
+        (`RetryPolicy` semantics, see runtime/resilience.py)."""
         if priorities is not None and len(priorities) != len(requests):
             raise ValueError("priorities must match requests 1:1")
+        if deadlines is not None and len(deadlines) != len(requests):
+            raise ValueError("deadlines must match requests 1:1")
         self.results: List[Optional[np.ndarray]] = [None] * len(requests)
-        self.queue: List[Request] = [
-            Request(rid=i, prompt=np.asarray(r),
-                    priority=int(priorities[i]) if priorities is not None else 0)
-            for i, r in enumerate(requests)
-        ]
+        self.queue: List[Request] = []
+        for i, r in enumerate(requests):
+            if isinstance(r, Request):
+                pr = int(priorities[i]) if priorities is not None else r.priority
+                dl = r.deadline if deadlines is None else deadlines[i]
+                self.queue.append(Request(
+                    rid=i, prompt=np.asarray(r.prompt), out=list(r.out),
+                    priority=pr, deadline=dl, retries=r.retries,
+                ))
+            else:
+                self.queue.append(Request(
+                    rid=i, prompt=np.asarray(r),
+                    priority=int(priorities[i]) if priorities is not None else 0,
+                    deadline=deadlines[i] if deadlines is not None else None,
+                ))
+        self.status: Dict[int, str] = {i: QUEUED for i in range(len(requests))}
         self.slots = [Slot() for _ in range(n_slots)]
         self.max_new_tokens = max_new_tokens
         self.eos_id = eos_id
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
         self.peak_active = 0
         self.preemptions = 0
+        self.retried = 0  # fault retries charged (requeues)
+        self.failed = 0  # requests terminal-FAILED (budget exhausted)
+        self.expired = 0  # requests terminal-EXPIRED (deadline passed)
+        self.rollbacks = 0  # preemptions + fault requeues (re-plan signal)
         self._admit_counter = 0
         # time-to-first-token per request id, seconds from enqueue (every
         # request enqueues at construction) to the first token the request
@@ -165,16 +219,26 @@ class Scheduler:
         self.first_token_at: Dict[int, float] = {}
         self._t0 = time.monotonic()
 
+    def now(self) -> float:
+        """Scheduler-clock time (seconds since construction/enqueue)."""
+        return time.monotonic() - self._t0
+
     def _mark_first_token(self, rid: int) -> None:
         if rid not in self.first_token_at:
-            self.first_token_at[rid] = time.monotonic() - self._t0
+            self.first_token_at[rid] = self.now()
 
     # ---- queue / admission (priority head-of-line) ----
     def _head_index(self) -> Optional[int]:
-        if not self.queue:
+        now = self.now()
+        ready = [i for i, q in enumerate(self.queue) if q.not_before <= now]
+        if not ready:
             return None
-        return min(range(len(self.queue)),
-                   key=lambda i: (-self.queue[i].priority, self.queue[i].rid))
+        # retried requests sort AFTER fresh ones of the same priority —
+        # the "exponential backoff ordering" half of the retry contract
+        # (the not_before gate above is the other half)
+        return min(ready, key=lambda i: (-self.queue[i].priority,
+                                         self.queue[i].retries,
+                                         self.queue[i].rid))
 
     def head(self) -> Optional[Request]:
         i = self._head_index()
@@ -183,6 +247,13 @@ class Scheduler:
     def take_head(self) -> Optional[Request]:
         i = self._head_index()
         return self.queue.pop(i) if i is not None else None
+
+    def next_ready_in(self) -> Optional[float]:
+        """Seconds until the earliest backing-off queued request becomes
+        eligible; None when nothing is waiting on backoff."""
+        now = self.now()
+        waits = [q.not_before - now for q in self.queue if q.not_before > now]
+        return min(waits) if waits else None
 
     def free_slot(self) -> Optional[int]:
         for s, slot in enumerate(self.slots):
@@ -227,11 +298,66 @@ class Scheduler:
         sl = self.slots[slot]
         assert sl.live, "preempting a dead slot"
         req = Request(rid=sl.rid, prompt=np.asarray(sl.orig_prompt),
-                      out=list(sl.out), priority=sl.priority)
-        self.queue.append(req)  # head() orders by (priority, rid)
+                      out=list(sl.out), priority=sl.priority,
+                      deadline=sl.deadline, retries=sl.retries)
+        self.queue.append(req)  # head() orders by (priority, retries, rid)
+        self.status[sl.rid] = QUEUED
         self.slots[slot] = Slot()
         self.preemptions += 1
+        self.rollbacks += 1
         return req
+
+    # ---- fault retries (DESIGN.md §3.7) ----
+    def retry_request(self, req: Request, *, backoff_s: Optional[float] = None) -> bool:
+        """Charge a faulted request (held by the caller, not slot-resident)
+        one retry and re-queue it behind an exponential-backoff gate.
+        Returns False — and records the terminal FAILED result (tokens
+        generated so far, like EOS does) — when the budget is exhausted."""
+        req.retries += 1
+        self.rollbacks += 1  # FAILED invalidates a step plan like a requeue
+        if req.retries > self.max_retries:
+            self.finish(req.rid, list(req.out), status=FAILED)
+            return False
+        base = self.retry_backoff_s if backoff_s is None else backoff_s
+        req.not_before = self.now() + base * (2 ** (req.retries - 1))
+        self.status[req.rid] = QUEUED
+        self.queue.append(req)
+        self.retried += 1
+        return True
+
+    def fault_slot(self, slot: int, *, backoff_s: Optional[float] = None) -> bool:
+        """Roll a faulted LIVE slot back like `preempt`, but charged as a
+        retry: its committed tokens ride along (recompute-on-resume keeps
+        the stream token-identical), its budget is debited, and re-
+        admission waits out the backoff. Returns False when the request
+        went terminal-FAILED instead. Caller releases the slot's memory
+        either way."""
+        sl = self.slots[slot]
+        assert sl.live, "faulting a dead slot"
+        req = Request(rid=sl.rid, prompt=np.asarray(sl.orig_prompt),
+                      out=list(sl.out), priority=sl.priority,
+                      deadline=sl.deadline, retries=sl.retries)
+        self.slots[slot] = Slot()
+        return self.retry_request(req, backoff_s=backoff_s)
+
+    # ---- deadlines ----
+    def expire_overdue(self) -> List[int]:
+        """Cancel every queued or live request whose deadline has passed —
+        exactly like EOS: whatever it generated so far is its result,
+        status EXPIRED. Returns the newly expired LIVE slots (the engine
+        releases their memory, then `retire`s them)."""
+        now = self.now()
+        expired_slots: List[int] = []
+        for i in reversed(range(len(self.queue))):
+            q = self.queue[i]
+            if q.deadline is not None and now > q.deadline:
+                self.queue.pop(i)
+                self.finish(q.rid, list(q.out), status=EXPIRED)
+        for s, sl in enumerate(self.slots):
+            if sl.live and sl.deadline is not None and now > sl.deadline:
+                self.finish(sl.rid, list(sl.out), status=EXPIRED)
+                expired_slots.append(s)
+        return expired_slots
 
     # ---- completion ----
     def _done(self, out: List[int]) -> bool:
@@ -239,8 +365,18 @@ class Scheduler:
             self.eos_id >= 0 and out[-1] == self.eos_id
         )
 
-    def finish(self, rid: int, out: List[int]) -> None:
+    def finish(self, rid: int, out: List[int], status: str = DONE) -> None:
+        assert status in TERMINAL, f"finish with non-terminal status {status!r}"
         self.results[rid] = np.asarray(out, np.int32)
+        self.status[rid] = status
+        if status == FAILED:
+            self.failed += 1
+        elif status == EXPIRED:
+            self.expired += 1
+
+    def all_terminal(self) -> bool:
+        """Lifecycle guarantee: every request reached a terminal status."""
+        return all(s in TERMINAL for s in self.status.values())
 
     def admit_request(self, slot: int, req: Request, first_token: int) -> bool:
         """Sequential-path admission of a (possibly resumed) request: the
@@ -259,10 +395,13 @@ class Scheduler:
         sl.orig_prompt = np.asarray(req.prompt)
         sl.resumed = len(req.out)
         sl.priority = req.priority
+        sl.deadline = req.deadline
+        sl.retries = req.retries
         sl.admit_seq = self._admit_counter
         self._admit_counter += 1
         sl.fed = sl.kv = len(sl.prompt)
         sl.pending = first_token
+        self.status[req.rid] = RUNNING
         return True
 
     def admit_or_finish(self, slot: int, rid: int, prompt: np.ndarray,
@@ -283,10 +422,13 @@ class Scheduler:
         sl.orig_prompt = np.asarray(req.prompt)
         sl.resumed = len(req.out)
         sl.priority = req.priority
+        sl.deadline = req.deadline
+        sl.retries = req.retries
         sl.admit_seq = self._admit_counter
         self._admit_counter += 1
         sl.fed = sl.kv = fed0
         sl.pending = 0
+        self.status[req.rid] = RUNNING
 
     def admit_prefilling(self, slot: int, rid: int, prompt: np.ndarray) -> None:
         """Legacy mixed-path admission (fresh request, priority 0)."""

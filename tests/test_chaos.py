@@ -1,0 +1,362 @@
+"""Chaos differential suite for the fault-tolerant serving runtime
+(DESIGN.md §3.7).
+
+The acceptance contract, exercised across all three serve loops
+(contiguous, paged sequential, mixed varlen) under seeded fault
+injection at every site (page_alloc / kernel_dispatch / device_step /
+host_sync):
+
+  * every request ends TERMINAL — done, failed, or expired; never
+    silently dropped (a FAILED request is reported, not vanished);
+  * every request that still completes is TOKEN-IDENTICAL to the
+    fault-free run (faults charge retries and reorder work, but never
+    corrupt a surviving stream — recompute-on-resume over FLASH-D's
+    (O, Λ) carry is exact);
+  * the page pool's refcount/table/tree invariants hold after recovery
+    (`PagedKVAllocator.check()`);
+  * a hard mid-serve crash round-trips through `snapshot()` → fresh
+    engine → `restore()` → `resume()` with full token identity and a
+    re-warmed radix cache;
+  * repeated kernel faults downgrade a `*_pallas` impl to its jnp twin
+    and the serve still completes.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import paper_llama
+from repro.models import get_model
+from repro.runtime.resilience import RetryPolicy
+from repro.serve import (
+    DONE,
+    EXPIRED,
+    TERMINAL,
+    Engine,
+    EngineCrash,
+    FaultInjector,
+    Request,
+    Scheduler,
+    ServeConfig,
+)
+
+MODES = ("contig", "paged", "mixed")
+
+
+def _cfg(**kw):
+    return dataclasses.replace(
+        paper_llama.CONFIG, n_layers=1, d_model=32, n_heads=2, n_kv_heads=1,
+        d_ff=64, head_dim=16, vocab_size=64, vocab_pad_multiple=64, **kw,
+    )
+
+
+def _sc(mode: str, **kw) -> ServeConfig:
+    base = dict(max_batch=2, max_len=32)
+    if mode == "paged":
+        base.update(kv_layout="paged", page_size=4, kv_pool_tokens=96)
+    elif mode == "mixed":
+        base.update(kv_layout="paged", page_size=4, kv_pool_tokens=96,
+                    step_mode="mixed")
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+N_NEW = 6
+
+
+@pytest.fixture(scope="module")
+def chaos_fixture():
+    cfg = _cfg()
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(1, cfg.vocab_size, (n,)).astype(np.int32)
+               for n in (5, 9, 13, 7)]
+    baselines = {
+        mode: Engine(params, cfg, _sc(mode)).serve(prompts, N_NEW)
+        for mode in MODES
+    }
+    return cfg, params, prompts, baselines
+
+
+# ---------------------------------------------------------------------------
+# injector / policy primitives
+# ---------------------------------------------------------------------------
+
+def test_injector_deterministic():
+    """Same seed + same call sequence → the same faults fire; a schedule
+    entry fires at exactly its occurrence index."""
+    def trace(inj, n=40):
+        out = []
+        for i in range(n):
+            site = FaultInjector.SITES[i % 4]
+            try:
+                inj.check(site, rid=i)
+                out.append(0)
+            except Exception:
+                out.append(1)
+        return out
+
+    a = trace(FaultInjector(rate=0.3, seed=11))
+    b = trace(FaultInjector(rate=0.3, seed=11))
+    assert a == b and sum(a) > 0
+    assert trace(FaultInjector(rate=0.3, seed=12)) != a
+
+    inj = FaultInjector(schedule=[("device_step", 2)])
+    fired = []
+    for i in range(5):
+        try:
+            inj.check("device_step")
+        except Exception:
+            fired.append(i)
+    assert fired == [2]
+    assert inj.calls["device_step"] == 5 and inj.fired["device_step"] == 1
+
+
+def test_injector_crash_after_checks():
+    inj = FaultInjector(crash_after_checks=3)
+    for _ in range(3):
+        inj.check("host_sync")
+    with pytest.raises(EngineCrash):
+        inj.check("host_sync")
+    inj.check("host_sync")  # crashes once, then resumes clean
+
+
+def test_retry_policy():
+    p = RetryPolicy(max_retries=4, backoff_base_s=0.5, backoff_max_s=3.0,
+                    jitter=0.0, retryable=(ValueError, KeyError))
+    assert p.is_retryable(ValueError("x")) and p.is_retryable(KeyError("y"))
+    assert not p.is_retryable(RuntimeError("z"))
+    delays = [p.delay_s(a) for a in range(1, 6)]
+    assert delays[:3] == [0.5, 1.0, 2.0]  # exponential
+    assert delays[3] == 3.0 and delays[4] == 3.0  # capped
+    pj = dataclasses.replace(p, jitter=0.5)
+    assert pj.delay_s(2) == pj.delay_s(2)  # jitter is seeded-deterministic
+    assert pj.delay_s(2, seed=1) != pj.delay_s(2, seed=2)
+
+
+def test_scheduler_retry_ordering():
+    """A retried request sorts AFTER fresh requests of the same priority
+    and is gated by its backoff window."""
+    sched = Scheduler([np.asarray([1, 2])] * 3, 4, 1, eos_id=-1,
+                      max_retries=3, retry_backoff_s=0.0)
+    first = sched.take_head()
+    assert first.rid == 0
+    assert sched.retry_request(first)  # requeued, retries=1
+    assert sched.head().rid == 1  # fresh rids 1, 2 outrank the retry
+    assert sched.retried == 1 and sched.rollbacks == 1
+
+    gated = Scheduler([np.asarray([1, 2])], 4, 1, eos_id=-1,
+                      max_retries=3, retry_backoff_s=60.0)
+    r = gated.take_head()
+    assert gated.retry_request(r)
+    assert gated.head() is None  # backoff gate: not eligible yet
+    assert gated.next_ready_in() > 0
+    r.not_before = 0.0  # force eligibility: the gate is the only barrier
+    assert gated.head().rid == 0
+
+
+def test_scheduler_retry_budget_exhaustion():
+    sched = Scheduler([np.asarray([1, 2])], 4, 1, eos_id=-1, max_retries=1)
+    req = sched.take_head()
+    assert sched.retry_request(req)  # 1st retry: within budget
+    req = sched.take_head()
+    assert not sched.retry_request(req)  # 2nd: budget out → FAILED
+    assert sched.status[0] == "failed" and sched.failed == 1
+    assert sched.all_terminal()
+
+
+# ---------------------------------------------------------------------------
+# chaos differential: any seed, any rate, any loop
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10**6),
+    rate=st.floats(min_value=0.05, max_value=0.35),
+    mode=st.sampled_from(MODES),
+)
+def test_chaos_differential(chaos_fixture, seed, rate, mode):
+    """Under an arbitrary seeded fault schedule: no request is dropped,
+    survivors are token-identical to the fault-free run, and the pool
+    invariants hold afterwards."""
+    cfg, params, prompts, baselines = chaos_fixture
+    eng = Engine(params, cfg, _sc(mode),
+                 fault_injector=FaultInjector(rate=rate, seed=seed))
+    outs = eng.serve(prompts, N_NEW)
+    st_ = eng.stats()
+    status = st_["request_status"]
+    assert set(status) == set(range(len(prompts)))
+    assert all(s in TERMINAL for s in status.values()), status
+    for i, base in enumerate(baselines[mode]):
+        if status[i] == DONE:
+            np.testing.assert_array_equal(base, outs[i])
+        else:  # failed/expired: partial output is a prefix of the stream
+            np.testing.assert_array_equal(base[: len(outs[i])], outs[i])
+    if eng._alloc is not None:
+        eng._alloc.check()
+    # conservation: every fault was either absorbed (retry/failure) or
+    # the serve would not have terminated
+    assert st_["failed"] == sum(s == "failed" for s in status.values())
+
+
+def test_chaos_every_request_fails_still_terminates(chaos_fixture):
+    """rate=1.0 — every check fires. The serve must still terminate with
+    every request FAILED (budgets bound the total work) and the engine
+    must stay usable."""
+    cfg, params, prompts, baselines = chaos_fixture
+    for mode in MODES:
+        eng = Engine(params, cfg, _sc(mode, max_retries=2),
+                     fault_injector=FaultInjector(rate=1.0, seed=0))
+        outs = eng.serve(prompts, N_NEW)
+        status = eng.stats()["request_status"]
+        assert all(s == "failed" for s in status.values()), (mode, status)
+        assert all(len(o) == 0 for o in outs)
+        if eng._alloc is not None:
+            eng._alloc.check()
+        # the injector dies with the chaos run, not the engine: a fresh
+        # fault-free serve on the same engine works
+        eng._injector = None
+        got = eng.serve(prompts, N_NEW)
+        for b, g in zip(baselines[mode], got):
+            np.testing.assert_array_equal(b, g)
+
+
+def test_targeted_fault_isolation(chaos_fixture):
+    """A request whose budget is exhausted goes FAILED while its live
+    neighbors finish token-identically — per-request isolation, not the
+    pre-PR-6 whole-pool reset."""
+    cfg, params, prompts, baselines = chaos_fixture
+    for mode in MODES:
+        # page_alloc occurrence 0 is the FIRST admission (rid 0: highest
+        # head-of-line rank); max_retries=0 makes that one fault terminal
+        site = "page_alloc" if mode != "contig" else "kernel_dispatch"
+        eng = Engine(params, cfg, _sc(mode, max_retries=0),
+                     fault_injector=FaultInjector(schedule=[(site, 0)]))
+        outs = eng.serve(prompts, N_NEW)
+        status = eng.stats()["request_status"]
+        assert status[0] == "failed", (mode, status)
+        assert all(status[i] == DONE for i in range(1, len(prompts)))
+        for i in range(1, len(prompts)):
+            np.testing.assert_array_equal(baselines[mode][i], outs[i])
+
+
+def test_deadline_expiry(chaos_fixture):
+    """An overdue request is cancelled exactly like EOS: status EXPIRED,
+    result = whatever it generated (a prefix of the fault-free stream);
+    requests without deadlines are untouched."""
+    cfg, params, prompts, baselines = chaos_fixture
+    for mode in MODES:
+        eng = Engine(params, cfg, _sc(mode))
+        outs = eng.serve(prompts, N_NEW,
+                         deadlines=[None, 0.0, None, 0.0])
+        status = eng.stats()["request_status"]
+        assert status[1] == EXPIRED and status[3] == EXPIRED, (mode, status)
+        assert status[0] == DONE and status[2] == DONE
+        for i in (0, 2):
+            np.testing.assert_array_equal(baselines[mode][i], outs[i])
+        for i in (1, 3):
+            np.testing.assert_array_equal(
+                baselines[mode][i][: len(outs[i])], outs[i])
+
+
+# ---------------------------------------------------------------------------
+# crash → snapshot → restore → resume
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", MODES)
+def test_snapshot_restore_roundtrip(chaos_fixture, tmp_path, mode):
+    """Kill the engine mid-serve, snapshot, restore into a FRESH engine,
+    resume: every request's final stream is token-identical to the
+    uninterrupted run, and (paged modes) the radix cache comes back warm
+    from token chains alone — no KV arrays in the checkpoint."""
+    cfg, params, prompts, baselines = chaos_fixture
+    eng = Engine(params, cfg, _sc(mode),
+                 fault_injector=FaultInjector(crash_after_checks=8))
+    with pytest.raises(EngineCrash):
+        eng.serve(prompts, N_NEW)
+    eng.snapshot(str(tmp_path))
+
+    eng2 = Engine(params, cfg, _sc(mode))
+    state = eng2.restore(str(tmp_path))
+    assert state["pending"]  # the crash left unfinished requests
+    results = eng2.resume()
+    assert set(results) == set(range(len(prompts)))
+    for i, base in enumerate(baselines[mode]):
+        np.testing.assert_array_equal(base, results[i])
+    if mode != "contig":
+        # chains re-warmed the radix tree: the resumed prefills hit it
+        assert eng2.stats()["hit_tokens"] > 0
+        eng2._alloc.check()
+
+
+def test_snapshot_between_serves(chaos_fixture, tmp_path):
+    """snapshot() is also valid at rest (no crash): it carries the done
+    results and the warm cache of a completed serve."""
+    cfg, params, prompts, baselines = chaos_fixture
+    eng = Engine(params, cfg, _sc("paged"))
+    eng.serve(prompts, N_NEW)
+    eng.snapshot(str(tmp_path))
+    eng2 = Engine(params, cfg, _sc("paged"))
+    state = eng2.restore(str(tmp_path))
+    assert not state["pending"]
+    results = eng2.resume()
+    for i, base in enumerate(baselines["paged"]):
+        np.testing.assert_array_equal(base, results[i])
+    # the restored cache serves the same prompts warm
+    eng2.serve(prompts, N_NEW)
+    assert eng2.stats()["hit_tokens"] > 0
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation
+# ---------------------------------------------------------------------------
+
+def test_kernel_fault_downgrades_to_jnp(chaos_fixture):
+    """`downgrade_after` consecutive kernel-site faults on a `*_pallas`
+    impl flip the engine to the registered jnp fallback and the serve
+    completes (the streak, not total faults, is what triggers it)."""
+    cfg, params, prompts, _ = chaos_fixture
+    pcfg = dataclasses.replace(cfg, attn_impl="flashd_pallas")
+    papi = get_model(pcfg)
+    pparams = papi.init(jax.random.PRNGKey(0), pcfg)
+    inj = FaultInjector(schedule=[("kernel_dispatch", i) for i in range(3)])
+    eng = Engine(pparams, pcfg, ServeConfig(
+        max_batch=1, max_len=32, downgrade_after=3, max_retries=8),
+        fault_injector=inj)
+    outs = eng.serve(prompts[:1], N_NEW)
+    st_ = eng.stats()
+    assert st_["downgrades"] == 1 and st_["attn_impl"] == "flashd"
+    assert st_["request_status"][0] == DONE and len(outs[0]) == N_NEW
+
+
+def test_fallback_registry_covers_all_ops():
+    from repro.kernels import ops
+
+    for name in ops.op_names():
+        assert callable(ops.get_fallback(name))
+    assert ops.fallback_impl("flashd_pallas") == "flashd"
+    assert ops.fallback_impl("fa2_pallas") == "fa2"
+    assert ops.fallback_impl("flashd") == "flashd"  # nothing to downgrade
+
+
+# ---------------------------------------------------------------------------
+# request lifecycle API
+# ---------------------------------------------------------------------------
+
+def test_serve_accepts_request_objects(chaos_fixture):
+    """serve() takes Request objects carrying resume state: out-tokens
+    replay through recompute-on-resume (the snapshot/restore path uses
+    exactly this)."""
+    cfg, params, prompts, baselines = chaos_fixture
+    base = baselines["contig"]
+    half = [Request(rid=i, prompt=prompts[i], out=list(base[i][:2]))
+            for i in range(len(prompts))]
+    eng = Engine(params, cfg, _sc("contig"))
+    outs = eng.serve(half, N_NEW)
+    for b, g in zip(base, outs):
+        np.testing.assert_array_equal(b, g)

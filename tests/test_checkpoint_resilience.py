@@ -103,6 +103,63 @@ def test_restart_identical_loss_curve(tmp_path):
         np.testing.assert_allclose(got[i], ref_losses[i], rtol=1e-6, atol=1e-6)
 
 
+def test_run_resilient_retryable_tuple(tmp_path):
+    """Only exception types in the policy's `retryable` tuple restart the
+    loop; anything else propagates immediately (default: RuntimeError,
+    the historical behavior)."""
+    from repro.runtime.resilience import RetryPolicy
+
+    class Flaky(Exception):
+        pass
+
+    def make_fail_once(exc_type):
+        box = {"done": False}
+
+        def fail_at(step):
+            if step == 2 and not box["done"]:
+                box["done"] = True
+                raise exc_type("simulated")
+            return False
+
+        return fail_at
+
+    def init_state():
+        return {"x": jnp.zeros((2,))}
+
+    def step_fn(state, data_step):
+        return state, {"loss": 0.0}
+
+    # not retryable under the default policy → propagates
+    with pytest.raises(Flaky):
+        run_resilient(
+            ckpt_dir=str(tmp_path / "a"), init_state_fn=init_state,
+            step_fn=step_fn, total_steps=5, ckpt_every=2,
+            fail_at=make_fail_once(Flaky),
+        )
+    # retryable under a widened policy → restarts and completes
+    _, history = run_resilient(
+        ckpt_dir=str(tmp_path / "b"), init_state_fn=init_state,
+        step_fn=step_fn, total_steps=5, ckpt_every=2,
+        fail_at=make_fail_once(Flaky),
+        retry=RetryPolicy(retryable=(Flaky,)),
+    )
+    assert len(history) == 5
+
+
+def test_straggler_end_step_without_start_is_noop():
+    """`end_step` with no matching `start_step` (e.g. the serve loop bailed
+    before the watchdog armed) must measure nothing instead of raising —
+    the pre-PR-6 TypeError."""
+    mon = StragglerMonitor()
+    mon.end_step(0)  # no start_step, no elapsed: no-op
+    assert mon.ewma is None
+    mon.start_step()
+    mon.end_step(1)
+    assert mon.ewma is not None  # armed pairs still measure
+    mon.end_step(2, elapsed=0.25)  # explicit elapsed bypasses the timer
+    assert len(mon.deviations) == 1
+
+
 def test_straggler_monitor_flags_outlier():
     events = []
     mon = StragglerMonitor(threshold=3.0, warmup=3,
