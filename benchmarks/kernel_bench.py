@@ -128,7 +128,129 @@ def run(report):
     _emit_json("BENCH_serve.json", _bench_serve(report, smoke))
     _emit_json("BENCH_prefix.json", _bench_prefix(report, smoke))
     _emit_json("BENCH_chaos.json", _bench_chaos(report, smoke))
+    _emit_json("BENCH_train.json", _bench_train(report, smoke))
     _emit_json("BENCH_ring.json", _bench_ring(report, smoke))
+
+
+def _bench_train(report, smoke: bool) -> dict:
+    """Training with the FLASH-D fwd+bwd pair (DESIGN.md §6).
+
+    Two asserted bars:
+
+    1. **throughput** — full jitted train step (value_and_grad + AdamW)
+       with `attn_impl="flashd"` (the tiled custom_vjp pair, algorithmic
+       mirror of the Pallas kernels) vs `"xla"` (plain softmax attention
+       with no custom_vjp — XLA saves the [S,S] probs for the backward,
+       the seed-era baseline). At S where the [S,S] residuals hurt, the
+       recompute-from-(q,k,Λ) backward must win: flashd tokens/s ≥ xla.
+       (Pallas interpret mode is a Python emulator — TPU wall-times are
+       out of scope for this container, so the fused pair's own bar is
+       the jnp mirror, same policy as the kernel bars above.)
+
+    2. **goodput under chaos** — `train_resilient` at 0% / 10% train-site
+       fault injection: goodput = committed steps / total step executions
+       (replays after a restart are the waste). Asserted: 1.0 at rate 0,
+       ≥ 0.5 at 10%, and the final loss BITWISE identical across rates —
+       chaos costs throughput, never correctness.
+    """
+    import dataclasses as _dc
+    import tempfile as _tf
+
+    from repro.configs import paper_llama
+    from repro.data import DataConfig, SyntheticLM
+    from repro.runtime.resilience import FaultInjector
+    from repro.train import (
+        ResilienceConfig, TrainConfig, init_train_state, make_train_step,
+        train_resilient,
+    )
+
+    out: dict = {"throughput": {}, "goodput": {}}
+
+    # ---- 1. train-step throughput: flashd pair vs xla baseline ----
+    S = 512 if smoke else 1024
+    B = 2
+
+    def tok_per_s(impl):
+        cfg = _dc.replace(
+            paper_llama.CONFIG, n_layers=2, d_model=128, n_heads=4,
+            n_kv_heads=2, d_ff=256, head_dim=32, vocab_size=256,
+            vocab_pad_multiple=64, attn_impl=impl,
+        )
+        tc = TrainConfig(warmup_steps=2, total_steps=100)
+        data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=S,
+                                      global_batch=B))
+        state = init_train_state(jax.random.PRNGKey(0), cfg, tc)
+        step = jax.jit(make_train_step(cfg, tc))
+        batch = jax.tree.map(jnp.asarray, data.batch(0))
+        state, m = step(state, batch)
+        jax.block_until_ready(m["loss"])  # compile + warm
+        best = float("inf")
+        for i in range(5):
+            batch = jax.tree.map(jnp.asarray, data.batch(i + 1))
+            t0 = time.perf_counter()
+            state, m = step(state, batch)
+            jax.block_until_ready(m["loss"])
+            best = min(best, time.perf_counter() - t0)
+        return B * S / best
+
+    tok = {impl: tok_per_s(impl) for impl in ("flashd", "xla")}
+    on_tpu = jax.devices()[0].platform == "tpu"
+    if on_tpu:  # the fused pair's real wall-time bar — TPU only
+        tok["flashd_pallas"] = tok_per_s("flashd_pallas")
+    out["throughput"] = {
+        "shape": {"batch": B, "seq_len": S, "d_model": 128, "n_layers": 2},
+        "tokens_per_sec": tok,
+        "flashd_over_xla": tok["flashd"] / tok["xla"],
+        "pallas_measured": on_tpu,
+    }
+    for impl, t in tok.items():
+        report(f"train_step_{impl}_tok_per_s", t, f"B={B} S={S}")
+    report("train_flashd_over_xla", tok["flashd"] / tok["xla"],
+           "fused-pair mirror vs [S,S]-residual baseline (≥1 target)")
+    floor = 0.9 if smoke else 1.0  # smoke shape's margin is thin on CPU
+    assert tok["flashd"] >= floor * tok["xla"], tok
+
+    # ---- 2. goodput under train-site fault injection ----
+    cfg = _dc.replace(
+        paper_llama.CONFIG, n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+        d_ff=64, head_dim=16, vocab_size=64, vocab_pad_multiple=64,
+    )
+    tc = TrainConfig(warmup_steps=2, total_steps=50)
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                                  global_batch=4))
+    total = 12 if smoke else 24
+    final_loss = {}
+    for rate in (0.0, 0.10):
+        inj = (FaultInjector(rate, seed=7, sites=FaultInjector.TRAIN_SITES)
+               if rate > 0 else None)
+        executions = [0]
+        with _tf.TemporaryDirectory() as d:
+            t0 = time.perf_counter()
+            state, hist, ctr = train_resilient(
+                ckpt_dir=d, model_cfg=cfg, train_cfg=tc, data=data,
+                total_steps=total,
+                res=ResilienceConfig(ckpt_every=3, max_restarts=1000),
+                injector=inj,
+                on_step=lambda s, m, c: executions.__setitem__(0, executions[0] + 1),
+            )
+            wall = time.perf_counter() - t0
+        goodput = total / max(executions[0], total)
+        final_loss[rate] = hist[-1]["loss"]
+        out["goodput"][f"{rate:.2f}"] = {
+            "goodput": goodput,
+            "committed_steps": total,
+            "step_executions": executions[0],
+            "restarts": ctr["restarts"],
+            "faults": ctr["faults"],
+            "wall_s": wall,
+            "final_loss": final_loss[rate],
+        }
+        report(f"train_chaos_rate{int(rate * 100):02d}_goodput", goodput,
+               f"{ctr['restarts']} restarts, {ctr['faults']} faults")
+    assert out["goodput"]["0.00"]["goodput"] == 1.0
+    assert out["goodput"]["0.10"]["goodput"] >= 0.5, out["goodput"]
+    assert final_loss[0.0] == final_loss[0.10], final_loss  # bitwise
+    return out
 
 
 _RING_PROG = r"""

@@ -4,12 +4,17 @@
 `decode_attention` — single-token decode against a KV cache with dynamic
                      length; optional split-K with FLASH-D sigmoid merging.
 
-impl ∈ {'flashd', 'fa2', 'naive', 'flashd_pallas', 'fa2_pallas'}:
+impl ∈ {'flashd', 'fa2', 'naive', 'xla', 'flashd_pallas', 'fa2_pallas'}:
   flashd / fa2  — pure-jnp tiled recurrences (run on any backend; these are
                   what the CPU-hosted dry-run lowers).
   *_pallas      — Pallas TPU kernels from repro.kernels (interpret mode on
                   CPU; real kernels on TPU).
-  naive         — O(S²) softmax oracle.
+  naive         — O(S²) softmax oracle (custom_vjp with the tiled backward,
+                  like every impl above).
+  xla           — O(S²) softmax DIFFERENTIATED BY XLA: no custom_vjp, the
+                  [S, S] probability matrix is saved for the backward. The
+                  seed-era training baseline BENCH_train.json compares the
+                  fused fwd+bwd pair against (DESIGN.md §6).
 """
 
 from __future__ import annotations
@@ -23,7 +28,6 @@ import jax.numpy as jnp
 from repro.core.blockwise import (
     MaskSpec,
     NEG_INF,
-    blockwise_backward,
     blockwise_fa2,
     blockwise_flashd,
     merge_partials,
@@ -97,41 +101,25 @@ def _attention_core_fwd(q, k, v, mask, scale, impl, block_q, block_k, skip):
 
 
 def _attention_core_bwd(mask, scale, impl, block_q, block_k, skip, res, do):
+    """Backward from saved (q, k, v, O, Λ) through the `attention_bwd`
+    registry op (kernels/ops.py): `*_pallas` impls run the fused Pallas
+    kernel, everything else its jnp fallback twin — which keeps the jnp
+    mirror the differential oracle for the training path (DESIGN.md §6).
+    Both recompute score tiles from (q, k, Λ); no [Sq, Skv] intermediate
+    is ever saved by the forward."""
     q, k, v, o, lam = res
-    b, sq, hq, d = q.shape
-    hkv = k.shape[2]
-    g = hq // hkv
-    dv_ = v.shape[-1]
-    if impl.endswith("_pallas"):
-        from repro.kernels import ops as kernel_ops
-        from repro.kernels.flashd_bwd import flashd_bwd_pallas
+    b, sq, hq, _ = q.shape
+    from repro.kernels import ops as kernel_ops  # lazy: avoid import cycle
 
-        dq, dk, dv = flashd_bwd_pallas(
-            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
-            v.transpose(0, 2, 1, 3), o.transpose(0, 2, 1, 3),
-            lam.reshape(b, hq, sq), do.transpose(0, 2, 1, 3),
-            mask=mask, scale=scale, block_q=block_q, block_k=block_k,
-            interpret=not kernel_ops.on_tpu(),
-        )
-        return (
-            dq.transpose(0, 2, 1, 3), dk.transpose(0, 2, 1, 3),
-            dv.transpose(0, 2, 1, 3),
-        )
-    qg = q.transpose(0, 2, 1, 3).reshape(b, hkv, g, sq, d)
-    og = o.transpose(0, 2, 1, 3).reshape(b, hkv, g, sq, dv_)
-    dog = do.transpose(0, 2, 1, 3).reshape(b, hkv, g, sq, dv_)
-    kg = k.transpose(0, 2, 1, 3)
-    vg = v.transpose(0, 2, 1, 3)
-
-    fn = functools.partial(blockwise_backward, mask=mask, scale=scale, block_k=block_k)
-    fn = jax.vmap(fn, in_axes=(0, None, None, 0, 0, 0))  # over G
-    fn = jax.vmap(fn)  # over Hkv
-    fn = jax.vmap(fn)  # over B
-    dq, dk, dv = fn(qg, kg, vg, og, lam, dog)
-    dq = dq.reshape(b, hq, sq, d).transpose(0, 2, 1, 3).astype(q.dtype)
-    dk = jnp.sum(dk, axis=2).transpose(0, 2, 1, 3).astype(k.dtype)  # sum over G
-    dv = jnp.sum(dv, axis=2).transpose(0, 2, 1, 3).astype(v.dtype)
-    return dq, dk, dv
+    op = (
+        kernel_ops.get_op("attention_bwd")
+        if impl.endswith("_pallas")
+        else kernel_ops.get_fallback("attention_bwd")
+    )
+    return op(
+        q, k, v, o, lam.reshape(b, hq, sq), do,
+        mask=mask, scale=scale, impl=impl, block_q=block_q, block_k=block_k,
+    )
 
 
 _attention_core.defvjp(
@@ -140,6 +128,29 @@ _attention_core.defvjp(
     ),
     _attention_core_bwd,
 )
+
+
+def _xla_attention(q, k, v, mask: MaskSpec, scale: float):
+    """Plain softmax attention with NO custom_vjp — XLA's autodiff saves
+    the [B, H, Sq, Skv] probabilities for the backward. This is the
+    seed-era training datapath and the baseline the fused FLASH-D fwd+bwd
+    pair is benchmarked against (BENCH_train.json, DESIGN.md §6)."""
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    if g > 1:  # GQA: materialize the repeated KV heads (baseline semantics)
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ) * scale
+    bias = mask.block_bias(jnp.arange(sq), jnp.arange(skv))
+    if bias is not None:
+        s = s + bias
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
 
 
 def flash_attention(
@@ -170,6 +181,9 @@ def flash_attention(
         raise ValueError(f"Hq={q.shape[2]} not a multiple of Hkv={k.shape[2]}")
     if scale is None:
         scale = float(1.0 / (q.shape[-1] ** 0.5))
+
+    if impl == "xla":  # XLA-autodiff baseline: no custom_vjp, no tiling
+        return _xla_attention(q, k, v, mask, scale)
 
     from repro.distributed.context import maybe_ring_prefill  # lazy: no cycle
 

@@ -37,6 +37,7 @@ from repro.kernels.flashd_varlen import flashd_varlen_pallas
 
 __all__ = [
     "pallas_attention_fwd_batched",
+    "pallas_attention_bwd_batched",
     "pallas_decode",
     "pallas_decode_paged",
     "pallas_varlen",
@@ -151,6 +152,46 @@ def pallas_attention_fwd_batched(
     return o.transpose(0, 2, 1, 3), lam
 
 
+@register_op("attention_bwd")
+def pallas_attention_bwd_batched(
+    q: jax.Array,  # [B, Sq, Hq, d]   (model layout)
+    k: jax.Array,  # [B, Skv, Hkv, d]
+    v: jax.Array,  # [B, Skv, Hkv, dv]
+    o: jax.Array,  # [B, Sq, Hq, dv]  — saved forward output
+    lam: jax.Array,  # [B, Hq, Sq] f32  — saved Λ (log-normalizer)
+    do: jax.Array,  # [B, Sq, Hq, dv]
+    *,
+    mask: MaskSpec,
+    scale: float,
+    impl: str,
+    block_q: int,
+    block_k: int,
+):
+    """Fused attention backward from saved (O, Λ) — the training twin of
+    `attention_fwd` (DESIGN.md §6). Recomputes score tiles inside the
+    kernel (activation checkpointing: nothing [Sq, Skv]-sized is ever
+    materialized in HBM) and reconstructs P = exp(s − Λ), which with
+    FLASH-D's Λ is overflow-free with no max subtraction — the same
+    max-free property as the forward. Both `flashd` and `fa2` forwards
+    save the same Λ, so one backward kernel serves both impls.
+    Returns (dq, dk, dv) in model layout."""
+    del impl  # one bwd kernel serves every fwd impl that saves Λ
+    from repro.kernels.flashd_bwd import flashd_bwd_pallas  # lazy: keep import cheap
+
+    dq, dk, dv = flashd_bwd_pallas(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), o.transpose(0, 2, 1, 3),
+        lam, do.transpose(0, 2, 1, 3),
+        mask=mask, scale=scale, block_q=block_q, block_k=block_k,
+        interpret=_interpret(),
+    )
+    return (
+        dq.transpose(0, 2, 1, 3),
+        dk.transpose(0, 2, 1, 3),
+        dv.transpose(0, 2, 1, 3),
+    )
+
+
 @register_op("decode")
 def pallas_decode(
     q: jax.Array,  # [B, 1, Hq, d]
@@ -263,6 +304,51 @@ def jnp_attention_fwd_batched(
         q, k, v, mask, scale, impl, block_q, block_k, skip
     )
     return o, lam.reshape(b, hq, sq)
+
+
+@register_fallback("attention_bwd")
+def jnp_attention_bwd_batched(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    o: jax.Array,
+    lam: jax.Array,
+    do: jax.Array,
+    *,
+    mask: MaskSpec,
+    scale: float,
+    impl: str,
+    block_q: int,
+    block_k: int,
+):
+    """jnp mirror of the fused backward — `blockwise_backward` vmapped over
+    (B, Hkv, G). The differential oracle the Pallas bwd kernel is tested
+    against, and the graceful-degradation target for training."""
+    import functools as _ft
+
+    from repro.core.blockwise import blockwise_backward  # lazy: avoid cycle
+
+    del impl, block_q
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    dv_ = v.shape[-1]
+    qg = q.transpose(0, 2, 1, 3).reshape(b, hkv, g, sq, d)
+    og = o.transpose(0, 2, 1, 3).reshape(b, hkv, g, sq, dv_)
+    dog = do.transpose(0, 2, 1, 3).reshape(b, hkv, g, sq, dv_)
+    lamg = lam.reshape(b, hkv, g, sq)
+    kg = k.transpose(0, 2, 1, 3)  # [B, Hkv, Skv, d]
+    vg = v.transpose(0, 2, 1, 3)
+
+    fn = _ft.partial(blockwise_backward, mask=mask, scale=scale, block_k=block_k)
+    fn = jax.vmap(fn, in_axes=(0, None, None, 0, 0, 0))  # over G
+    fn = jax.vmap(fn)  # over Hkv
+    fn = jax.vmap(fn)  # over B
+    dq, dk, dv = fn(qg, kg, vg, og, lamg, dog)
+    dq = dq.reshape(b, hq, sq, d).transpose(0, 2, 1, 3).astype(q.dtype)
+    dk = jnp.sum(dk, axis=2).transpose(0, 2, 1, 3).astype(k.dtype)  # sum over G
+    dv = jnp.sum(dv, axis=2).transpose(0, 2, 1, 3).astype(v.dtype)
+    return dq, dk, dv
 
 
 @register_fallback("decode")

@@ -74,6 +74,9 @@ def _state_struct(cfg, train_cfg: TrainConfig):
             opt=OptState(m=zeros(params), v=zeros(params), step=jnp.int32(0)),
             residual=None,
             step=jnp.int32(0),
+            loss_scale=jnp.float32(1.0),
+            good_steps=jnp.int32(0),
+            skipped=jnp.int32(0),
         )
 
     return jax.eval_shape(mk)
@@ -88,6 +91,9 @@ def _state_specs(state_struct):
         opt=OptState(m=pspec, v=pspec, step=P()),
         residual=None,
         step=P(),
+        loss_scale=P(),
+        good_steps=P(),
+        skipped=P(),
     )
 
 

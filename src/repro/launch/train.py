@@ -2,23 +2,33 @@
 
 Single-host it runs for real (the end-to-end example trains paper-llama on
 this container); on a TPU slice the same entry point picks up all devices
-(`plan_mesh`) and shards via the rules engine. Fault tolerance: async
-checkpoints + restart-from-latest + straggler monitor, all on by default.
+(`plan_mesh`) and shards via the rules engine. The loop runs under the
+`train_resilient` supervisor (DESIGN.md §6): verified checkpoints with
+newest-good fallback, non-finite-grad skip + dynamic loss scaling inside
+the jitted step, loss-spike rollback, and — with `--fault-rate` — the same
+deterministic chaos injection the serve launcher exposes, here at the five
+train sites. Restarting after a crash with `--resume` replays to a
+bitwise-identical loss curve.
 
     PYTHONPATH=src python -m repro.launch.train --arch paper-llama \
         --steps 200 --global-batch 8 --seq-len 128 --ckpt-dir /tmp/ckpt
+
+    # chaos soak + resume
+    PYTHONPATH=src python -m repro.launch.train --steps 200 \
+        --ckpt-dir /tmp/ckpt --fault-rate 0.1 --fault-seed 7
+    PYTHONPATH=src python -m repro.launch.train --steps 400 \
+        --ckpt-dir /tmp/ckpt --resume
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
+import tempfile
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import configs
@@ -26,7 +36,8 @@ from repro.data import DataConfig, SyntheticLM
 from repro.distributed import sharding as shd
 from repro.optim import AdamWConfig, CompressionConfig, OptState
 from repro.runtime import checkpoint as ckpt
-from repro.runtime.resilience import StragglerMonitor, plan_mesh
+from repro.runtime.resilience import FaultInjector, StragglerMonitor, plan_mesh
+from repro.train import ResilienceConfig, train_resilient
 from repro.train.train_step import TrainConfig, TrainState, init_train_state, make_train_step
 
 
@@ -41,8 +52,23 @@ def main(argv=None):
     p.add_argument("--accum", type=int, default=1)
     p.add_argument("--compression", default="none", choices=["none", "int8", "topk"])
     p.add_argument("--attn-impl", default=None)
-    p.add_argument("--ckpt-dir", default=None)
+    p.add_argument("--ckpt-dir", default=None,
+                   help="checkpoint directory (default: fresh temp dir)")
     p.add_argument("--ckpt-every", type=int, default=50)
+    p.add_argument("--keep-checkpoints", type=int, default=3,
+                   help="garbage-collect all but the newest N (0 → keep all)")
+    p.add_argument("--resume", action="store_true",
+                   help="continue from the newest verified checkpoint in "
+                        "--ckpt-dir (without this flag a non-empty dir is "
+                        "an error, so nothing resumes silently)")
+    p.add_argument("--fault-rate", type=float, default=0.0,
+                   help="chaos injection: probability each train-site "
+                        "check fires (0 → no injection)")
+    p.add_argument("--fault-seed", type=int, default=0,
+                   help="seed for the deterministic fault injector")
+    p.add_argument("--spike-threshold", type=float, default=0.0,
+                   help="loss-spike rollback: loss > T × trailing median "
+                        "restores the last good checkpoint (0 → off)")
     p.add_argument("--log-every", type=int, default=10)
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
@@ -58,6 +84,16 @@ def main(argv=None):
         accum_steps=args.accum,
     )
 
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="repro_train_ckpt_")
+    existing = ckpt.valid_steps(ckpt_dir)
+    if existing and not args.resume:
+        raise SystemExit(
+            f"{ckpt_dir} already holds checkpoints (steps {existing}); "
+            f"pass --resume to continue or point --ckpt-dir elsewhere"
+        )
+    if args.resume and existing:
+        print(f"resuming from step {existing[-1]} in {ckpt_dir}")
+
     n_dev = len(jax.devices())
     data = SyntheticLM(DataConfig(
         vocab_size=cfg.vocab_size, seq_len=args.seq_len,
@@ -71,32 +107,38 @@ def main(argv=None):
     else:
         mesh = ctx = None
 
-    def build():
+    def init_state_fn():
         state = init_train_state(jax.random.PRNGKey(args.seed), cfg, tc)
+        if ctx is not None:
+            with shd.activate(ctx), shd.mesh_ctx(mesh):
+                state = jax.device_put(state, shd.to_named(_sspec(state)))
+        return state
+
+    def _sspec(state):
+        pspecs = shd.param_specs(state.params)
+        return TrainState(params=pspecs,
+                          opt=OptState(m=pspecs, v=pspecs, step=P()),
+                          residual=(pspecs if state.residual is not None else None),
+                          step=P(), loss_scale=P(), good_steps=P(), skipped=P())
+
+    def build_step_fn():
         step_raw = make_train_step(cfg, tc)
         if ctx is None:
-            return state, jax.jit(step_raw, donate_argnums=(0,))
+            return jax.jit(step_raw)
         with shd.activate(ctx), shd.mesh_ctx(mesh):
-            pspecs = shd.param_specs(state.params)
-            sspec = TrainState(params=pspecs,
-                               opt=OptState(m=pspecs, v=pspecs, step=P()),
-                               residual=(pspecs if state.residual is not None else None),
-                               step=P())
-            state = jax.device_put(state, shd.to_named(sspec))
-            step = shd.sharded_jit(step_raw, in_shardings=(sspec, None),
-                                   donate_argnums=(0,))
-            return state, step
+            sspec = _sspec(init_state_fn())
+            inner = shd.sharded_jit(step_raw, in_shardings=(sspec, None))
 
-    state, step_fn = build()
-    start = 0
-    mgr = None
-    if args.ckpt_dir:
-        mgr = ckpt.CheckpointManager(args.ckpt_dir)
-        last = ckpt.latest_step(args.ckpt_dir)
-        if last is not None:
-            state, extra = ckpt.restore(args.ckpt_dir, state, step=last)
-            start = int(extra["data_step"])
-            print(f"resumed from step {start}")
+        def step(state, batch):
+            with shd.activate(ctx), shd.mesh_ctx(mesh):
+                return inner(state, batch)
+
+        return step
+
+    injector = None
+    if args.fault_rate > 0:
+        injector = FaultInjector(args.fault_rate, args.fault_seed,
+                                 sites=FaultInjector.TRAIN_SITES)
 
     monitor = StragglerMonitor(
         on_straggler=lambda s, dt, mu: print(
@@ -104,38 +146,43 @@ def main(argv=None):
             f"— would flag this pod for exclusion at re-mesh"
         )
     )
+    last_t = [time.monotonic()]
 
-    def run_steps(state):
-        for i in range(start, args.steps):
-            batch = jax.tree.map(jnp.asarray, data.batch(i))
-            monitor.start_step()
-            with (shd.activate(ctx) if ctx else _null()), \
-                 (shd.mesh_ctx(mesh) if mesh else _null()):
-                state, metrics = step_fn(state, batch)
-            jax.block_until_ready(metrics["loss"])
-            monitor.end_step(i)
-            if i % args.log_every == 0 or i == args.steps - 1:
-                print(
-                    f"step {i:5d} loss {float(metrics['loss']):.4f} "
-                    f"gnorm {float(metrics['grad_norm']):.3f} "
-                    f"lr {float(metrics['lr']):.2e}",
-                    flush=True,
-                )
-            if mgr and ((i + 1) % args.ckpt_every == 0 or i == args.steps - 1):
-                mgr.save_async(i + 1, state, extra={"data_step": i + 1})
-        if mgr:
-            mgr.wait()
-        return state
+    def on_step(step, metrics, counters):
+        now = time.monotonic()
+        monitor.observe(step, now - last_t[0])
+        last_t[0] = now
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(
+                f"step {step:5d} loss {metrics['loss']:.4f} "
+                f"gnorm {metrics['grad_norm']:.3f} "
+                f"lr {metrics['lr']:.2e} "
+                f"scale {metrics['loss_scale']:.3g} | "
+                f"skipped={int(metrics['skipped'])} "
+                f"rollbacks={counters['rollbacks']} "
+                f"restarts={counters['restarts']} "
+                f"faults={counters['faults']}",
+                flush=True,
+            )
 
-    import contextlib
-
-    def _null():
-        return contextlib.nullcontext()
-
+    res = ResilienceConfig(
+        ckpt_every=args.ckpt_every,
+        keep_checkpoints=args.keep_checkpoints or None,
+        spike_threshold=args.spike_threshold,
+    )
     t0 = time.time()
-    state = run_steps(state)
-    print(f"done: {args.steps - start} steps in {time.time() - t0:.1f}s "
-          f"({len(monitor.flagged)} straggler events)")
+    state, history, counters = train_resilient(
+        ckpt_dir=ckpt_dir, model_cfg=cfg, train_cfg=tc, data=data,
+        total_steps=args.steps, seed=args.seed, res=res, injector=injector,
+        init_state_fn=init_state_fn, step_fn=build_step_fn(),
+        on_step=on_step,
+    )
+    print(
+        f"done: {len(history)} committed steps in {time.time() - t0:.1f}s "
+        f"(skipped={counters['skipped']} rollbacks={counters['rollbacks']} "
+        f"restarts={counters['restarts']} faults={counters['faults']} "
+        f"stragglers={len(monitor.flagged)}) — checkpoints in {ckpt_dir}"
+    )
     return 0
 
 

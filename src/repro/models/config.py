@@ -45,7 +45,7 @@ class ModelConfig:
     attn_window: int = 0  # attn_local sliding window
     attn_chunk: int = 0  # attn_chunked chunk length
     rope_theta: float = 10000.0
-    attn_impl: str = "flashd"  # flashd | fa2 | naive | flashd_pallas | fa2_pallas
+    attn_impl: str = "flashd"  # flashd | fa2 | naive | xla | flashd_pallas | fa2_pallas
     attn_block_q: Optional[int] = None  # None → repro.kernels.tuning picks
     attn_block_k: Optional[int] = None
     attn_skip: bool = False  # FLASH-D tile-skip predication

@@ -2,16 +2,25 @@
 
 Layout:
     <dir>/step_<N>/manifest.json      {step, leaf names, shapes, dtypes,
-                                       data_step, mesh_shape, extra}
+                                       checksums, data_step, mesh_shape, extra}
     <dir>/step_<N>/shard_<host>.npz   this host's leaves (single-host runs
                                        write shard_0 with everything)
 
 Fault-tolerance contract (tested):
   * atomic publish — writes go to step_<N>.tmp, renamed when complete; a
     crash mid-save never corrupts the latest checkpoint;
-  * `latest_step` skips unpublished .tmp dirs;
+  * `latest_step` skips unpublished .tmp dirs and tolerates malformed
+    step_* directory names (a stray `step_backup` dir must not take down
+    every restore);
+  * integrity — the manifest records a CRC32 per shard file; `restore`
+    verifies before loading (`verify=False` opts out) and raises
+    `CheckpointCorrupt` on a torn or bit-flipped shard. With no explicit
+    `step`, restore falls back to the NEWEST checkpoint that verifies, so
+    one corrupted save costs one interval, not the run;
   * async mode snapshots to host RAM synchronously (jax.device_get) and
-    writes on a worker thread — training resumes immediately;
+    writes on a worker thread — training resumes immediately; a failed
+    async save surfaces on the next `wait()`/`save_async()` and never
+    garbage-collects the previous good checkpoint;
   * data-iterator state (a step counter, see repro.data) rides in the
     manifest so restarts resume the exact token stream;
   * `restore` can reshard to a DIFFERENT mesh: leaves are saved unsharded
@@ -25,13 +34,28 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Dict, Optional, Tuple
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["save", "restore", "latest_step", "CheckpointManager"]
+__all__ = [
+    "save",
+    "restore",
+    "latest_step",
+    "valid_steps",
+    "verify_step",
+    "CheckpointCorrupt",
+    "CheckpointManager",
+]
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A checkpoint failed integrity verification (torn write, bit flip,
+    missing shard). Raised by `restore`; `run_resilient` treats it like any
+    other retryable failure and falls back to an older step."""
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -43,20 +67,35 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
 
 
 def _unflatten(tree_like, flat: Dict[str, np.ndarray]):
-    names = list(_flatten(jax.eval_shape(lambda: tree_like)).keys()) if False else None
     leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
     out = []
+    consumed = set()
     for path, leaf in leaves_with_path:
         name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
         if name not in flat:
             raise KeyError(f"checkpoint missing leaf {name!r}")
+        consumed.add(name)
         arr = flat[name]
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(
                 f"shape mismatch for {name}: ckpt {arr.shape} vs expected {leaf.shape}"
             )
         out.append(arr.astype(leaf.dtype))
+    extra = sorted(set(flat) - consumed)
+    if extra:
+        raise ValueError(
+            f"checkpoint has {len(extra)} leaves the target structure does not: "
+            f"{extra[:5]}{'…' if len(extra) > 5 else ''}"
+        )
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _crc32_file(path: str) -> str:
+    crc = 0
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            crc = zlib.crc32(block, crc)
+    return f"{crc & 0xFFFFFFFF:08x}"
 
 
 def save(
@@ -74,11 +113,15 @@ def save(
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
     os.makedirs(tmp, exist_ok=True)
+    checksums: Dict[str, str] = {}
     if tree is not None:
-        np.savez(os.path.join(tmp, f"shard_{host_index}.npz"), **flat)
+        shard = f"shard_{host_index}.npz"
+        np.savez(os.path.join(tmp, shard), **flat)
+        checksums[shard] = _crc32_file(os.path.join(tmp, shard))
     manifest = {
         "step": int(step),
         "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)} for k, v in flat.items()},
+        "checksums": checksums,
         "extra": extra or {},
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -89,15 +132,49 @@ def save(
     return final
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
+def _step_dirs(ckpt_dir: str) -> List[int]:
+    """Published step numbers under `ckpt_dir`, ascending. Malformed
+    `step_*` names (step_backup, step_old…) are skipped, not fatal."""
     if not os.path.isdir(ckpt_dir):
-        return None
+        return []
     steps = []
     for d in os.listdir(ckpt_dir):
-        if d.startswith("step_") and not d.endswith(".tmp"):
-            if os.path.exists(os.path.join(ckpt_dir, d, "manifest.json")):
-                steps.append(int(d[len("step_"):]))
-    return max(steps) if steps else None
+        if not d.startswith("step_") or d.endswith(".tmp"):
+            continue
+        try:
+            n = int(d[len("step_"):])
+        except ValueError:
+            continue
+        if os.path.exists(os.path.join(ckpt_dir, d, "manifest.json")):
+            steps.append(n)
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = _step_dirs(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def verify_step(ckpt_dir: str, step: int) -> bool:
+    """True iff step exists and every manifest-listed shard matches its
+    recorded CRC32. Pre-checksum checkpoints (no `checksums` key) verify
+    as long as the manifest parses."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError):
+        return False
+    for shard, crc in manifest.get("checksums", {}).items():
+        path = os.path.join(d, shard)
+        if not os.path.exists(path) or _crc32_file(path) != crc:
+            return False
+    return True
+
+
+def valid_steps(ckpt_dir: str) -> List[int]:
+    """Published steps that pass integrity verification, ascending."""
+    return [s for s in _step_dirs(ckpt_dir) if verify_step(ckpt_dir, s)]
 
 
 def restore(
@@ -106,15 +183,33 @@ def restore(
     *,
     step: Optional[int] = None,
     shardings=None,
+    verify: bool = True,
 ) -> Tuple[Any, Dict[str, Any]]:
     """Load into the structure of `tree_like`; optionally re-place with
     `shardings` (a pytree of NamedSharding) for elastic re-meshing.
     `tree_like=None` loads only the manifest `extra` (metadata-only
-    checkpoints, see `save`)."""
+    checkpoints, see `save`).
+
+    With `verify=True` (default) shard checksums are validated first: an
+    explicit `step` that fails raises `CheckpointCorrupt`; `step=None`
+    falls back to the newest step that verifies (corruption costs one
+    checkpoint interval, never the run)."""
     if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
+        candidates = _step_dirs(ckpt_dir)
+        if not candidates:
             raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+        if verify:
+            good = [s for s in candidates if verify_step(ckpt_dir, s)]
+            if not good:
+                raise CheckpointCorrupt(
+                    f"no checkpoint under {ckpt_dir} passes verification "
+                    f"(candidates: {candidates})"
+                )
+            step = good[-1]
+        else:
+            step = candidates[-1]
+    elif verify and not verify_step(ckpt_dir, step):
+        raise CheckpointCorrupt(f"checkpoint step {step} under {ckpt_dir} is corrupt")
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
@@ -134,7 +229,12 @@ def restore(
 
 
 class CheckpointManager:
-    """Async saver: snapshot synchronously, write on a daemon thread."""
+    """Async saver: snapshot synchronously, write on a daemon thread.
+
+    Error surfacing contract: a failed background save is re-raised on the
+    next `wait()` (or the implicit `wait()` at the head of `save_async()`),
+    and `_gc` only runs after a SUCCESSFUL save — a failure can never
+    garbage-collect the previous good checkpoint."""
 
     def __init__(self, ckpt_dir: str, *, keep: int = 3, host_index: int = 0):
         self.dir = ckpt_dir
@@ -166,10 +266,5 @@ class CheckpointManager:
         self._thread.start()
 
     def _gc(self):
-        steps = sorted(
-            int(d[len("step_"):])
-            for d in os.listdir(self.dir)
-            if d.startswith("step_") and not d.endswith(".tmp")
-        )
-        for s in steps[: -self.keep]:
+        for s in _step_dirs(self.dir)[: -self.keep]:
             shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"), ignore_errors=True)

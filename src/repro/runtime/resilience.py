@@ -1,12 +1,18 @@
 """Fault tolerance, straggler mitigation, elastic scaling.
 
-Cooperating pieces, all exercised by tests:
+Cooperating pieces (serving chaos: tests/test_chaos.py; training
+resilience: tests/test_train_resilience.py, tests/test_lifecycle.py,
+tests/test_checkpoint_resilience.py):
 
 * `run_resilient` — the restart loop: train inside a supervisor that, on a
-  (simulated or real) failure, restores the latest checkpoint — including
-  the data-iterator step — and continues. Guarantees: loss curve is
-  identical to an uninterrupted run (bitwise, given deterministic data),
-  because all step-state lives in the checkpoint.
+  (simulated or real) failure, restores the latest VERIFIED checkpoint —
+  including the data-iterator step — and continues. Guarantees: loss curve
+  is identical to an uninterrupted run (bitwise, given deterministic
+  data), because all step-state lives in the checkpoint; a corrupted
+  newest checkpoint (failed CRC) falls back one interval instead of
+  killing the run. `repro.train.resilient.train_resilient` layers the
+  training-specific policy (fault-site checks, loss-spike rollback,
+  status counters) on top of this supervisor.
 
 * `RetryPolicy` — which exception types are retryable, how many times, and
   how long to back off between attempts (exponential with deterministic
@@ -14,11 +20,18 @@ Cooperating pieces, all exercised by tests:
   engine's per-request retry path (DESIGN.md §3.7).
 
 * `FaultInjector` — deterministic, seeded chaos: raises `InjectedFault` at
-  named sites (page_alloc / kernel_dispatch / device_step / host_sync)
-  threaded through the serve loops, either probabilistically (`rate`) or
-  on an explicit per-site occurrence `schedule`. `crash_after_checks`
-  additionally raises one `EngineCrash` — an exception the engine does
-  *not* absorb — to exercise crash recovery + snapshot/restore.
+  named sites, either probabilistically (`rate`) or on an explicit
+  per-site occurrence `schedule`. Serving sites (page_alloc /
+  kernel_dispatch / device_step / host_sync) are threaded through the
+  serve loops; training sites (data_batch / grad_step / optimizer_update /
+  ckpt_save / collective) through the resilient train loop (DESIGN.md §6).
+  `crash_after_checks` additionally raises one `EngineCrash` — an
+  exception the engine does *not* absorb — to exercise crash recovery +
+  snapshot/restore.
+
+* `DivergenceRollback` — raised by the train loop's loss-spike detector;
+  retryable under the default policy, so the supervisor restores the last
+  good checkpoint instead of training through corrupted state.
 
 * `StragglerMonitor` — per-step wall-time EWMA + robust z-score; flags
   slow steps/pods and invokes a callback (in production: exclude the pod
@@ -50,6 +63,7 @@ __all__ = [
     "FaultInjector",
     "InjectedFault",
     "EngineCrash",
+    "DivergenceRollback",
     "StragglerMonitor",
     "ElasticPlan",
     "plan_mesh",
@@ -112,8 +126,26 @@ class EngineCrash(RuntimeError):
     """
 
 
+class DivergenceRollback(RuntimeError):
+    """Loss-spike divergence detected by the resilient train loop.
+
+    A RuntimeError subclass, so the default `RetryPolicy` treats it as
+    retryable: `run_resilient` restores the last good checkpoint and
+    replays — rolling back past silently-corrupted state instead of
+    training through it (DESIGN.md §6)."""
+
+    def __init__(self, step: int, loss: float, reference: float):
+        super().__init__(
+            f"loss spike at step {step}: {loss:.4g} vs reference {reference:.4g}"
+        )
+        self.step = step
+        self.loss = loss
+        self.reference = reference
+
+
 class FaultInjector:
-    """Deterministic, seeded fault source for the serving engine.
+    """Deterministic, seeded fault source for the serving AND training
+    loops.
 
     Two triggering modes, composable:
 
@@ -123,11 +155,26 @@ class FaultInjector:
       `check` at that site fires regardless of `rate`. This is what the
       chaos tests use to target a specific request or step.
 
+    Sites: the first four are the serve-loop sites (PR 6); the train sites
+    model where a training-pipeline failure surfaces — the input pipeline
+    (`data_batch`), the fwd/bwd dispatch (`grad_step`), the optimizer
+    apply (`optimizer_update`), the checkpoint write (`ckpt_save`), and a
+    cross-device reduction (`collective`). The resilient train loop checks
+    them once per step in that order (repro.train.resilient).
+
     `crash_after_checks=N` raises `EngineCrash` on the N-th check overall
     (0-based), once — simulating a hard crash mid-serve.
     """
 
-    SITES = ("page_alloc", "kernel_dispatch", "device_step", "host_sync")
+    SITES = (
+        "page_alloc", "kernel_dispatch", "device_step", "host_sync",
+        "data_batch", "grad_step", "optimizer_update", "ckpt_save",
+        "collective",
+    )
+    TRAIN_SITES = (
+        "data_batch", "grad_step", "optimizer_update", "ckpt_save",
+        "collective",
+    )
 
     def __init__(
         self,
@@ -199,6 +246,9 @@ def run_resilient(
     max_restarts: int = 10,
     fail_at: Optional[Callable[[int], bool]] = None,
     retry: Optional[RetryPolicy] = None,
+    keep: Optional[int] = None,
+    on_save: Optional[Callable[[int, object], None]] = None,
+    on_restart: Optional[Callable[[int, BaseException], None]] = None,
 ) -> Tuple[object, List[Dict]]:
     """Supervised training loop. `step_fn(state, data_step)` returns
     (state, metrics). `fail_at(step)` raising simulates node failure.
@@ -206,16 +256,24 @@ def run_resilient(
     `retry` controls which exception types trigger a restart (default:
     `RuntimeError` only, the historical behavior) and the jittered backoff
     slept between restarts; `max_restarts` still caps the restart count.
+
+    Restores go through checksum verification with fallback: the newest
+    checkpoint that VERIFIES wins, so a torn/corrupted save costs at most
+    one checkpoint interval. `keep=N` garbage-collects all but the newest
+    N checkpoints after each successful save. `on_save(step, state)` runs
+    just before each checkpoint write (a fault-injection point: an
+    exception there aborts the save and is handled like any step failure);
+    `on_restart(restart_index, exc)` observes each supervised restart.
     """
     policy = retry if retry is not None else RetryPolicy()
     history: List[Dict] = []
     restarts = 0
     while True:
-        # (re)start: restore or init
-        last = ckpt.latest_step(ckpt_dir)
-        if last is not None:
+        # (re)start: restore the newest VERIFIED checkpoint, or init fresh
+        valid = ckpt.valid_steps(ckpt_dir)
+        if valid:
             template = init_state_fn()
-            state, extra = ckpt.restore(ckpt_dir, template, step=last)
+            state, extra = ckpt.restore(ckpt_dir, template, step=valid[-1])
             step = int(extra["data_step"])
         else:
             state = init_state_fn()
@@ -228,18 +286,30 @@ def run_resilient(
                 history.append({"step": step, **{k: float(v) for k, v in metrics.items()}})
                 step += 1
                 if step % ckpt_every == 0 or step == total_steps:
+                    if on_save is not None:
+                        on_save(step, state)
                     ckpt.save(ckpt_dir, step, state, extra={"data_step": step})
+                    if keep is not None:
+                        for s in ckpt.valid_steps(ckpt_dir)[:-keep]:
+                            import shutil as _sh
+
+                            _sh.rmtree(
+                                f"{ckpt_dir}/step_{s:08d}", ignore_errors=True
+                            )
             return state, history
-        except policy.retryable:
+        except policy.retryable as e:
             restarts += 1
             if restarts > max_restarts:
                 raise
+            if on_restart is not None:
+                on_restart(restarts, e)
             delay = policy.delay_s(restarts)
             if delay > 0:
                 time.sleep(delay)
             # truncate unpersisted history (those steps will be replayed)
-            persisted = ckpt.latest_step(ckpt_dir) or 0
-            history = [h for h in history if h["step"] < persisted]
+            persisted = ckpt.valid_steps(ckpt_dir)
+            last_good = persisted[-1] if persisted else 0
+            history = [h for h in history if h["step"] < last_good]
 
 
 # ---------------------------------------------------------------------------

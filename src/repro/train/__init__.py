@@ -1,2 +1,11 @@
+from repro.train.resilient import ResilienceConfig, train_resilient
 from repro.train.train_step import TrainConfig, TrainState, init_train_state, make_train_step
-__all__ = ["TrainConfig", "TrainState", "init_train_state", "make_train_step"]
+
+__all__ = [
+    "TrainConfig",
+    "TrainState",
+    "init_train_state",
+    "make_train_step",
+    "ResilienceConfig",
+    "train_resilient",
+]

@@ -1,10 +1,26 @@
-"""Training step: loss → grads → (compress) → AdamW, with microbatching.
+"""Training step: loss → grads → numerics guard → (compress) → AdamW.
 
 Pure function of (TrainState, batch); jit/pjit-compiled by the launcher with
 parameter/optimizer shardings from the rules engine. Microbatch gradient
 accumulation (`accum_steps > 1`) runs as a `lax.scan` over batch slices —
 XLA's latency-hiding scheduler overlaps each microbatch's reduce-scatter
 with the next microbatch's compute (the compute/comm-overlap trick).
+
+Attention inside the loss runs through `repro.core.flash_attention`, whose
+custom_vjp routes `attn_impl="flashd_pallas"` to the fused Pallas
+fwd+bwd kernel pair via the `attention_fwd`/`attention_bwd` registry ops
+(kernels/ops.py) — activation-checkpointed: the backward recomputes score
+tiles from (q, k, Λ), no [S, S] intermediate is saved (DESIGN.md §6).
+
+Numerics guard (`numerics_guard=True`, the default): the loss is scaled by
+the carried `loss_scale` before differentiation, gradients are unscaled
+(power-of-two scales, so the round-trip is exact), and a fused
+all-leaves-finite check gates the update ON DEVICE — a non-finite step
+skips the param/opt/residual update entirely (old state selected through),
+bumps the `skipped` counter, and halves the loss scale; after
+`loss_scale_growth_interval` consecutive finite steps the scale doubles
+back. With the default static scale of 1.0 the guarded step is
+numerically identical to an unguarded one on every finite step.
 """
 
 from __future__ import annotations
@@ -49,6 +65,14 @@ class TrainConfig:
     # cross-device reductions — are bf16 (halves grad all-reduce wire; the
     # classic mixed-precision trade: bf16 grad summaries, f32 master update).
     grad_dtype: str = "float32"  # or 'bfloat16'
+    # Numerics guard: on-device non-finite-gradient skip + dynamic loss
+    # scaling (DESIGN.md §6). Scales are powers of two, so scale/unscale
+    # round-trips are exact; growth_interval=0 keeps the scale static.
+    numerics_guard: bool = True
+    loss_scale_init: float = 1.0
+    loss_scale_growth_interval: int = 0  # 0 → static scale
+    loss_scale_min: float = 2.0 ** -14
+    loss_scale_max: float = 2.0 ** 16
 
 
 class TrainState(NamedTuple):
@@ -56,6 +80,9 @@ class TrainState(NamedTuple):
     opt: OptState
     residual: Optional[dict]  # error-feedback state (None if no compression)
     step: jax.Array
+    loss_scale: jax.Array  # f32 dynamic loss scale (numerics guard)
+    good_steps: jax.Array  # i32 consecutive finite steps since last growth
+    skipped: jax.Array  # i32 total non-finite updates skipped
 
 
 def init_train_state(key, model_cfg: ModelConfig, train_cfg: TrainConfig) -> TrainState:
@@ -65,7 +92,10 @@ def init_train_state(key, model_cfg: ModelConfig, train_cfg: TrainConfig) -> Tra
         init_residual(params) if train_cfg.compression.kind != "none" else None
     )
     dt = None if train_cfg.opt_state_dtype == "float32" else train_cfg.opt_state_dtype
-    return TrainState(params, init_opt(params, state_dtype=dt), residual, jnp.int32(0))
+    return TrainState(
+        params, init_opt(params, state_dtype=dt), residual, jnp.int32(0),
+        jnp.float32(train_cfg.loss_scale_init), jnp.int32(0), jnp.int32(0),
+    )
 
 
 def _split_microbatches(batch: Dict, n: int) -> Dict:
@@ -97,6 +127,11 @@ def _cast_params_sharded(params, cdt):
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def _select_tree(pred, new, old):
+    """Leafwise `pred ? new : old` — the guard's skip-update selection."""
+    return jax.tree.map(lambda a, b: jnp.where(pred, a, b), new, old)
+
+
 def make_train_step(model_cfg: ModelConfig, train_cfg: TrainConfig):
     """Returns train_step(state, batch) -> (state, metrics)."""
     api = get_model(model_cfg)
@@ -106,27 +141,33 @@ def make_train_step(model_cfg: ModelConfig, train_cfg: TrainConfig):
             return api.loss(_cast_params_sharded(p, model_cfg.compute_dtype), b, model_cfg)
     else:
         loss_fn = lambda p, b: api.loss(p, b, model_cfg)
+    guard = train_cfg.numerics_guard
 
-    def grads_of(params, batch):
-        """(loss, metrics), grads — grads in grad_dtype."""
+    def grads_of(params, batch, scale):
+        """(scaled loss, metrics), grads of the SCALED loss (grad_dtype)."""
         if not bf16_grads:
-            return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+            return jax.value_and_grad(
+                lambda p, b: ((lambda l, m: (l * scale, m))(*loss_fn(p, b))),
+                has_aux=True,
+            )(params, batch)
         # differentiate w.r.t. the bf16 tree: grads (and their reductions)
         # stay bf16; masters get the upcast copy at the optimizer
         params_b = _cast_params_sharded(params, model_cfg.compute_dtype)
         (loss, metrics), g_b = jax.value_and_grad(
-            lambda p, b: api.loss(p, b, model_cfg), has_aux=True
+            lambda p, b: ((lambda l, m: (l * scale, m))(*api.loss(p, b, model_cfg))),
+            has_aux=True,
         )(params_b, batch)
         return (loss, metrics), g_b
 
     def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        scale = state.loss_scale if guard else jnp.float32(1.0)
         n = train_cfg.accum_steps
         if n > 1:
             mb = _split_microbatches(batch, n)
 
             def accum(carry, one_batch):
                 g_acc, l_acc, m_acc = carry
-                (loss, metrics), grads = grads_of(state.params, one_batch)
+                (loss, metrics), grads = grads_of(state.params, one_batch, scale)
                 # in-place add into the carried accumulator (single buffer)
                 g_acc = jax.tree.map(jnp.add, g_acc, grads)
                 m_acc = jax.tree.map(jnp.add, m_acc, metrics)
@@ -145,7 +186,16 @@ def make_train_step(model_cfg: ModelConfig, train_cfg: TrainConfig):
             loss = loss / n
             metrics = jax.tree.map(lambda m: m / n, metrics)
         else:
-            (loss, metrics), grads = grads_of(state.params, batch)
+            (loss, metrics), grads = grads_of(state.params, batch, scale)
+
+        # unscale (exact: power-of-two scales); Inf/NaN survive the divide,
+        # so detection on the unscaled tree still catches overflow
+        inv = jnp.float32(1.0) / scale
+        grads = jax.tree.map(lambda g: g * inv.astype(g.dtype), grads)
+        loss = loss * inv
+        finite = jnp.isfinite(loss)
+        for g in jax.tree.leaves(grads):
+            finite &= jnp.all(jnp.isfinite(g))
 
         residual = state.residual
         if train_cfg.compression.kind != "none":
@@ -162,7 +212,41 @@ def make_train_step(model_cfg: ModelConfig, train_cfg: TrainConfig):
         params, opt, opt_metrics = apply_updates(
             state.params, grads, state.opt, train_cfg.optimizer, lr=lr
         )
-        new_state = TrainState(params, opt, residual, state.step + 1)
-        return new_state, {"loss": loss, **metrics, **opt_metrics}
+        if guard:
+            # skip-update: non-finite grads leave params/opt/residual (and
+            # the EF residual's view of what was "sent") untouched
+            params = _select_tree(finite, params, state.params)
+            opt = _select_tree(finite, opt, state.opt)
+            if residual is not None:
+                residual = _select_tree(finite, residual, state.residual)
+            good = jnp.where(finite, state.good_steps + 1, 0)
+            interval = train_cfg.loss_scale_growth_interval
+            if interval > 0:
+                ripe = finite & (good >= interval)
+                # grow only while doubling stays ≤ max (never pull an
+                # above-max scale down — halving is the only down-path)
+                grow = ripe & (scale * 2.0 <= train_cfg.loss_scale_max)
+                scale_ok = jnp.where(grow, scale * 2.0, scale)
+                good = jnp.where(ripe, 0, good)
+            else:
+                scale_ok = scale
+            new_scale = jnp.where(
+                finite, scale_ok,
+                jnp.maximum(scale * 0.5, train_cfg.loss_scale_min),
+            )
+            skipped = state.skipped + jnp.where(finite, 0, 1).astype(jnp.int32)
+        else:
+            good = state.good_steps
+            new_scale = state.loss_scale
+            skipped = state.skipped
+        new_state = TrainState(
+            params, opt, residual, state.step + 1, new_scale, good, skipped
+        )
+        guard_metrics = {
+            "loss_scale": scale,
+            "skipped": skipped.astype(jnp.float32),
+            "finite": finite.astype(jnp.float32),
+        }
+        return new_state, {"loss": loss, **metrics, **opt_metrics, **guard_metrics}
 
     return train_step

@@ -128,7 +128,8 @@ def test_sharded_train_step_matches_single_device():
         from repro.train.train_step import TrainState
         from repro.optim import OptState
         sspec = TrainState(params=pspecs, opt=OptState(m=pspecs, v=pspecs, step=P()),
-                           residual=None, step=P())
+                           residual=None, step=P(),
+                           loss_scale=P(), good_steps=P(), skipped=P())
         state = jax.device_put(state, shd.to_named(sspec))
         batch_sh = jax.device_put(batch, shd.to_named(shd.batch_specs(batch)))
         step = shd.sharded_jit(make_train_step(cfg, tc),

@@ -1,0 +1,284 @@
+"""Training-loop resilience: bitwise-identical resume under fault injection
+at every train site, on-device numerics guard (non-finite skip + dynamic
+loss scaling), and loss-spike divergence rollback.
+
+The bitwise contract: `SyntheticLM.batch(step)` is a pure function of
+(seed, step) and ALL mutable training state (params, opt, EF residual,
+step, loss scale, counters) lives in the checkpoint, so a run that crashes
+and restores replays the exact same float sequence as one that never did.
+These tests assert `==`, not allclose.
+"""
+
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import paper_llama
+from repro.data import DataConfig, SyntheticLM
+from repro.optim import AdamWConfig
+from repro.runtime.resilience import DivergenceRollback, FaultInjector, InjectedFault
+from repro.train import (
+    ResilienceConfig,
+    TrainConfig,
+    init_train_state,
+    make_train_step,
+    train_resilient,
+)
+
+
+def _tiny(**tc_kw):
+    cfg = dataclasses.replace(
+        paper_llama.CONFIG, n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+        d_ff=64, head_dim=16, vocab_size=64, vocab_pad_multiple=64,
+    )
+    tc = TrainConfig(optimizer=AdamWConfig(lr=1e-3), warmup_steps=2,
+                     total_steps=50, **tc_kw)
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                                  global_batch=4, seed=0))
+    return cfg, tc, data
+
+
+def _params_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# fault injector: train sites
+# ---------------------------------------------------------------------------
+
+def test_injector_train_sites_registered():
+    assert set(FaultInjector.TRAIN_SITES) == {
+        "data_batch", "grad_step", "optimizer_update", "ckpt_save", "collective",
+    }
+    assert set(FaultInjector.TRAIN_SITES) <= set(FaultInjector.SITES)
+    inj = FaultInjector(schedule=[("grad_step", 0)])
+    with pytest.raises(InjectedFault) as ei:
+        inj.check("grad_step")
+    assert ei.value.site == "grad_step"
+    inj.check("grad_step")  # occurrence 1 not scheduled
+    with pytest.raises(ValueError):
+        FaultInjector(schedule=[("warp_core", 0)])
+
+
+def test_injector_rate_restricted_to_train_sites():
+    inj = FaultInjector(rate=1.0, sites=FaultInjector.TRAIN_SITES, seed=0)
+    inj.check("page_alloc")  # serve site not selected: never fires
+    with pytest.raises(InjectedFault):
+        inj.check("data_batch")
+    assert inj.fired["page_alloc"] == 0 and inj.fired["data_batch"] == 1
+
+
+# ---------------------------------------------------------------------------
+# bitwise resume identity at every train site class
+# ---------------------------------------------------------------------------
+
+def test_bitwise_resume_under_fault_at_every_site(tmp_path):
+    """One scheduled fault at EACH train site; the loss curve and final
+    params must be bitwise identical to the uninterrupted run."""
+    cfg, tc, data = _tiny()
+    res = ResilienceConfig(ckpt_every=5)
+    total = 20
+
+    clean_state, clean_hist, clean_ctr = train_resilient(
+        ckpt_dir=str(tmp_path / "clean"), model_cfg=cfg, train_cfg=tc,
+        data=data, total_steps=total, res=res)
+    assert clean_ctr["restarts"] == 0
+
+    inj = FaultInjector(schedule=[
+        ("data_batch", 7), ("grad_step", 9), ("optimizer_update", 11),
+        ("collective", 13), ("ckpt_save", 2),
+    ])
+    faulted_state, faulted_hist, ctr = train_resilient(
+        ckpt_dir=str(tmp_path / "faulted"), model_cfg=cfg, train_cfg=tc,
+        data=data, total_steps=total, res=res, injector=inj)
+
+    assert ctr["restarts"] == 5 and ctr["faults"] == 5
+    assert [h["loss"] for h in clean_hist] == [h["loss"] for h in faulted_hist]
+    assert [h["step"] for h in faulted_hist] == list(range(total))
+    _params_equal(clean_state, faulted_state)
+
+
+def test_keep_checkpoints_gc(tmp_path):
+    from repro.runtime import checkpoint as ckpt
+
+    cfg, tc, data = _tiny()
+    res = ResilienceConfig(ckpt_every=4, keep_checkpoints=2)
+    train_resilient(ckpt_dir=str(tmp_path), model_cfg=cfg, train_cfg=tc,
+                    data=data, total_steps=16, res=res)
+    assert ckpt.valid_steps(str(tmp_path)) == [12, 16]
+
+
+# ---------------------------------------------------------------------------
+# numerics guard: skip-update + dynamic loss scale
+# ---------------------------------------------------------------------------
+
+def test_loss_scale_backoff_recovers_from_overflow():
+    """An absurd initial scale overflows f32 grads: the guard must skip
+    those updates (params untouched), halve the scale until finite, then
+    train normally."""
+    cfg, tc, data = _tiny()
+    tc = dataclasses.replace(tc, loss_scale_init=2.0 ** 127,
+                             loss_scale_growth_interval=4)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, tc)
+    step = jax.jit(make_train_step(cfg, tc))
+    finites, scales = [], []
+    for i in range(16):
+        prev = jax.tree.map(np.asarray, state.params)
+        batch = jax.tree.map(jnp.asarray, data.batch(i))
+        state, m = step(state, batch)
+        finites.append(float(m["finite"]))
+        scales.append(float(m["loss_scale"]))
+        if finites[-1] == 0.0:  # skipped step: params bitwise untouched
+            for a, b in zip(jax.tree.leaves(prev), jax.tree.leaves(state.params)):
+                np.testing.assert_array_equal(a, np.asarray(b))
+    assert finites[0] == 0.0 and int(state.skipped) >= 1
+    assert scales[-1] < scales[0] and finites[-1] == 1.0
+    assert np.isfinite(float(m["loss"]))
+    # scale settled: power-of-two all the way down
+    assert all(float(s) == 2.0 ** round(np.log2(s)) for s in scales)
+
+
+def test_guard_identity_with_static_unit_scale():
+    """numerics_guard=True with the default static scale 1.0 is bitwise
+    identical to numerics_guard=False on finite steps — the guard costs
+    nothing when nothing goes wrong."""
+    cfg, tc, data = _tiny()
+    tc_off = dataclasses.replace(tc, numerics_guard=False)
+    s_on = init_train_state(jax.random.PRNGKey(0), cfg, tc)
+    s_off = init_train_state(jax.random.PRNGKey(0), cfg, tc_off)
+    f_on = jax.jit(make_train_step(cfg, tc))
+    f_off = jax.jit(make_train_step(cfg, tc_off))
+    for i in range(6):
+        batch = jax.tree.map(jnp.asarray, data.batch(i))
+        s_on, m_on = f_on(s_on, batch)
+        s_off, m_off = f_off(s_off, batch)
+        assert float(m_on["loss"]) == float(m_off["loss"])
+    _params_equal(s_on, s_off)
+    assert int(s_on.skipped) == 0
+
+
+def test_guard_scales_loss_before_grad():
+    """The reported loss is unscaled regardless of the carried scale, and
+    a large-but-finite scale produces bitwise-identical updates (power-of-
+    two scale/unscale round-trips exactly through f32 grads)."""
+    cfg, tc, data = _tiny()
+    tc_scaled = dataclasses.replace(tc, loss_scale_init=2.0 ** 10)
+    batch = jax.tree.map(jnp.asarray, data.batch(0))
+    s1 = init_train_state(jax.random.PRNGKey(0), cfg, tc)
+    s2 = init_train_state(jax.random.PRNGKey(0), cfg, tc_scaled)
+    _, m1 = jax.jit(make_train_step(cfg, tc))(s1, batch)
+    _, m2 = jax.jit(make_train_step(cfg, tc_scaled))(s2, batch)
+    assert float(m2["loss_scale"]) == 2.0 ** 10
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# loss-spike divergence rollback
+# ---------------------------------------------------------------------------
+
+def test_spike_rollback_restores_clean_curve(tmp_path):
+    """Silent state corruption (params ×100 injected mid-run) spikes the
+    loss; the detector rolls back to the last good checkpoint and the
+    final curve is bitwise identical to the clean run."""
+    cfg, tc, data = _tiny()
+    res = ResilienceConfig(ckpt_every=5, spike_threshold=2.0,
+                           spike_window=8, spike_warmup=4)
+    total = 20
+
+    clean_state, clean_hist, _ = train_resilient(
+        ckpt_dir=str(tmp_path / "clean"), model_cfg=cfg, train_cfg=tc,
+        data=data, total_steps=total, res=res)
+
+    fired = []
+
+    def corrupt_once(step, state):
+        if step == 12 and not fired:
+            fired.append(step)
+            return state._replace(
+                params=jax.tree.map(lambda p: p * 100.0, state.params))
+        return None
+
+    got_state, got_hist, ctr = train_resilient(
+        ckpt_dir=str(tmp_path / "corrupted"), model_cfg=cfg, train_cfg=tc,
+        data=data, total_steps=total, res=res, chaos_hook=corrupt_once)
+
+    assert fired == [12]
+    assert ctr["rollbacks"] >= 1 and ctr["restarts"] >= 1
+    assert [h["loss"] for h in clean_hist] == [h["loss"] for h in got_hist]
+    _params_equal(clean_state, got_state)
+
+
+def test_spike_accepted_after_rollback_cap(tmp_path):
+    """A spike that persists across clean replays is a genuine shift, not
+    corruption: after `max_rollbacks_per_step` the loop accepts it and
+    completes instead of looping forever."""
+    cfg, tc, data = _tiny()
+    res = ResilienceConfig(ckpt_every=5, spike_threshold=2.0,
+                           spike_window=8, spike_warmup=4,
+                           max_rollbacks_per_step=2)
+
+    def always_corrupt(step, state):
+        if step == 12:  # fires on every replay too — a persistent shift
+            return state._replace(
+                params=jax.tree.map(lambda p: p * 100.0, state.params))
+        return None
+
+    _, hist, ctr = train_resilient(
+        ckpt_dir=str(tmp_path), model_cfg=cfg, train_cfg=tc,
+        data=data, total_steps=20, res=res, chaos_hook=always_corrupt)
+    # every post-shift step gets at most the per-step cap before acceptance;
+    # the decisive property is termination at full length (no infinite loop)
+    assert ctr["rollbacks"] >= 2
+    assert ctr["rollbacks"] <= 2 * 20
+    assert len(hist) == 20
+
+
+def test_divergence_rollback_carries_context():
+    e = DivergenceRollback(7, 120.0, 6.0)
+    assert e.step == 7 and e.loss == 120.0 and e.reference == 6.0
+    assert "step 7" in str(e)
+
+
+# ---------------------------------------------------------------------------
+# property: random fault schedules never change the curve
+# ---------------------------------------------------------------------------
+
+_PROP_REF = {}
+
+
+def _prop_reference():
+    if "ref" not in _PROP_REF:
+        cfg, tc, data = _tiny()
+        with tempfile.TemporaryDirectory() as d:
+            state, hist, _ = train_resilient(
+                ckpt_dir=d, model_cfg=cfg, train_cfg=tc, data=data,
+                total_steps=10, res=ResilienceConfig(ckpt_every=2))
+        _PROP_REF["ref"] = (
+            [h["loss"] for h in hist],
+            jax.tree.map(np.asarray, state.params),
+        )
+    return _PROP_REF["ref"]
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2 ** 16),
+       rate=st.floats(min_value=0.0, max_value=0.05))
+def test_random_fault_schedule_preserves_curve(seed, rate):
+    ref_losses, ref_params = _prop_reference()
+    cfg, tc, data = _tiny()
+    inj = FaultInjector(rate=rate, seed=seed, sites=FaultInjector.TRAIN_SITES)
+    with tempfile.TemporaryDirectory() as d:
+        state, hist, ctr = train_resilient(
+            ckpt_dir=d, model_cfg=cfg, train_cfg=tc, data=data,
+            total_steps=10, res=ResilienceConfig(ckpt_every=2, max_restarts=500),
+            injector=inj)
+    assert [h["loss"] for h in hist] == ref_losses
+    for a, b in zip(jax.tree.leaves(ref_params), jax.tree.leaves(state.params)):
+        np.testing.assert_array_equal(a, np.asarray(b))
