@@ -326,6 +326,8 @@ def varlen_attention(
     chunk: int = 0,
     impl: str = "flashd",
     block_q: Optional[int] = None,
+    k_scale: Optional[jax.Array] = None,  # [P, Hkv] f32 — quantized pool
+    v_scale: Optional[jax.Array] = None,  # [P, Hkv] f32
 ) -> jax.Array:
     """Packed varlen attention over a paged KV cache → o [T, Hq, dv].
 
@@ -343,12 +345,19 @@ def varlen_attention(
     (block_q-aligned segments, see kernels/flashd_varlen.py); rows are
     padded to a block multiple here, but segment ALIGNMENT is the
     caller's job (the scheduler's packer provides it).
+
+    `k_scale`/`v_scale` ([P, Hkv] f32) mark a quantized page pool
+    (DESIGN.md §3.8): the kernel dequantizes tiles in VMEM after the DMA
+    gather; this mirror dequantizes during its page gather — identical
+    arithmetic, so it stays the differential oracle.
     """
     t, hq, d = q.shape
     _, page, hkv, dv = v_pages.shape
     g = hq // hkv
     if scale is None:
         scale = float(1.0 / (d ** 0.5))
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("k_scale and v_scale must be passed together")
     seq_ids = jnp.asarray(seq_ids, jnp.int32)
     q_pos = jnp.asarray(q_pos, jnp.int32)
     kv_len = jnp.asarray(kv_len, jnp.int32).reshape(-1)
@@ -359,7 +368,11 @@ def varlen_attention(
         if block_q is None:
             from repro.kernels.tuning import choose_varlen_blocks
 
-            block_q = choose_varlen_blocks(t, d, dv, group=g, page=page).block_q
+            block_q = choose_varlen_blocks(
+                t, d, dv, group=g, page=page,
+                kv_itemsize=jnp.dtype(k_pages.dtype).itemsize
+                if k_scale is not None else 4,
+            ).block_q
         pad = (-t) % block_q
         if pad:
             q = jnp.pad(q, ((0, pad), (0, 0), (0, 0)))
@@ -368,13 +381,14 @@ def varlen_attention(
         o = kernel_ops.pallas_varlen(
             q, k_pages, v_pages, block_tbl, seq_ids, q_pos, kv_len,
             scale=scale, window=window, chunk=chunk, block_q=block_q,
+            k_scale=k_scale, v_scale=v_scale,
         )
         return o[:t]
 
     # jnp mirror: gather each row's sequence cache, one einsum per pack.
     sid = jnp.maximum(seq_ids, 0)
-    k_cache = gather_pages(k_pages, block_tbl)  # [B, S, Hkv, d]
-    v_cache = gather_pages(v_pages, block_tbl)
+    k_cache = gather_pages(k_pages, block_tbl, scales=k_scale)  # [B, S, Hkv, d]
+    v_cache = gather_pages(v_pages, block_tbl, scales=v_scale)
     s_tot = k_cache.shape[1]
     kt = k_cache[sid].astype(jnp.float32)  # [T, S, Hkv, d]
     vt = v_cache[sid].astype(jnp.float32)
@@ -400,16 +414,27 @@ def varlen_attention(
     return o.reshape(t, hq, dv).astype(q.dtype)
 
 
-def gather_pages(pages: jax.Array, block_tbl: jax.Array) -> jax.Array:
+def gather_pages(
+    pages: jax.Array,
+    block_tbl: jax.Array,
+    scales: Optional[jax.Array] = None,
+) -> jax.Array:
     """[P, page, Hkv, ·] pool + [B, N] table → contiguous [B, N·page, Hkv, ·].
 
     The jnp materialization of the block-table indirection the paged Pallas
     kernel performs in its DMA descriptors — the oracle for that kernel,
     and the bridge that lets every contiguous-cache consumer (the split-K
-    jnp path, cross-device cp_decode) run against a paged cache."""
+    jnp path, cross-device cp_decode) run against a paged cache.
+
+    With `scales` ([P, Hkv] f32, a quantized pool's per-(page, head)
+    side-band) the gathered view is dequantized to f32 — the mirror of the
+    kernels' in-tile dequant (DESIGN.md §3.8)."""
     b, n = block_tbl.shape
     _, page, hkv = pages.shape[:3]
-    return pages[block_tbl].reshape(b, n * page, hkv, pages.shape[-1])
+    out = pages[block_tbl]  # [B, N, page, Hkv, ·]
+    if scales is not None:
+        out = out.astype(jnp.float32) * scales[block_tbl][:, :, None, :, None]
+    return out.reshape(b, n * page, hkv, pages.shape[-1])
 
 
 def decode_attention_paged(
@@ -423,6 +448,8 @@ def decode_attention_paged(
     window: int = 0,
     chunk: int = 0,
     n_splits: Optional[int] = None,
+    k_scale: Optional[jax.Array] = None,  # [P, Hkv] f32 — quantized pool
+    v_scale: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Single-step decode against a paged KV cache (DESIGN.md §3.4).
 
@@ -433,10 +460,13 @@ def decode_attention_paged(
     FLASH-D sigmoid merge otherwise. The Pallas hot path
     (`kernels.ops.pallas_decode_paged`) skips the gather entirely: the
     block table becomes a scalar-prefetch operand and the DMA engine
-    fetches physical pages directly.
+    fetches physical pages directly. Quantized pools (k_scale/v_scale,
+    DESIGN.md §3.8) are dequantized during the gather.
     """
-    k_cache = gather_pages(k_pages, block_tbl)
-    v_cache = gather_pages(v_pages, block_tbl)
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("k_scale and v_scale must be passed together")
+    k_cache = gather_pages(k_pages, block_tbl, scales=k_scale)
+    v_cache = gather_pages(v_pages, block_tbl, scales=v_scale)
     return decode_attention(
         q, k_cache, v_cache, cache_len, scale=scale, window=window,
         chunk=chunk, n_splits=n_splits,

@@ -336,15 +336,18 @@ def flashd_decode_pallas(
 def _decode_paged_kernel(
     tbl_ref, cache_len_ref,  # scalar prefetch (SMEM)
     q_ref, k_ref, v_ref,  # VMEM blocks (k/v: the ip-th *physical* page)
-    o_ref,
-    acc_ref, lam_scratch,  # VMEM carry
-    *,
+    *refs,  # quantized: (ks, vs) scale blocks; then o, then VMEM carry
     page: int,
     n_tbl: int,
     window: int,
     chunk: int,
     scale: float,
+    quantized: bool,
 ):
+    if quantized:
+        ks_ref, vs_ref, o_ref, acc_ref, lam_scratch = refs
+    else:
+        (o_ref, acc_ref, lam_scratch), ks_ref, vs_ref = refs, None, None
     ib = pl.program_id(0)
     ip = pl.program_id(2)  # logical page index — innermost, sequential
     cache_len = cache_len_ref[ib]
@@ -358,11 +361,13 @@ def _decode_paged_kernel(
 
     @pl.when(_split_live(cache_len, start, lo, page, window=window, chunk=chunk))
     def _body():
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # [page, d] — gathered page
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if quantized:  # dequant in-tile: one per-(page, head) f32 scale each
+            k = k * ks_ref[0, 0]
+            v = v * vs_ref[0, 0]
         o_p, lam_p = _split_partial(
-            cache_len, start,
-            q_ref[0, 0].astype(jnp.float32),
-            k_ref[0, :, 0, :].astype(jnp.float32),  # [page, d] — gathered page
-            v_ref[0, :, 0, :].astype(jnp.float32),
+            cache_len, start, q_ref[0, 0].astype(jnp.float32), k, v,
             lo=lo, split=page, window=window, chunk=chunk, scale=scale,
         )
         _merge_into_carry(o_p, lam_p, acc_ref, lam_scratch)
@@ -382,6 +387,8 @@ def flashd_decode_paged_pallas(
     scale: Optional[float] = None,
     window: int = 0,
     chunk: int = 0,
+    k_scale: Optional[jax.Array] = None,  # [P, Hkv] f32 — quantized pool
+    v_scale: Optional[jax.Array] = None,  # [P, Hkv] f32
     interpret: bool = False,
 ):
     """Fused FLASH-D decode over a paged KV cache → o [B, Hq, dv].
@@ -395,9 +402,15 @@ def flashd_decode_paged_pallas(
     past the live region may hold anything (engine convention: garbage page
     0) — their pages are DMA'd but `pl.when`-skipped, like padded splits.
 
+    With `k_scale`/`v_scale` the pool is quantized (runtime/quant.py,
+    DESIGN.md §3.8): the same index maps fetch the page's per-head f32
+    scale as a (1, 1) block and the tile is dequantized right after its
+    upcast, before the scores — nothing downstream of the multiply changes.
+
     Without pltpu (non-TPU install), falls back to a jnp gather of the
     table followed by the contiguous fused kernel — same math, the gather
-    materialized in HBM instead of hidden in the DMA descriptors.
+    (and dequant) materialized in HBM instead of hidden in the DMA
+    descriptors.
     """
     b, hq, d = q.shape
     p_pool, page, hkv, dv = v_pages.shape
@@ -405,12 +418,19 @@ def flashd_decode_paged_pallas(
     g = hq // hkv
     if scale is None:
         scale = float(1.0 / (d ** 0.5))
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("k_scale and v_scale must be passed together")
+    quantized = k_scale is not None
     block_tbl = jnp.asarray(block_tbl, jnp.int32)
     cache_len = jnp.asarray(cache_len, jnp.int32).reshape(b)
 
     if not _HAS_PLTPU:  # pragma: no cover — jax without pallas TPU support
-        kc = jnp.moveaxis(k_pages[block_tbl], 3, 1).reshape(b, hkv, n_tbl * page, d)
-        vc = jnp.moveaxis(v_pages[block_tbl], 3, 1).reshape(b, hkv, n_tbl * page, dv)
+        kg, vg_ = k_pages[block_tbl], v_pages[block_tbl]  # [B, N, page, Hkv, ·]
+        if quantized:
+            kg = kg.astype(jnp.float32) * k_scale[block_tbl][:, :, None, :, None]
+            vg_ = vg_.astype(jnp.float32) * v_scale[block_tbl][:, :, None, :, None]
+        kc = jnp.moveaxis(kg, 3, 1).reshape(b, hkv, n_tbl * page, d)
+        vc = jnp.moveaxis(vg_, 3, 1).reshape(b, hkv, n_tbl * page, dv)
         return flashd_decode_pallas(
             q, kc, vc, cache_len, scale=scale, n_splits=n_tbl, window=window,
             chunk=chunk, fused=True, interpret=interpret,
@@ -419,21 +439,27 @@ def flashd_decode_paged_pallas(
     qg = q.reshape(b, hkv, g, d)
     kernel = functools.partial(
         _decode_paged_kernel, page=page, n_tbl=n_tbl, window=window,
-        chunk=chunk, scale=scale,
+        chunk=chunk, scale=scale, quantized=quantized,
     )
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d), lambda b_, h, ip, tbl, cl: (b_, h, 0, 0)),
+        # the physical page: logical page ip of row b_ through the table
+        pl.BlockSpec(
+            (1, page, 1, d), lambda b_, h, ip, tbl, cl: (tbl[b_, ip], 0, h, 0)
+        ),
+        pl.BlockSpec(
+            (1, page, 1, dv), lambda b_, h, ip, tbl, cl: (tbl[b_, ip], 0, h, 0)
+        ),
+    ]
+    if quantized:  # per-(page, head) scales ride the same table indirection
+        in_specs += [
+            pl.BlockSpec((1, 1), lambda b_, h, ip, tbl, cl: (tbl[b_, ip], h)),
+            pl.BlockSpec((1, 1), lambda b_, h, ip, tbl, cl: (tbl[b_, ip], h)),
+        ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, hkv, n_tbl),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, d), lambda b_, h, ip, tbl, cl: (b_, h, 0, 0)),
-            # the physical page: logical page ip of row b_ through the table
-            pl.BlockSpec(
-                (1, page, 1, d), lambda b_, h, ip, tbl, cl: (tbl[b_, ip], 0, h, 0)
-            ),
-            pl.BlockSpec(
-                (1, page, 1, dv), lambda b_, h, ip, tbl, cl: (tbl[b_, ip], 0, h, 0)
-            ),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, 1, g, dv), lambda b_, h, ip, tbl, cl: (b_, h, 0, 0)
         ),
@@ -455,5 +481,8 @@ def flashd_decode_paged_pallas(
         interpret=interpret,
         **({"compiler_params": compiler_params} if compiler_params else {}),
     )
-    o = call(block_tbl, cache_len, qg, k_pages, v_pages)
+    args = (block_tbl, cache_len, qg, k_pages, v_pages)
+    if quantized:
+        args += (jnp.asarray(k_scale, jnp.float32), jnp.asarray(v_scale, jnp.float32))
+    o = call(*args)
     return o.reshape(b, hq, dv)

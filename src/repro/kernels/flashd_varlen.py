@@ -96,9 +96,7 @@ def _varlen_partial(q, k, q_pos, kv_len, lo, *, page, window, chunk, scale, v):
 def _varlen_kernel(
     blk_seq_ref, kv_len_ref, tbl_ref,  # scalar prefetch (SMEM)
     q_ref, qpos_ref, k_ref, v_ref,  # VMEM (k/v: the gathered physical page)
-    o_ref,
-    acc_ref, lam_scratch,  # VMEM carry
-    *,
+    *refs,  # quantized: (ks, vs) scale blocks; then o, then VMEM carry
     block_q: int,
     group: int,
     page: int,
@@ -106,7 +104,12 @@ def _varlen_kernel(
     window: int,
     chunk: int,
     scale: float,
+    quantized: bool,
 ):
+    if quantized:
+        ks_ref, vs_ref, o_ref, acc_ref, lam_scratch = refs
+    else:
+        (o_ref, acc_ref, lam_scratch), ks_ref, vs_ref = refs, None, None
     ib = pl.program_id(0)
     ip = pl.program_id(2)  # logical page — innermost, sequential
     seq_raw = blk_seq_ref[ib]
@@ -134,12 +137,16 @@ def _varlen_kernel(
     @pl.when(live)
     def _body():
         q = q_ref[:, 0].astype(jnp.float32).reshape(block_q * group, -1)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if quantized:  # dequant in-tile: one per-(page, head) f32 scale each
+            k = k * ks_ref[0, 0]
+            v = v * vs_ref[0, 0]
         o_p, lam_p = _varlen_partial(
-            q,
-            k_ref[0, :, 0, :].astype(jnp.float32),
+            q, k,
             jnp.repeat(q_pos, group),
             kv_len, lo, page=page, window=window, chunk=chunk, scale=scale,
-            v=v_ref[0, :, 0, :].astype(jnp.float32),
+            v=v,
         )
         _merge_into_carry(o_p, lam_p, acc_ref, lam_scratch)
 
@@ -162,6 +169,8 @@ def flashd_varlen_pallas(
     window: int = 0,
     chunk: int = 0,
     block_q: int,
+    k_scale: Optional[jax.Array] = None,  # [P, Hkv] f32 — quantized pool
+    v_scale: Optional[jax.Array] = None,  # [P, Hkv] f32
     interpret: bool = False,
 ) -> jax.Array:
     """Packed varlen FLASH-D forward over a paged cache → o [T, Hq, dv].
@@ -169,6 +178,11 @@ def flashd_varlen_pallas(
     T must be a multiple of `block_q` and each block must belong to one
     sequence (the packing contract above) — callers go through
     `repro.core.attention.varlen_attention`, which pads and documents it.
+
+    With `k_scale`/`v_scale` the page pool is quantized (runtime/quant.py,
+    DESIGN.md §3.8): each per-(page, head) f32 scale rides the same
+    block-table indirection as its page and the tile is dequantized right
+    after its upcast, before the scores — the merge is untouched.
     """
     t, hq, d = q.shape
     _, page, hkv, dv = v_pages.shape
@@ -178,6 +192,9 @@ def flashd_varlen_pallas(
         scale = float(1.0 / (d ** 0.5))
     if t % block_q:
         raise ValueError(f"packed length {t} not a multiple of block_q={block_q}")
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("k_scale and v_scale must be passed together")
+    quantized = k_scale is not None
     nb = t // block_q
 
     seq_ids = jnp.asarray(seq_ids, jnp.int32)
@@ -191,6 +208,7 @@ def flashd_varlen_pallas(
         return varlen_attention(
             q, k_pages, v_pages, block_tbl, seq_ids, q_pos, kv_len,
             scale=scale, window=window, chunk=chunk, impl="flashd",
+            k_scale=k_scale, v_scale=v_scale,
         )
 
     qg = q.reshape(t, hkv, g, d)
@@ -198,32 +216,48 @@ def flashd_varlen_pallas(
 
     kernel = functools.partial(
         _varlen_kernel, block_q=block_q, group=g, page=page, n_tbl=n_tbl,
-        window=window, chunk=chunk, scale=scale,
+        window=window, chunk=chunk, scale=scale, quantized=quantized,
     )
+    in_specs = [
+        pl.BlockSpec(
+            (block_q, 1, g, d),
+            lambda ib, h, ip, bs, kl, tbl: (ib, h, 0, 0),
+        ),
+        pl.BlockSpec((1, block_q), lambda ib, h, ip, bs, kl, tbl: (ib, 0)),
+        # the physical page: logical page ip of the block's sequence,
+        # resolved through the table in the DMA descriptor
+        pl.BlockSpec(
+            (1, page, 1, d),
+            lambda ib, h, ip, bs, kl, tbl: (
+                tbl[jnp.maximum(bs[ib], 0), ip], 0, h, 0
+            ),
+        ),
+        pl.BlockSpec(
+            (1, page, 1, dv),
+            lambda ib, h, ip, bs, kl, tbl: (
+                tbl[jnp.maximum(bs[ib], 0), ip], 0, h, 0
+            ),
+        ),
+    ]
+    if quantized:  # per-(page, head) scales ride the same table indirection
+        in_specs += [
+            pl.BlockSpec(
+                (1, 1),
+                lambda ib, h, ip, bs, kl, tbl: (
+                    tbl[jnp.maximum(bs[ib], 0), ip], h
+                ),
+            ),
+            pl.BlockSpec(
+                (1, 1),
+                lambda ib, h, ip, bs, kl, tbl: (
+                    tbl[jnp.maximum(bs[ib], 0), ip], h
+                ),
+            ),
+        ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(nb, hkv, n_tbl),
-        in_specs=[
-            pl.BlockSpec(
-                (block_q, 1, g, d),
-                lambda ib, h, ip, bs, kl, tbl: (ib, h, 0, 0),
-            ),
-            pl.BlockSpec((1, block_q), lambda ib, h, ip, bs, kl, tbl: (ib, 0)),
-            # the physical page: logical page ip of the block's sequence,
-            # resolved through the table in the DMA descriptor
-            pl.BlockSpec(
-                (1, page, 1, d),
-                lambda ib, h, ip, bs, kl, tbl: (
-                    tbl[jnp.maximum(bs[ib], 0), ip], 0, h, 0
-                ),
-            ),
-            pl.BlockSpec(
-                (1, page, 1, dv),
-                lambda ib, h, ip, bs, kl, tbl: (
-                    tbl[jnp.maximum(bs[ib], 0), ip], 0, h, 0
-                ),
-            ),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (block_q, 1, g, dv), lambda ib, h, ip, bs, kl, tbl: (ib, h, 0, 0)
         ),
@@ -245,8 +279,14 @@ def flashd_varlen_pallas(
         interpret=interpret,
         **({"compiler_params": compiler_params} if compiler_params else {}),
     )
-    o = call(
+    args = (
         blk_seq, kv_len, jnp.asarray(block_tbl, jnp.int32),
         qg, qpos2, k_pages, v_pages,
     )
+    if quantized:
+        args += (
+            jnp.asarray(k_scale, jnp.float32),
+            jnp.asarray(v_scale, jnp.float32),
+        )
+    o = call(*args)
     return o.reshape(t, hq, dv)

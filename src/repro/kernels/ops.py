@@ -231,11 +231,15 @@ def pallas_decode_paged(
     scale=None,
     window: int = 0,
     chunk: int = 0,
+    k_scale: jax.Array | None = None,  # [P, Hkv] f32 — quantized pool
+    v_scale: jax.Array | None = None,
 ):
     """Paged fused decode — the block table rides in as a scalar-prefetch
     operand, so K/V pages are gathered by the DMA engine (DESIGN.md §3.4).
     Page arrays are stored page-major ([P, page, Hkv, d]), which is already
-    the kernel layout — no transpose on the hot path."""
+    the kernel layout — no transpose on the hot path. When the pool is
+    quantized (DESIGN.md §3.8) the per-(page, head) scales ride the same
+    indirection and tiles are dequantized in-kernel."""
     o = flashd_decode_paged_pallas(
         q[:, 0] if q.ndim == 4 else q,
         k_pages,
@@ -245,6 +249,8 @@ def pallas_decode_paged(
         scale=scale,
         window=window,
         chunk=chunk,
+        k_scale=k_scale,
+        v_scale=v_scale,
         interpret=_interpret(),
     )
     return o[:, None]  # [B, 1, Hq, dv]
@@ -264,6 +270,8 @@ def pallas_varlen(
     window: int = 0,
     chunk: int = 0,
     block_q: int,
+    k_scale: jax.Array | None = None,  # [P, Hkv] f32 — quantized pool
+    v_scale: jax.Array | None = None,
 ):
     """Unified packed varlen step (DESIGN.md §3.5): prefill chunks and
     decode rows in ONE kernel dispatch, K/V gathered through the block
@@ -276,6 +284,7 @@ def pallas_varlen(
         jnp.asarray(q_pos, jnp.int32),
         jnp.asarray(kv_len, jnp.int32).reshape(-1),
         scale=scale, window=window, chunk=chunk, block_q=block_q,
+        k_scale=k_scale, v_scale=v_scale,
         interpret=_interpret(),
     )
 
@@ -385,6 +394,8 @@ def jnp_decode_paged(
     scale=None,
     window: int = 0,
     chunk: int = 0,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
 ):
     from repro.core.attention import decode_attention_paged  # lazy: avoid cycle
 
@@ -394,6 +405,7 @@ def jnp_decode_paged(
         jnp.asarray(block_tbl, jnp.int32),
         jnp.asarray(cache_len, jnp.int32).reshape(-1),
         scale=scale, window=window, chunk=chunk,
+        k_scale=k_scale, v_scale=v_scale,
     )
 
 
@@ -411,6 +423,8 @@ def jnp_varlen(
     window: int = 0,
     chunk: int = 0,
     block_q: int,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
 ):
     from repro.core.attention import varlen_attention  # lazy: avoid cycle
 
@@ -421,5 +435,5 @@ def jnp_varlen(
         jnp.asarray(q_pos, jnp.int32),
         jnp.asarray(kv_len, jnp.int32).reshape(-1),
         scale=scale, window=window, chunk=chunk, impl="flashd",
-        block_q=block_q,
+        block_q=block_q, k_scale=k_scale, v_scale=v_scale,
     )

@@ -105,17 +105,23 @@ def prefill_vmem_bytes(block_q: int, block_k: int, d: int, dv: int) -> int:
     return 4 * words
 
 
-def decode_vmem_bytes(split: int, d: int, dv: int, group: int) -> int:
-    """f32 working set of one decode grid step: q + k + v + carry + scores."""
-    words = (
+def decode_vmem_bytes(
+    split: int, d: int, dv: int, group: int, *, kv_itemsize: int = 4
+) -> int:
+    """Working set of one decode grid step: q + k + v + carry + scores.
+
+    Everything is f32 except the K/V split, which is `kv_itemsize` bytes
+    per element (1 for an int8/fp8 quantized page pool). A quantized tile
+    also DMAs its per-page scale side-band (two f32 scalars)."""
+    f32_words = (
         group * d            # q block
-        + split * d          # k split
-        + split * dv         # v split
         + group * dv         # acc carry
         + group              # Λ carry
         + group * split      # score tile
     )
-    return 4 * words
+    kv_words = split * d + split * dv  # k split + v split
+    side_band = 2 * 4 if kv_itemsize < 4 else 0  # k/v page scales
+    return 4 * f32_words + kv_itemsize * kv_words + side_band
 
 
 def _shrink_to_lane(n: int) -> int:
@@ -162,6 +168,7 @@ def choose_decode_split(
     window: int = 0,
     chunk: int = 0,
     vmem_budget: int = VMEM_BUDGET_BYTES,
+    kv_itemsize: int = 4,
 ) -> DecodeSplit:
     """Heuristic (n_splits, split) for split-K decode.
 
@@ -170,7 +177,9 @@ def choose_decode_split(
     long splits amortize issue overhead, short splits let masked (dead)
     regions be skipped at finer grain. Target 512 positions per split —
     shrunk until the KV block fits the budget, and never longer than the
-    live mask region (window / chunk caches only ever attend that many)."""
+    live mask region (window / chunk caches only ever attend that many).
+    `kv_itemsize` is the stored K/V element width (1 for a quantized
+    pool) — smaller elements let more positions fit one split."""
     dv = d if dv is None else dv
     s_max = max(s_max, 1)
     live = s_max
@@ -180,7 +189,11 @@ def choose_decode_split(
         live = min(live, chunk)
 
     split = min(512, s_max)
-    while decode_vmem_bytes(split, d, dv, group) > vmem_budget and split > _MIN_BLOCK:
+    while (
+        decode_vmem_bytes(split, d, dv, group, kv_itemsize=kv_itemsize)
+        > vmem_budget
+        and split > _MIN_BLOCK
+    ):
         split = max(_MIN_BLOCK, _shrink_to_lane(split // 2))
     # a split longer than the live region wastes masked work at its edges
     if live < split:
@@ -248,6 +261,7 @@ def choose_page_size(
     window: int = 0,
     chunk: int = 0,
     vmem_budget: int = VMEM_BUDGET_BYTES,
+    kv_itemsize: int = 4,
 ) -> int:
     """Heuristic page size for the paged decode kernel.
 
@@ -258,18 +272,26 @@ def choose_page_size(
       * kernel: long pages amortize DMA issue overhead and keep the MXU
         fed — same force as the decode split heuristic;
       * allocator: internal fragmentation wastes up to page−1 tokens per
-        live sequence, so serving many short sequences wants small pages.
+        live sequence, so serving many short sequences wants small pages;
+      * radix cache: only FULL pages are cacheable, so a max-length
+        sequence must span ≥ 2 pages or the prefix cache can never index
+        anything (one page per sequence means the lone page is never
+        "full" until the sequence retires at exactly max_len).
 
-    We take the decode-split answer (VMEM-fitted, ≤ live mask region) and
+    We take the decode-split answer (VMEM-fitted, ≤ live mask region),
     cap it at 64 tokens — at that size the fragmentation bound is ≤ 63
     tokens/seq while a [64, d] tile still fills an MXU pass for d ≥ 128 —
-    then round down to a power of two so page arithmetic (pos // page,
-    pos % page) stays cheap on the scalar core."""
+    and additionally at max_len // 2 whenever max_len ≥ 16 (the ≥ 2 pages
+    guarantee above; below 16 tokens a useful cache granule doesn't exist
+    and kernel efficiency wins), then round down to a power of two so page
+    arithmetic (pos // page, pos % page) stays cheap on the scalar core."""
     split = choose_decode_split(
         max_len, d, dv, group=group, window=window, chunk=chunk,
-        vmem_budget=vmem_budget,
+        vmem_budget=vmem_budget, kv_itemsize=kv_itemsize,
     ).split
     size = min(64, split, max(max_len, 1))
+    if max_len >= 16:
+        size = min(size, max_len // 2)
     return max(_MIN_BLOCK // 2, 1 << (max(size, 1).bit_length() - 1))
 
 
@@ -282,12 +304,14 @@ def choose_page_layout(
     pool_tokens: int,
     page_size: Optional[int] = None,
     vmem_budget: int = VMEM_BUDGET_BYTES,
+    kv_itemsize: int = 4,
 ) -> PageLayout:
     """Full pool geometry for a token budget: pages covering `pool_tokens`
     plus the reserved garbage page (id 0, the write target of dead batch
     slots — never allocated)."""
     page = page_size or choose_page_size(
-        max_len, d, dv, group=group, vmem_budget=vmem_budget
+        max_len, d, dv, group=group, vmem_budget=vmem_budget,
+        kv_itemsize=kv_itemsize,
     )
     n_pages = max(2, -(-pool_tokens // page) + 1)
     return PageLayout(
@@ -342,20 +366,25 @@ class VarlenBlocks:
     block_q: int
 
 
-def varlen_vmem_bytes(block_q: int, page: int, d: int, dv: int, group: int) -> int:
-    """f32 working set of one varlen grid step: q + k + v + carry + scores.
+def varlen_vmem_bytes(
+    block_q: int, page: int, d: int, dv: int, group: int,
+    *, kv_itemsize: int = 4,
+) -> int:
+    """Working set of one varlen grid step: q + k + v + carry + scores.
     The q tile carries `group` heads per row (GQA rows collapse into the
-    score matmul), the KV block is one page."""
+    score matmul), the KV block is one page — stored at `kv_itemsize`
+    bytes per element (1 when the page pool is quantized, plus the
+    two-scalar f32 scale side-band)."""
     rows = block_q * group
-    words = (
+    f32_words = (
         rows * d          # q tile
-        + page * d        # k page
-        + page * dv       # v page
         + rows * dv       # acc carry
         + rows            # Λ carry
         + rows * page     # score tile
     )
-    return 4 * words
+    kv_words = page * d + page * dv  # k page + v page
+    side_band = 2 * 4 if kv_itemsize < 4 else 0  # k/v page scales
+    return 4 * f32_words + kv_itemsize * kv_words + side_band
 
 
 def choose_varlen_blocks(
@@ -367,6 +396,7 @@ def choose_varlen_blocks(
     page: int = 64,
     segment_hint: Optional[int] = None,
     vmem_budget: int = VMEM_BUDGET_BYTES,
+    kv_itemsize: int = 4,
 ) -> VarlenBlocks:
     """Heuristic block_q for the packed varlen kernel.
 
@@ -383,7 +413,8 @@ def choose_varlen_blocks(
     hint = max(min(segment_hint or total_tokens, total_tokens), 1)
     block_q = min(128, bucket_pow2(hint, lo=_MIN_BLOCK))
     while (
-        varlen_vmem_bytes(block_q, page, d, dv, group) > vmem_budget
+        varlen_vmem_bytes(block_q, page, d, dv, group, kv_itemsize=kv_itemsize)
+        > vmem_budget
         and block_q > _MIN_BLOCK
     ):
         block_q = max(_MIN_BLOCK, block_q // 2)
@@ -397,11 +428,14 @@ def bucket_pow2(n: int, *, lo: int = 8, hi: Optional[int] = None) -> int:
     lengths — prompt lengths, packed-batch sizes — up to a power of two
     bounds the number of distinct compiled programs at O(log max_len)
     instead of one per distinct length. `hi` caps the bucket (a length
-    already at the cap compiles exactly one program)."""
+    already at the cap compiles exactly one program); a cap SMALLER than
+    `n` would silently truncate the caller's batch, so it raises."""
     n = max(int(n), 1)
+    if hi is not None and hi < n:
+        raise ValueError(f"bucket_pow2: hi={hi} < n={n} would truncate")
     b = max(1 << (n - 1).bit_length(), lo)
     if hi is not None:
-        b = min(b, hi)  # hi ≥ n keeps b ≥ n; a smaller cap is the caller's
+        b = min(b, hi)
     return b
 
 

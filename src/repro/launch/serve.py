@@ -63,6 +63,12 @@ def main(argv=None):
                    help="tokens per KV page (0 → tuned)")
     p.add_argument("--kv-pool-tokens", type=int, default=0,
                    help="paged pool size in tokens (0 → max_batch·max_len)")
+    p.add_argument("--kv-dtype", default="",
+                   help='quantize the paged KV pool: "int8" (or "fp8" '
+                        'where the host jax supports it) stores pages at '
+                        '1 B/elem with a per-page scale side-band — ~4x '
+                        'the tokens per byte of HBM (DESIGN.md §3.8); '
+                        'requires --kv-layout paged; "" → native dtype')
     p.add_argument("--step-mode", choices=("sequential", "mixed"),
                    default="sequential",
                    help="mixed: chunked-prefill continuous batching — one "
@@ -117,6 +123,7 @@ def main(argv=None):
         kv_layout=args.kv_layout,
         page_size=args.page_size,
         kv_pool_tokens=args.kv_pool_tokens,
+        kv_dtype=args.kv_dtype,
         step_mode=args.step_mode,
         token_budget=args.token_budget,
         prefill_chunk=args.prefill_chunk,
@@ -160,6 +167,10 @@ def main(argv=None):
         ttft = [eng.ttft[r] for r in sorted(eng.ttft)]
         print(f"  mean {np.mean(ttft)*1e3:.1f} ms, max {np.max(ttft)*1e3:.1f} ms")
     st = eng.stats()
+    if "kv_pool_bytes" in st:
+        print(f"kv pool: {st['kv_dtype']}, "
+              f"{st['kv_pool_bytes'] / 1024:.1f} KiB "
+              f"({st['kv_bytes_per_token']:.0f} B/token)")
     if st["prefix_cache_enabled"] or st["preemption_enabled"]:
         print(f"serving core: prefix-cache hit rate "
               f"{100 * st['hit_rate']:.1f}% "

@@ -351,20 +351,28 @@ def paged_mixers(cfg: ModelConfig) -> Tuple[str, ...]:
 
 
 def _layer_cache(spec, batch: int, max_len: int, cfg: ModelConfig,
-                 *, paged_geom=None):
+                 *, paged_geom=None, kv_spec=None):
     mixer, _ = spec
     hd = cfg.head_dim_
     if mixer.startswith("attn"):
         if paged_geom is not None and mixer not in ("attn_local", "attn_chunked"):
             n_pages, page_size, pages_per_seq = paged_geom
             pshape = (n_pages, page_size, cfg.n_kv_heads, hd)
-            return {
-                "k_pages": jnp.zeros(pshape, cfg.compute_dtype),
-                "v_pages": jnp.zeros(pshape, cfg.compute_dtype),
+            pool_dtype = cfg.compute_dtype if kv_spec is None else kv_spec.dtype
+            cache = {
+                "k_pages": jnp.zeros(pshape, pool_dtype),
+                "v_pages": jnp.zeros(pshape, pool_dtype),
                 # all rows start on the garbage page (id 0) — a dead slot's
                 # lockstep writes land there until the engine installs a table
                 "tbl": jnp.zeros((batch, pages_per_seq), jnp.int32),
             }
+            if kv_spec is not None:
+                # per-(page, head) scale side-band (DESIGN.md §3.8); 1.0 on
+                # never-written pages keeps every entry finite and positive
+                sshape = (n_pages, cfg.n_kv_heads)
+                cache["k_scale"] = jnp.ones(sshape, jnp.float32)
+                cache["v_scale"] = jnp.ones(sshape, jnp.float32)
+            return cache
         shape = (batch, max_len, cfg.n_kv_heads, hd)
         return {
             "k": jnp.zeros(shape, cfg.compute_dtype),
@@ -385,6 +393,7 @@ def init_decode_cache(
     layout: str = "contiguous",
     page_size: Optional[int] = None,
     n_pages: Optional[int] = None,
+    kv_dtype: str = "",
 ) -> dict:
     """Stacked per-block caches matching the params tree structure.
 
@@ -400,7 +409,18 @@ def init_decode_cache(
     ring-region and recurrent layers keep their contiguous layout. With no
     geometry given, `repro.kernels.tuning.choose_page_layout` sizes the
     pool at `batch · max_len` tokens — the contiguous footprint — so the
-    default is never worse; engines shrink it to oversubscribe."""
+    default is never worse; engines shrink it to oversubscribe.
+
+    kv_dtype ∈ runtime.quant.available() stores each paged pool in that
+    quantized format with per-(page, head) f32 scale leaves (`k_scale` /
+    `v_scale`, DESIGN.md §3.8) beside the pages; "" keeps the compute
+    dtype. Only paged global-attention pools quantize — ring regions and
+    recurrent state stay native."""
+    from repro.runtime import quant  # lazy: no cycle
+
+    kv_spec = quant.get_spec(kv_dtype)
+    if kv_spec is not None and layout != "paged":
+        raise ValueError("kv_dtype quantization requires layout='paged'")
     paged_geom = None
     if layout == "paged" and paged_mixers(cfg):
         from repro.kernels.tuning import choose_page_layout  # lazy: no cycle
@@ -411,6 +431,7 @@ def init_decode_cache(
             pool_tokens=(n_pages - 1) * page_size if (n_pages and page_size)
             else batch * max_len,
             page_size=page_size,
+            kv_itemsize=quant.kv_itemsize(kv_dtype),
         )
         paged_geom = (pl_.n_pages, pl_.page_size, pl_.pages_per_seq)
     elif layout not in ("contiguous", "paged"):
@@ -428,7 +449,8 @@ def init_decode_cache(
     if cfg.n_blocks > 0:
         per = {
             f"pos{j}": _layer_cache(
-                spec, batch, cache_len_for(spec), cfg, paged_geom=paged_geom
+                spec, batch, cache_len_for(spec), cfg,
+                paged_geom=paged_geom, kv_spec=kv_spec,
             )
             for j, spec in enumerate(cfg.pattern)
         }
@@ -438,7 +460,8 @@ def init_decode_cache(
     if cfg.remainder:
         per = {
             f"pos{j}": _layer_cache(
-                spec, batch, cache_len_for(spec), cfg, paged_geom=paged_geom
+                spec, batch, cache_len_for(spec), cfg,
+                paged_geom=paged_geom, kv_spec=kv_spec,
             )
             for j, spec in enumerate(cfg.remainder)
         }
@@ -515,9 +538,16 @@ def _paged_attn_step(p, q, k, v, cfg: ModelConfig, cache, pos):
     the table. Writes past the table (dead slots whose `pos` keeps
     advancing in the lockstep batch, or rows the engine retired by zeroing
     their table row) land on the garbage page 0 — the engine's convention
-    for harmless speculative writes (DESIGN.md §3.4)."""
+    for harmless speculative writes (DESIGN.md §3.4).
+
+    Quantized pools (`k_scale`/`v_scale` leaves, DESIGN.md §3.8) quantize
+    at write time: a slot-0 write fixes its page's per-head scale from
+    that row alone (never revised — the write-order determinism the radix
+    cache's content-addressed page sharing relies on), every other write
+    reuses the page's existing scale."""
     b = q.shape[0]
     k_pages, v_pages, tbl = cache["k_pages"], cache["v_pages"], cache["tbl"]
+    k_scale, v_scale = cache.get("k_scale"), cache.get("v_scale")
     page = k_pages.shape[1]
     n_tbl = tbl.shape[1]
     bidx = jnp.arange(b)
@@ -525,8 +555,26 @@ def _paged_attn_step(p, q, k, v, cfg: ModelConfig, cache, pos):
     slot = pos % page
     in_tbl = page_idx < n_tbl
     pid = jnp.where(in_tbl, tbl[bidx, jnp.minimum(page_idx, n_tbl - 1)], 0)
-    k_pages = k_pages.at[pid, slot].set(k[:, 0])
-    v_pages = v_pages.at[pid, slot].set(v[:, 0])
+    k_new, v_new = k[:, 0], v[:, 0]
+    if k_scale is not None:
+        from repro.runtime import quant  # lazy: no cycle
+
+        spec = quant.spec_for_dtype(k_pages.dtype)
+        is_slot0 = slot == 0
+        # masked scatter: non-slot0 rows are routed to the garbage page so
+        # a row sharing its page with a slot-0 writer can't scatter a stale
+        # scale over the fresh one
+        spid = jnp.where(is_slot0, pid, 0)
+        k_scale = k_scale.at[spid].set(
+            jnp.where(is_slot0[:, None], quant.slot0_scale(k_new, spec), k_scale[0])
+        )
+        v_scale = v_scale.at[spid].set(
+            jnp.where(is_slot0[:, None], quant.slot0_scale(v_new, spec), v_scale[0])
+        )
+        k_new = quant.quantize_rows(k_new, k_scale[pid], spec)
+        v_new = quant.quantize_rows(v_new, v_scale[pid], spec)
+    k_pages = k_pages.at[pid, slot].set(k_new)
+    v_pages = v_pages.at[pid, slot].set(v_new)
     eff_len = pos + 1
 
     use_kernel = cfg.attn_impl.endswith("_pallas")
@@ -541,19 +589,30 @@ def _paged_attn_step(p, q, k, v, cfg: ModelConfig, cache, pos):
         # cp_decode reason about. Traced only under an active ctx; DCE'd
         # (returns None at trace time) when the rule doesn't seq-shard.
         o = maybe_cp_decode(
-            q, gather_pages(k_pages, tbl), gather_pages(v_pages, tbl),
+            q,
+            gather_pages(k_pages, tbl, scales=k_scale),
+            gather_pages(v_pages, tbl, scales=v_scale),
             eff_len, use_kernel=use_kernel,
         )
     if o is None:
         if use_kernel:
             from repro.kernels import ops as kernel_ops  # lazy: no cycle
 
-            o = kernel_ops.pallas_decode_paged(q, k_pages, v_pages, tbl, eff_len)
+            o = kernel_ops.pallas_decode_paged(
+                q, k_pages, v_pages, tbl, eff_len,
+                k_scale=k_scale, v_scale=v_scale,
+            )
         else:
-            o = decode_attention_paged(q, k_pages, v_pages, tbl, eff_len)
+            o = decode_attention_paged(
+                q, k_pages, v_pages, tbl, eff_len,
+                k_scale=k_scale, v_scale=v_scale,
+            )
     o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim_)
     y = jnp.einsum("bsh,hd->bsd", o, p["wo"].astype(cfg.compute_dtype))
-    return y, {"k_pages": k_pages, "v_pages": v_pages, "tbl": tbl}
+    new_cache = {"k_pages": k_pages, "v_pages": v_pages, "tbl": tbl}
+    if k_scale is not None:
+        new_cache["k_scale"], new_cache["v_scale"] = k_scale, v_scale
+    return y, new_cache
 
 
 def packed_mixers_ok(cfg: ModelConfig) -> bool:
@@ -599,6 +658,7 @@ def _packed_attn(p, x, cfg: ModelConfig, kind: str, cache, positions, seq_ids,
         k = apply_rope(k, positions[None], cfg.rope_theta)
 
     k_pages, v_pages, tbl = cache["k_pages"], cache["v_pages"], cache["tbl"]
+    k_scale, v_scale = cache.get("k_scale"), cache.get("v_scale")
     page = k_pages.shape[1]
     n_tbl = tbl.shape[1]
     sid = jnp.maximum(seq_ids, 0)
@@ -606,16 +666,39 @@ def _packed_attn(p, x, cfg: ModelConfig, kind: str, cache, positions, seq_ids,
     in_tbl = (seq_ids >= 0) & (positions >= 0) & (page_idx < n_tbl)
     pid = jnp.where(in_tbl, tbl[sid, jnp.clip(page_idx, 0, n_tbl - 1)], 0)
     slot = jnp.where(positions >= 0, positions % page, 0)
-    k_pages = k_pages.at[pid, slot].set(k[0])
-    v_pages = v_pages.at[pid, slot].set(v[0])
+    k_new, v_new = k[0], v[0]
+    if k_scale is not None:  # quantized pool: same slot-0 rule as the
+        from repro.runtime import quant  # sequential step (DESIGN.md §3.8)
+
+        spec = quant.spec_for_dtype(k_pages.dtype)
+        is_slot0 = (slot == 0) & in_tbl
+        # scale updates scatter FIRST (non-slot0 rows routed to the garbage
+        # page), then every row quantizes with its page's updated scale —
+        # a pack writing slot 0 and slots 1..n of one page in the same
+        # dispatch sees exactly the sequential write order's values
+        spid = jnp.where(is_slot0, pid, 0)
+        k_scale = k_scale.at[spid].set(
+            jnp.where(is_slot0[:, None], quant.slot0_scale(k_new, spec), k_scale[0])
+        )
+        v_scale = v_scale.at[spid].set(
+            jnp.where(is_slot0[:, None], quant.slot0_scale(v_new, spec), v_scale[0])
+        )
+        k_new = quant.quantize_rows(k_new, k_scale[pid], spec)
+        v_new = quant.quantize_rows(v_new, v_scale[pid], spec)
+    k_pages = k_pages.at[pid, slot].set(k_new)
+    v_pages = v_pages.at[pid, slot].set(v_new)
 
     o = varlen_attention(
         q[0], k_pages, v_pages, tbl, seq_ids, positions, kv_len,
         impl=cfg.attn_impl, block_q=block_q,
+        k_scale=k_scale, v_scale=v_scale,
     )
     o = o.reshape(1, t, cfg.n_heads * hd)
     y = jnp.einsum("bsh,hd->bsd", o, p["wo"].astype(cdt))
-    return y, {"k_pages": k_pages, "v_pages": v_pages, "tbl": tbl}
+    new_cache = {"k_pages": k_pages, "v_pages": v_pages, "tbl": tbl}
+    if k_scale is not None:
+        new_cache["k_scale"], new_cache["v_scale"] = k_scale, v_scale
+    return y, new_cache
 
 
 def forward_packed(
@@ -789,7 +872,7 @@ def _freeze_dead_rows(new_cache: dict, old_cache: dict, alive: jax.Array):
         return None
 
     def apply(path, new, old):
-        if leaf_name(path) in ("k_pages", "v_pages"):
+        if leaf_name(path) in ("k_pages", "v_pages", "k_scale", "v_scale"):
             return new
         return jnp.where(alive.reshape((1, -1) + (1,) * (new.ndim - 2)), new, old)
 

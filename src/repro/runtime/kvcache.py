@@ -586,7 +586,12 @@ class PagedKVAllocator:
         return out
 
     # ---- invariants (tests call this after every schedule step) ----
-    def check(self) -> None:
+    def check(self, cache=None) -> None:
+        """Assert every allocator invariant. With `cache` (the engine's
+        device cache tree) the quantized pool's scale side-band is checked
+        too — see `_check_scales`."""
+        if cache is not None:
+            self._check_scales(cache)
         assert self._ref[GARBAGE_PAGE] == 0, "garbage page must never be allocated"
         assert GARBAGE_PAGE not in self._free
         # Σ refcounts == table references + tree references
@@ -662,3 +667,35 @@ class PagedKVAllocator:
                 )
         # reservations never exceed what the pool can actually produce
         assert sum(self._reserved.values()) <= len(self._free) + self._evictable()
+
+    def _check_scales(self, cache) -> None:
+        """Quantized-pool scale-side-band invariants (DESIGN.md §3.8).
+
+        Scales are indexed by PHYSICAL page id, so a prefix-shared or
+        tree-cached page has exactly one scale entry per head regardless
+        of how many tables alias it — the aliasing is structural, and this
+        check pins it: every scale leaf must span the pool's page axis
+        (one row per physical page), and every in-use page's scales must
+        be finite and positive (a page whose slot 0 was ever written gets
+        a scale ≥ quant._EPS-derived; never-written pages hold the init
+        value 1.0). A native (unquantized) cache has no scale leaves and
+        passes vacuously."""
+        import numpy as np  # lazy: this module is otherwise array-free
+        from jax import tree_util as jtu
+
+        in_use = [pid for pid in range(self.n_pages) if self._ref[pid] > 0]
+        for path, leaf in jtu.tree_leaves_with_path(cache):
+            name = next(
+                (e.key for e in reversed(path) if isinstance(e, jtu.DictKey)),
+                None,
+            )
+            if name not in ("k_scale", "v_scale"):
+                continue
+            arr = np.asarray(leaf)
+            assert arr.shape[-2] == self.n_pages, (
+                f"{name} page axis {arr.shape[-2]} != pool n_pages"
+                f" {self.n_pages}"
+            )
+            used = arr[..., in_use, :]
+            assert np.all(np.isfinite(used)), f"{name} has non-finite scales"
+            assert np.all(used > 0), f"{name} has non-positive scales"

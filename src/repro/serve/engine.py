@@ -119,6 +119,11 @@ class ServeConfig:
     kv_layout: str = "contiguous"  # "paged": page-pool KV in `serve`
     page_size: int = 0  # 0 → repro.kernels.tuning heuristic
     kv_pool_tokens: int = 0  # pool size in tokens; 0 → max_batch·max_len
+    # quantized page pool (DESIGN.md §3.8): "" keeps the compute dtype;
+    # a name from repro.runtime.quant.available() ("int8", and "fp8" where
+    # the host jax has float8) stores pages in that format with per-(page,
+    # head) f32 scale leaves, dequantized inside the attention kernels
+    kv_dtype: str = ""
     # prefix reuse: `prefix_sharing` is the soundness gate (global-attn
     # stacks only — auto-disabled on hybrid stacks), `prefix_cache` the
     # mechanism (the radix tree, which subsumes the old live-scan sharing:
@@ -155,11 +160,14 @@ def _map_paged(cache, *rest, pool=None, tbl=None, batch=None):
     """Tree-map over a (possibly paged) cache with per-leaf-kind functions.
 
     Leaf kinds by dict key: `k_pages`/`v_pages` are POOL leaves (global
-    page arrays, no batch axis — [n_blocks, P, page, Hkv, hd]); everything
-    else — including the block table `tbl` — is a PER-BATCH leaf (batch on
-    axis 1 after block stacking). `tbl=` overrides the per-batch handler
-    for table leaves (engine table mirroring); a missing handler leaves the
-    leaf unchanged. Extra cache trees in `rest` are zipped leaf-wise."""
+    page arrays, no batch axis — [n_blocks, P, page, Hkv, hd]), as are the
+    quantized pool's scale side-bands `k_scale`/`v_scale` ([n_blocks, P,
+    Hkv] — physical-page axis in the same position, so page copies move
+    page bytes and scale together); everything else — including the block
+    table `tbl` — is a PER-BATCH leaf (batch on axis 1 after block
+    stacking). `tbl=` overrides the per-batch handler for table leaves
+    (engine table mirroring); a missing handler leaves the leaf unchanged.
+    Extra cache trees in `rest` are zipped leaf-wise."""
     from jax import tree_util as jtu
 
     def leaf_name(path):
@@ -170,7 +178,7 @@ def _map_paged(cache, *rest, pool=None, tbl=None, batch=None):
 
     def apply(path, x, *xs):
         name = leaf_name(path)
-        if name in ("k_pages", "v_pages"):
+        if name in ("k_pages", "v_pages", "k_scale", "v_scale"):
             fn = pool
         elif name == "tbl":
             fn = tbl if tbl is not None else batch
@@ -229,6 +237,8 @@ class Engine:
                 # enc-dec) — serve falls back to the contiguous layout
                 pass
             else:
+                from repro.runtime import quant  # lazy: no cycle
+
                 self._page_layout = choose_page_layout(
                     serve_cfg.max_len,
                     model_cfg.head_dim_,
@@ -237,6 +247,7 @@ class Engine:
                     pool_tokens=serve_cfg.kv_pool_tokens
                     or serve_cfg.max_batch * serve_cfg.max_len,
                     page_size=serve_cfg.page_size or None,
+                    kv_itemsize=quant.kv_itemsize(serve_cfg.kv_dtype),
                 )
         # the mixed varlen step runs every layer on flat packed tokens
         # through the paged pool — global-attention-only stacks
@@ -445,6 +456,24 @@ class Engine:
                 pages_in_use=self._alloc.pages_in_use,
                 free_pages=self._alloc.free_pages,
             )
+        if self._paged_cache is not None and self._page_layout is not None:
+            # actual device footprint of the page pools (quantized pages +
+            # scale side-band included) per pool token — the equal-HBM
+            # denominator BENCH_quant.json budgets against
+            seen = 0
+            from jax import tree_util as jtu
+
+            for path, leaf in jtu.tree_leaves_with_path(self._paged_cache):
+                name = next(
+                    (e.key for e in reversed(path)
+                     if isinstance(e, jtu.DictKey)), None,
+                )
+                if name in ("k_pages", "v_pages", "k_scale", "v_scale"):
+                    seen += leaf.nbytes
+            pool_tokens = self._page_layout.n_pages * self._page_layout.page_size
+            s["kv_pool_bytes"] = int(seen)
+            s["kv_bytes_per_token"] = seen / max(pool_tokens, 1)
+            s["kv_dtype"] = self.sc.kv_dtype or "native"
         s["peak_active"] = self.peak_active
         s["ttft"] = dict(self.ttft)
         s["attn_impl"] = self.mc.attn_impl
@@ -761,6 +790,7 @@ class Engine:
             self._paged_cache = self.api.init_cache(
                 self.sc.max_batch, self.sc.max_len, self.mc,
                 layout="paged", page_size=lay.page_size, n_pages=lay.n_pages,
+                kv_dtype=self.sc.kv_dtype,
             )
         return self._alloc, self._paged_cache
 
@@ -1392,6 +1422,10 @@ class Engine:
                  # scheduler's clock starts at zero
                  "deadline": (max(0.0, float(r.deadline) - now)
                               if r.deadline is not None else None),
+                 # retry-backoff gates rebase the same way — a snapshot
+                 # taken mid-backoff restores with the REMAINING backoff,
+                 # not a stale absolute clock value
+                 "not_before": max(0.0, float(r.not_before) - now),
                  "retries": int(r.retries)}
                 for r in pending), key=lambda d: d["rid"]),
             "done": {str(i): np.asarray(r).astype(int).tolist()
@@ -1445,7 +1479,8 @@ class Engine:
         if pending:
             reqs = [Request(rid=i, prompt=np.asarray(p["prompt"], np.int32),
                             out=list(p["out"]), priority=int(p["priority"]),
-                            deadline=p["deadline"], retries=int(p["retries"]))
+                            deadline=p["deadline"], retries=int(p["retries"]),
+                            not_before=float(p.get("not_before", 0.0)))
                     for i, p in enumerate(pending)]
             outs = self.serve(reqs, int(state["max_new_tokens"]),
                               deadlines=[p["deadline"] for p in pending])

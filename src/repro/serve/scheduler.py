@@ -191,6 +191,10 @@ class Scheduler:
                 self.queue.append(Request(
                     rid=i, prompt=np.asarray(r.prompt), out=list(r.out),
                     priority=pr, deadline=dl, retries=r.retries,
+                    # a restored mid-backoff request keeps its gate: the
+                    # caller rebased it to this scheduler's clock (seconds
+                    # from construction), same convention as deadlines
+                    not_before=r.not_before,
                 ))
             else:
                 self.queue.append(Request(

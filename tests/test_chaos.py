@@ -360,3 +360,47 @@ def test_serve_accepts_request_objects(chaos_fixture):
     outs = eng.serve(half, N_NEW)
     for b, g in zip(base, outs):
         np.testing.assert_array_equal(b, g)
+
+
+def test_scheduler_not_before_gates_admission():
+    """A request whose backoff gate is in the future is invisible to
+    head() until the gate passes — priority cannot override backoff."""
+    req = Request(rid=0, prompt=np.asarray([1, 2, 3], np.int32),
+                  not_before=5.0, priority=9)
+    sched = Scheduler([req], 4, 2, eos_id=-1)
+    assert sched.head() is None  # gated: 5s of backoff remain
+    sched.queue[0].not_before = 0.0
+    assert sched.head() is not None
+
+
+def test_snapshot_rebases_backoff_to_remaining(chaos_fixture, tmp_path):
+    """Regression: `not_before` is an absolute reading of the scheduler's
+    monotonic clock, and a restored engine's clock restarts at zero. The
+    snapshot used to persist the raw value — a request 0.2s from
+    admission came back gated for its full original offset (or worse,
+    forever, once clocks drifted). Backoff must round-trip as REMAINING
+    seconds, exactly like deadlines."""
+    cfg, params, prompts, baselines = chaos_fixture
+    eng = Engine(params, cfg, _sc("paged"),
+                 fault_injector=FaultInjector(crash_after_checks=8))
+    with pytest.raises(EngineCrash):
+        eng.serve(prompts, N_NEW)
+    sched = eng._sched
+    assert sched.queue  # the crash folded live slots back into the queue
+    # leave one survivor mid-backoff, as a device-fault retry would
+    victim = sched.queue[0]
+    victim.retries = 1
+    victim.not_before = sched.now() + 0.2
+    eng.snapshot(str(tmp_path))
+
+    eng2 = Engine(params, cfg, _sc("paged"))
+    state = eng2.restore(str(tmp_path))
+    by_rid = {p["rid"]: p for p in state["pending"]}
+    rebased = by_rid[victim.rid]["not_before"]
+    assert 0.0 < rebased <= 0.2, rebased  # remaining seconds, not absolute
+    assert all(p["not_before"] == 0.0 for r, p in by_rid.items()
+               if r != victim.rid)
+    results = eng2.resume()  # waits out the 0.2s gate and finishes
+    assert set(results) == set(range(len(prompts)))
+    for i, base in enumerate(baselines["paged"]):
+        np.testing.assert_array_equal(base, results[i])

@@ -358,3 +358,20 @@ def test_failed_serve_recovers_pool_state(engine_fixture):
         small, 3)
     got = eng.serve(small, 3)
     np.testing.assert_array_equal(want[0], got[0])
+
+
+def test_default_tuning_yields_warm_hits(engine_fixture):
+    """Regression: with no explicit page_size, choose_page_size used to
+    return page == max_len for max_len ≤ 64 — every page partial, so the
+    radix cache could never donate a full page and repeated prompts got
+    hit_tokens == 0. Default tuning must leave warm hits reachable."""
+    cfg, params = engine_fixture
+    eng = Engine(params, cfg, ServeConfig(max_batch=2, max_len=32,
+                                          kv_layout="paged"))
+    rng = np.random.default_rng(11)
+    prompts = _shared_prefix_reqs(rng, cfg.vocab_size, 16, [3, 5])
+    cold = eng.serve(prompts, 4)
+    warm = eng.serve(prompts, 4)
+    assert eng.stats()["hit_tokens"] > 0
+    for a, b in zip(cold, warm):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -9,6 +9,7 @@ from repro.kernels import tuning
 from repro.kernels.tuning import (
     DecodeSplit,
     PrefillTiling,
+    bucket_pow2,
     choose_decode_split,
     choose_prefill_blocks,
     decode_vmem_bytes,
@@ -131,3 +132,35 @@ def test_decode_attention_split_path_dv_neq_d():
     o4 = decode_attention(q, kc, vc, cl, n_splits=4)
     assert o4.shape == (2, 1, 4, dv)
     np.testing.assert_allclose(o4, o1, rtol=1e-5, atol=1e-6)
+
+
+def test_choose_page_size_leaves_cacheable_pages():
+    """Regression: the heuristic used to return page == max_len for small
+    sequences (≤ 64 tokens), which makes every page a partial page — the
+    radix prefix cache can only donate FULL pages, so warm hits were
+    impossible at toy scales without an explicit page_size override. Any
+    max_len ≥ 16 must now yield at least two pages per max-length
+    sequence."""
+    for max_len in (16, 32, 64, 128, 4096):
+        page = tuning.choose_page_size(max_len, 64)
+        assert max_len // page >= 2, (max_len, page)
+        assert max_len % page == 0
+
+
+def test_choose_page_size_quantized_itemsize():
+    """A 1-byte pool fits 4x the tokens per VMEM budget; the heuristic
+    must not shrink pages below the f32 choice when bytes get cheaper."""
+    for max_len in (256, 4096):
+        p4 = tuning.choose_page_size(max_len, 64, kv_itemsize=4)
+        p1 = tuning.choose_page_size(max_len, 64, kv_itemsize=1)
+        assert p1 >= p4
+
+
+def test_bucket_pow2_refuses_truncating_hi():
+    """Regression: bucket_pow2(n, hi=h) with h < n used to silently clamp
+    to h — callers then sized buffers too small for the data they held."""
+    with pytest.raises(ValueError, match="truncate"):
+        bucket_pow2(33, hi=32)
+    # hi == n and hi > n stay valid
+    assert bucket_pow2(32, hi=32) == 32
+    assert bucket_pow2(17, hi=64) == 32
