@@ -405,10 +405,13 @@ def choose_varlen_blocks(
     wastes block_q − 1 rows — so the tile must be sized to the typical
     segment, not the pack: `segment_hint` is the caller's expected tokens
     per segment (the scheduler passes 1 when decode rows share its packs,
-    the prefill chunk when they don't; default: the whole pack, the
-    single-segment case). Start from min(128, bucket(hint)) and halve
-    until the working set fits the budget; floor at the f32 sublane
-    minimum so alignment waste stays proportionate."""
+    the prefill chunk when they don't, and K+1 when speculative verify
+    segments dominate — a K=4 draft chain in a 128-row tile would waste
+    123 rows, in its pow2 bucket (floor `_MIN_BLOCK`) it wastes ≤ 3;
+    default: the whole pack, the single-segment case). Start from
+    min(128, bucket(hint)) and halve until the working set fits the
+    budget; floor at the f32 sublane minimum so alignment waste stays
+    proportionate."""
     dv = d if dv is None else dv
     hint = max(min(segment_hint or total_tokens, total_tokens), 1)
     block_q = min(128, bucket_pow2(hint, lo=_MIN_BLOCK))
@@ -419,6 +422,17 @@ def choose_varlen_blocks(
     ):
         block_q = max(_MIN_BLOCK, block_q // 2)
     return VarlenBlocks(block_q=block_q)
+
+
+def padded_rows(seg_len: int, block_q: int) -> int:
+    """Pack rows one segment of `seg_len` tokens occupies: the packed
+    layout aligns every segment to a `block_q` multiple so each q tile
+    owns exactly one sequence (kernels/flashd_varlen.py). The engine's
+    packer and the waste-pinning tests share this so the padding
+    arithmetic can't drift between them."""
+    if seg_len <= 0:
+        return 0
+    return -(-seg_len // block_q) * block_q
 
 
 def bucket_pow2(n: int, *, lo: int = 8, hi: Optional[int] = None) -> int:

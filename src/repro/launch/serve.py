@@ -102,6 +102,18 @@ def main(argv=None):
                         "check fires (0 → no injection)")
     p.add_argument("--fault-seed", type=int, default=0,
                    help="seed for the deterministic fault injector")
+    p.add_argument("--spec-tokens", type=int, default=0,
+                   help="speculative decoding: draft tokens verified per "
+                        "round through one packed varlen dispatch "
+                        "(DESIGN.md §3.9); 0 → off. Greedy only; needs "
+                        "--kv-layout paged or --step-mode mixed")
+    p.add_argument("--draft-config", default="qwen3-0.6b",
+                   help="architecture of the draft model proposing spec "
+                        "tokens (smoke config under --smoke; randomly "
+                        "initialized unless the checkpoint provides it)")
+    p.add_argument("--no-spec", action="store_true",
+                   help="force speculation off even if --spec-tokens is "
+                        "set (quick A/B against the same command line)")
     args = p.parse_args(argv)
 
     cfg = configs.get_smoke_config(args.arch) if args.smoke else configs.get_config(args.arch)
@@ -114,6 +126,20 @@ def main(argv=None):
         state, _ = ckpt.restore(args.ckpt_dir, template)
         params = state.params
         print(f"restored weights from {args.ckpt_dir}")
+
+    spec_tokens = 0 if args.no_spec else args.spec_tokens
+    draft = None
+    if spec_tokens > 0:
+        # a randomly initialized draft still exercises the whole verify /
+        # rollback path (its proposals mostly get rejected — output stays
+        # token-identical by construction); real deployments restore
+        # trained draft weights here
+        dcfg = (configs.get_smoke_config(args.draft_config) if args.smoke
+                else configs.get_config(args.draft_config))
+        dparams = get_model(dcfg).init(jax.random.PRNGKey(args.seed + 1), dcfg)
+        draft = (dparams, dcfg)
+        print(f"speculative decoding: draft={args.draft_config} "
+              f"k={spec_tokens}")
 
     eng = Engine(params, cfg, ServeConfig(
         max_batch=args.max_batch,
@@ -133,7 +159,8 @@ def main(argv=None):
         deadline_s=args.deadline_ms / 1e3,
         fault_rate=args.fault_rate,
         fault_seed=args.fault_seed,
-    ))
+        spec_tokens=spec_tokens,
+    ), draft=draft)
     rng = np.random.default_rng(args.seed)
     shared = rng.integers(
         0, cfg.vocab_size, (args.shared_prefix_len,)
@@ -185,6 +212,12 @@ def main(argv=None):
               f"{st['retried']} retries, {st['downgrades']} downgrades "
               f"(impl now {st['attn_impl']}), "
               f"faults fired {st.get('injected_faults', {})}")
+    if st.get("spec_enabled"):
+        print(f"speculation: acceptance {100 * st['spec_acceptance_rate']:.1f}% "
+              f"({st['spec_accepted']}/{st['spec_drafted']} drafts, "
+              f"{st['spec_rejected']} rejected), "
+              f"{st['spec_mean_accepted']:.2f} accepted/round "
+              f"over {st['spec_rounds']} rounds")
     return 0
 
 

@@ -709,7 +709,7 @@ def forward_packed(
     kv_len: jax.Array,  # [B] per-sequence KV length AFTER this pack
     cache: dict,  # paged decode cache (init_decode_cache(layout="paged"))
     cfg: ModelConfig,
-    last_rows: jax.Array,  # [B] pack row of each sequence's last token (<0: none)
+    last_rows: jax.Array,  # [B] or [B, R] pack rows to read logits at (<0: none)
     block_q: Optional[int] = None,  # pack alignment granularity (the packer's)
 ):
     """One packed varlen step over the whole stack (DESIGN.md §3.5).
@@ -718,9 +718,11 @@ def forward_packed(
     single decode tokens ride in one flat [T] batch; every layer writes
     the pack's new K/V straight into the sequences' pages and attends
     through `varlen_attention` — there is no prefill-vs-decode fork
-    anywhere in the stack. Returns (logits [B, Vpad] — the hidden state at
-    `last_rows`, garbage for rows < 0 — and the updated cache). Requires
-    `packed_mixers_ok(cfg)` (global paged attention only).
+    anywhere in the stack. Returns (logits at `last_rows` — [B, Vpad] for
+    1-D rows, [B, R, Vpad] for 2-D rows (speculative verify reads logits
+    at every draft row of a segment, DESIGN.md §3.9) — garbage where
+    rows < 0 — and the updated cache). Requires `packed_mixers_ok(cfg)`
+    (global paged attention only).
 
     `block_q` MUST be the granularity the caller aligned segments to (the
     Pallas kernel derives per-block sequence ids from it); None falls back
@@ -757,10 +759,14 @@ def forward_packed(
 
     h, new_cache = _run_cached_groups(params, cache, h, cfg, block_step)
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
-    sel = h[0, jnp.maximum(last_rows, 0)]  # [B, D]; rows < 0 are garbage
+    rows = jnp.asarray(last_rows)
+    sel = h[0, jnp.maximum(rows, 0)]  # [B, D] or [B, R, D]; rows < 0 garbage
     head = params["lm_head"] if not cfg.tie_embeddings else params["embed"].T
-    logits = logits_from_hidden(sel[:, None], head, cfg.vocab_size)
-    return logits[:, 0], new_cache
+    if rows.ndim == 1:
+        logits = logits_from_hidden(sel[:, None], head, cfg.vocab_size)[:, 0]
+    else:
+        logits = logits_from_hidden(sel, head, cfg.vocab_size)  # [B, R, Vpad]
+    return logits, new_cache
 
 
 def _decode_block(bp, h, cfg, spec, cache, pos):

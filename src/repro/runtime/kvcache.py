@@ -519,6 +519,45 @@ class PagedKVAllocator:
         self._lens[seq] = new_len
         return cows
 
+    def rollback(self, seq: int, new_len: int) -> int:
+        """Speculative rollback — the inverse of `extend`. Truncate `seq`'s
+        materialized length to `new_len`, dropping the table's references
+        to every page wholly past the new boundary. Rejected-draft pages
+        are *freed, never donated*: they hold KV for tokens that are not
+        part of the committed stream, so indexing them in the radix tree
+        would break the bytes-are-a-pure-function-of-the-token-stream
+        invariant that prefix caching and the int8 slot-0 scale rule rely
+        on (DESIGN.md §3.9).
+
+        Pages this seq owned exclusively return to the pool *via its
+        reservation* — rollback + re-extend is the speculative steady
+        state, and crediting the reservation keeps the non-preemptive
+        worst-case admission guarantee intact (the freed page cannot be
+        claimed by a competing admission mid-flight). Returns the number
+        of pages actually freed."""
+        if seq not in self._tables:
+            raise PageError(f"seq {seq} not admitted")
+        cur = self._lens[seq]
+        if new_len < 0 or new_len > cur:
+            raise PageError(
+                f"rollback target {new_len} outside [0, {cur}] for seq {seq}"
+            )
+        table = self._tables[seq]
+        keep = pages_for(new_len, self.page_size)
+        freed = 0
+        for pid in table[keep:]:
+            # dropped pages lie past the accepted length, which is ≥ the
+            # shared/cached prompt prefix — they are never tree-indexed
+            assert pid not in self._tree, "rolling back a cached page"
+            self._ref[pid] -= 1
+            if self._ref[pid] == 0:
+                self._free.append(pid)
+                self._reserved[seq] = self._reserved.get(seq, 0) + 1
+                freed += 1
+        del table[keep:]
+        self._lens[seq] = new_len
+        return freed
+
     def _grow_page(self, seq: int) -> int:
         """One growth page: reservation first, free pool after (optimistic
         per-chunk allocation past the reserve)."""

@@ -5,6 +5,7 @@ from repro.runtime.resilience import (
     RetryPolicy,
 )
 from repro.serve.engine import Engine, ServeConfig, sample_token
+from repro.serve.speculative import DraftModel, OracleDraft, SpecState
 from repro.serve.scheduler import (
     DONE,
     EXPIRED,
@@ -20,6 +21,7 @@ from repro.serve.scheduler import (
 
 __all__ = [
     "Engine", "ServeConfig", "sample_token",
+    "DraftModel", "OracleDraft", "SpecState",
     "Request", "Scheduler", "Segment", "StepPlan",
     "QUEUED", "RUNNING", "DONE", "FAILED", "EXPIRED", "TERMINAL",
     "FaultInjector", "InjectedFault", "EngineCrash", "RetryPolicy",

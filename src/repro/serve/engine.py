@@ -139,6 +139,13 @@ class ServeConfig:
     step_mode: str = "sequential"  # "mixed": chunked-prefill packed steps
     token_budget: int = 0  # packed tokens per mixed step; 0 → heuristic
     prefill_chunk: int = 16  # max prompt tokens one sequence feeds per step
+    # ---- speculative decoding (DESIGN.md §3.9) ----
+    # K draft tokens verified per target step through one packed varlen
+    # dispatch; 0 disables. Needs `Engine(draft=...)` (a (params, cfg)
+    # pair for a small draft model, or a host callable), greedy sampling
+    # (temperature 0 — acceptance is argmax-exact), and a paged,
+    # packed-capable stack for the verify step.
+    spec_tokens: int = 0
     # ---- fault tolerance (DESIGN.md §3.7) ----
     max_retries: int = 3  # per-request fault-retry budget (then FAILED)
     retry_backoff_s: float = 0.0  # base of the exponential requeue backoff
@@ -216,7 +223,8 @@ class _PoolCtx:
 class Engine:
     def __init__(self, params, model_cfg: ModelConfig, serve_cfg: ServeConfig,
                  *, sharding_ctx=None,
-                 fault_injector: Optional[FaultInjector] = None):
+                 fault_injector: Optional[FaultInjector] = None,
+                 draft=None):
         self.params = params
         self.mc = model_cfg
         self.sc = serve_cfg
@@ -283,7 +291,38 @@ class Engine:
             "prompt_tokens": 0, "preemptions": 0,
             "failed": 0, "retried": 0, "expired": 0,
             "downgrades": 0, "slow_steps": 0,
+            "spec_rounds": 0, "spec_drafted": 0, "spec_accepted": 0,
         }
+        # ---- speculative decoding (DESIGN.md §3.9) ----
+        self._spec = None
+        if serve_cfg.spec_tokens > 0:
+            from repro.serve.speculative import DraftModel, SpecState  # lazy
+
+            if draft is None:
+                raise ValueError(
+                    "spec_tokens > 0 needs Engine(draft=...): a (params, "
+                    "ModelConfig) pair for a draft model or a host callable"
+                )
+            if serve_cfg.temperature > 0:
+                raise ValueError(
+                    "speculative decoding is greedy-only: the accept rule "
+                    "compares draft tokens against the target's argmax, so "
+                    "temperature must be 0"
+                )
+            if self._page_layout is None or not packed_mixers_ok(model_cfg) \
+                    or not (self._mixed_ok or serve_cfg.kv_layout == "paged"):
+                raise ValueError(
+                    "speculative decoding verifies drafts through the packed "
+                    "varlen step over the paged pool — needs kv_layout="
+                    "'paged' or step_mode='mixed' on a packed-capable stack"
+                )
+            if isinstance(draft, tuple):
+                dparams, dcfg = draft
+                draft = DraftModel(
+                    dparams, dcfg, max_batch=serve_cfg.max_batch,
+                    max_len=serve_cfg.max_len,
+                )
+            self._spec = SpecState(k=int(serve_cfg.spec_tokens), draft=draft)
         # ---- fault tolerance (DESIGN.md §3.7) ----
         if fault_injector is None and serve_cfg.fault_rate > 0:
             fault_injector = FaultInjector(
@@ -317,6 +356,7 @@ class Engine:
             )
         )
         self._mixed = jax.jit(self._mixed_fn, static_argnums=(8,))
+        self._verify = jax.jit(self._verify_fn, static_argnums=(8,))
 
     def _scope(self):
         """Sharding scope for traces/dispatches: activates the ctx and the
@@ -437,6 +477,9 @@ class Engine:
         self._stats["retried"] += sched.retried
         self._stats["failed"] += sched.failed
         self._stats["expired"] += sched.expired
+        self._stats["spec_rounds"] += sched.spec_rounds
+        self._stats["spec_drafted"] += sched.spec_drafted
+        self._stats["spec_accepted"] += sched.spec_accepted
 
     # ---- observability ----
     def stats(self) -> dict:
@@ -448,6 +491,16 @@ class Engine:
         s["hit_rate"] = s["hit_tokens"] / max(s["prompt_tokens"], 1)
         s["prefix_cache_enabled"] = self._cache_on
         s["preemption_enabled"] = bool(self.sc.preemption)
+        s["spec_enabled"] = self._spec is not None
+        s["spec_rejected"] = s["spec_drafted"] - s["spec_accepted"]
+        s["spec_acceptance_rate"] = (
+            s["spec_accepted"] / max(s["spec_drafted"], 1)
+        )
+        # committed tokens per verify round = accepted drafts + the bonus
+        # token every round emits — the speedup lever BENCH_spec sweeps
+        s["spec_mean_accepted"] = (
+            s["spec_accepted"] / max(s["spec_rounds"], 1)
+        )
         if self._alloc is not None:
             s.update(
                 evictions=self._alloc.evictions,
@@ -544,6 +597,51 @@ class Engine:
             last_rows, block_q=block_q,
         )
         return cache, sample_token(logits, key, self.sc)
+
+    def _verify_fn(self, params, cache, tokens, seq_ids, positions, kv_len,
+                   rows, draft_toks, block_q: int):
+        """ONE speculative verify step (DESIGN.md §3.9): the packed varlen
+        forward with logits read at EVERY verify row, plus the on-device
+        longest-accepted-prefix rule — all inside the jitted step, so a
+        speculative round costs exactly one host sync.
+
+        `rows` [B, R]: each verify segment's pack rows (row 0 is the
+        committed pending token, rows 1..n its draft chain; −1 pads — a
+        prefill-final segment uses only row 0). `draft_toks` [B, R−1]
+        (−1 = no draft) may live on device (DraftModel proposals never
+        visit the host): they are scattered into the pack's placeholder
+        token rows here, before the forward. Returns (cache, [B, R+1]):
+        the target's greedy token at every row, with the accepted-draft
+        count appended as the last column (split host-side after the one
+        sync). Greedy only — acceptance compares drafts against argmax,
+        which makes the committed stream token-identical to
+        non-speculative greedy decoding by construction."""
+        t = tokens.shape[0]
+        dr = rows[:, 1:]
+        # clamp proposals into the real vocab: an out-of-range id would
+        # embed as NaN (jnp.take fills OOB gathers) and poison the whole
+        # packed step through the masked accumulation. Acceptance below
+        # compares against the CLAMPED id — the rule is "accept iff the
+        # token actually fed equals the previous row's argmax", so output
+        # stays token-identical whatever a (vocab-mismatched, buggy,
+        # adversarial) draft proposes. Negatives stay −1 = no draft.
+        dt = jnp.minimum(draft_toks, self.mc.vocab_size - 1)
+        ok = (dr >= 0) & (dt >= 0)
+        # out-of-bounds index (t) + mode="drop" skips masked entries
+        # (−1 would WRAP to the last row)
+        idx = jnp.where(ok, dr, t)
+        vals = jnp.where(ok, dt, 0).astype(tokens.dtype)
+        tokens = tokens.at[idx.reshape(-1)].set(
+            vals.reshape(-1), mode="drop"
+        )
+        logits, cache = forward_packed(
+            params, tokens, seq_ids, positions, kv_len, cache, self.mc,
+            rows, block_q=block_q,
+        )  # [B, R, Vpad]
+        g = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [B, R]
+        match = (g[:, :-1] == dt) & (dt >= 0)
+        n_acc = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+        return cache, jnp.concatenate([g, n_acc[:, None]], axis=1)
 
     # ---- single-prompt-batch generation (prefill + n decode steps) ----
     def generate(self, prompts: np.ndarray, max_new_tokens: int) -> np.ndarray:
@@ -905,12 +1003,17 @@ class Engine:
         """Admission reservation: just the prompt under preemption
         (optimistic per-chunk allocation, DESIGN.md §3.6) or the worst
         case (prompt + remaining new tokens + speculative chunk slack,
-        clamped to max_len — writes past it hit the garbage page) without."""
+        clamped to max_len — writes past it hit the garbage page) without.
+        With speculative decoding the slack must also cover a full K+1-row
+        verify segment: rejected rows return their pages to the seq's
+        reservation (`alloc.rollback`), so the worst case never compounds
+        across rounds — one verify's overhang is enough."""
         n = len(req.tokens)
         if self.sc.preemption:
             return n
+        slack = max(chunk_n, self._spec.k + 1 if self._spec else 0)
         remaining = max_new_tokens - len(req.out)
-        return min(n + remaining + chunk_n, self.sc.max_len)
+        return min(n + remaining + slack, self.sc.max_len)
 
     def _pool_match(self, alloc, toks: np.ndarray):
         """Radix lookup for an admission, capped so ≥ 1 token prefills."""
@@ -941,6 +1044,152 @@ class Engine:
         if cached is not None and cached.n_tokens > 0:
             self._stats["prefix_hits"] += 1
             self._stats["hit_tokens"] += cached.n_tokens
+
+    # ---- speculative decoding rounds (DESIGN.md §3.9) ----
+    def _plan_grown(self, sched: Scheduler, alloc, ctx: _PoolCtx,
+                    budget: int, pchunk: int, drafts=None) -> StepPlan:
+        """Plan a packed step and materialize its pages; any slot
+        rollback — victim preemption, growth-fault requeue, or a retry
+        budget running out — invalidates the plan (a dead slot's segment
+        must not dispatch), so re-plan until a whole growth pass stays
+        stable. `drafts` adds speculative draft rows (plan_step funds
+        them from leftover budget only)."""
+        while True:
+            plan = sched.plan_step(budget, pchunk, drafts=drafts)
+            r0 = sched.rollbacks
+            for seg in plan.segments:
+                end = min(seg.start + len(seg.tokens), self.sc.max_len)
+                try:
+                    if end > alloc.seq_len(ctx.seq_of[seg.slot]):
+                        self._inj("page_alloc", sched.slots[seg.slot].rid)
+                        self._pool_grow(sched, alloc, ctx, seg.slot, end)
+                except InjectedFault as e:
+                    self._note_fault(e)
+                    self._pool_fault_slot(sched, alloc, ctx, seg.slot)
+                if sched.rollbacks != r0:
+                    break
+            if sched.rollbacks == r0:
+                return plan
+
+    def _spec_round(self, sched: Scheduler, alloc, ctx: _PoolCtx, *,
+                    budget: int, pchunk: int, block_q: int) -> List[int]:
+        """One speculative serving round: draft-propose K tokens per
+        decoding slot, verify them ALL (plus any prefill chunks in
+        flight) in ONE packed varlen dispatch, commit the longest
+        accepted prefix of each chain, and roll rejected rows' pages back
+        through the allocator. One host sync per round, exactly like a
+        plain mixed step — acceptance is pure throughput.
+
+        Memory soundness (DESIGN.md §3.9): `commit` leaves each slot's
+        `kv` at its accepted length, so `alloc.rollback(seq, kv)` frees
+        every page wholly past it — those pages are never donated to the
+        radix tree, and every retirement/donation path reads the stream
+        truncated to `kv`, so cached bytes stay a pure function of the
+        committed token stream (prefix caching and the int8 slot-0 scale
+        rule both survive speculation). Stale rejected KV inside the
+        boundary page sits at positions ≥ kv_len — masked by every
+        kernel, and overwritten by the next round's writes before any row
+        can attend to it."""
+        from repro.kernels.tuning import bucket_pow2, padded_rows
+        from repro.serve.speculative import DraftModel
+
+        spec = self._spec
+        K, R = spec.k, spec.k + 1
+        b = self.sc.max_batch
+        # 1. per-slot draft quota, deadline-clamped (the expire_overdue
+        #    bugfix: deadlines are only checked BETWEEN steps, so the
+        #    quota shrinks near one instead of overshooting it by K rows)
+        quota = {
+            s: sched.draft_quota(s, K, max_len=self.sc.max_len,
+                                 per_row_s=spec.row_ewma)
+            for s, sl in enumerate(sched.slots)
+            if sl.live and not sl.prefilling
+        }
+        # 2. propose
+        dev_drafts = None
+        drafts: Dict[int, np.ndarray] = {}
+        if isinstance(spec.draft, DraftModel):
+            spec.draft.sync(sched)
+            dev_drafts = spec.draft.propose(sched, K)  # [B, K], on device
+            # placeholder rows — the verify jit scatters the device ids
+            drafts = {s: np.zeros((q,), np.int32)
+                      for s, q in quota.items() if q > 0}
+        else:
+            for s, q in quota.items():
+                if q <= 0:
+                    continue
+                sl = sched.slots[s]
+                stream = np.concatenate([
+                    np.asarray(sl.prompt, np.int64),
+                    np.asarray(sl.out[sl.resumed:], np.int64),
+                ])
+                prop = np.asarray(spec.draft(sl.rid, stream, q), np.int32)
+                if len(prop):
+                    drafts[s] = prop[:q]
+        # 3. plan + grow (re-plan on any slot rollback)
+        plan = self._plan_grown(sched, alloc, ctx, budget, pchunk,
+                                drafts=drafts)
+        if not plan.segments:
+            return []
+        # 4. pack + ONE verify dispatch + ONE sync
+        t0 = time.monotonic()
+        off, spans = 0, []
+        for seg in plan.segments:
+            spans.append(off)
+            off += padded_rows(len(seg.tokens), block_q)
+        total = bucket_pow2(max(off, 1), lo=block_q)
+        tokens = np.zeros((total,), np.int32)
+        seq_ids = np.full((total,), -1, np.int32)
+        positions = np.full((total,), -1, np.int32)
+        kv_len = np.zeros((b,), np.int32)
+        rows = np.full((b, R), -1, np.int32)
+        dmat = np.full((b, K), -1, np.int32)
+        for seg, o in zip(plan.segments, spans):
+            n = len(seg.tokens)
+            tokens[o:o + n] = seg.tokens
+            seq_ids[o:o + n] = seg.slot
+            positions[o:o + n] = np.arange(seg.start, seg.start + n)
+            kv_len[seg.slot] = seg.start + n
+            if not seg.emits:
+                continue
+            if sched.slots[seg.slot].prefilling:
+                rows[seg.slot, 0] = o + n - 1  # prefill-final: last row only
+            else:
+                rows[seg.slot, :n] = np.arange(o, o + n)
+                dmat[seg.slot, :n - 1] = seg.tokens[1:]
+        draft_arg = (
+            jnp.where(jnp.asarray(dmat) >= 0, dev_drafts, -1)
+            if dev_drafts is not None else jnp.asarray(dmat)
+        )
+        self._inj("kernel_dispatch")
+        cache2, out = self._verify(
+            self.params, ctx.cache,
+            jnp.asarray(tokens), jnp.asarray(seq_ids),
+            jnp.asarray(positions), jnp.asarray(kv_len),
+            jnp.asarray(rows), draft_arg, block_q,
+        )
+        self._inj("device_step")
+        out_np = self._sync(out)  # one sync per speculative round
+        # commit the device cache only past the sync: a step fault above
+        # discards the round entirely, so its retry is exact
+        ctx.cache = cache2
+        g, n_acc = out_np[:, :R], out_np[:, R]
+        # 5. commit the accepted prefixes, then roll the allocator back
+        #    past every rejected row (freed, never donated)
+        finished = sched.commit(plan, g, n_acc=n_acc)
+        if isinstance(spec.draft, DraftModel):
+            spec.draft.committed(sched)
+        for seg in plan.segments:
+            sl = sched.slots[seg.slot]
+            if not sl.live or seg.slot not in ctx.seq_of:
+                continue
+            seq = ctx.seq_of[seg.slot]
+            if alloc.seq_len(seq) > sl.kv:
+                alloc.rollback(seq, sl.kv)
+        per_row = (time.monotonic() - t0) / max(plan.n_tokens, 1)
+        spec.row_ewma = (per_row if spec.row_ewma is None
+                         else 0.7 * spec.row_ewma + 0.3 * per_row)
+        return finished
 
     # ---- paged continuous batching (DESIGN.md §3.4 + §3.6) ----
     def _serve_paged(self, requests, max_new_tokens: int,
@@ -977,6 +1226,17 @@ class Engine:
         tok = jnp.zeros((b,), jnp.int32)
         pos = jnp.zeros((b,), jnp.int32)
         chunk_n = max(1, min(self.sc.decode_chunk, max_new_tokens))
+        spec_block_q = spec_budget = 0
+        if self._spec is not None:
+            from repro.kernels.tuning import bucket_pow2, choose_varlen_blocks
+
+            spec_budget = b * (self._spec.k + 1)
+            spec_block_q = choose_varlen_blocks(
+                bucket_pow2(spec_budget, lo=8),
+                self.mc.head_dim_, self.mc.head_dim_,
+                group=self.mc.n_heads // self.mc.n_kv_heads, page=page,
+                segment_hint=self._spec.k + 1,
+            ).block_q
 
         def assign(slot: int) -> bool:
             """Admit the highest-priority queued request into `slot` if
@@ -1096,6 +1356,30 @@ class Engine:
                     refill()
                     self.peak_active = sched.note_peak()
                     continue
+                if self._spec is not None:
+                    # speculative round replaces the per-token chunk loop:
+                    # growth happens inside _plan_grown, per-slot
+                    self._watchdog.start_step()
+                    try:
+                        finished = self._spec_round(
+                            sched, alloc, ctx, budget=spec_budget,
+                            pchunk=1, block_q=spec_block_q,
+                        )
+                    except InjectedFault as e:
+                        self._on_step_fault(
+                            sched, e,
+                            lambda v: self._pool_fault_slot(
+                                sched, alloc, ctx, v
+                            ),
+                        )
+                        continue
+                    self._watchdog.end_step(self._bump_step())
+                    self._clear_fault_streak()
+                    for s in finished:
+                        self._pool_retire(sched, alloc, ctx, s)
+                    refill()
+                    self.peak_active = sched.note_peak()
+                    continue
                 # materialize pages for this chunk's writes (clamped to
                 # max_len: the table is ⌈max_len/page⌉ wide and writes past
                 # it clamp to the garbage page in _paged_attn_step). A
@@ -1178,17 +1462,24 @@ class Engine:
         alloc, cache0 = self._paged_state()
         ctx = _PoolCtx(cache0)
         budget = self.sc.token_budget or (b + self.sc.prefill_chunk)
+        if self._spec is not None and not self.sc.token_budget:
+            # default budget must fund every slot's K+1-row verify chain
+            # on top of a prefill chunk, or drafts would never be planned
+            budget = b * (self._spec.k + 1) + self.sc.prefill_chunk
         pchunk = max(1, min(self.sc.prefill_chunk, budget))
         chunk_n = max(1, min(self.sc.decode_chunk, max_new_tokens))
         hd = self.mc.head_dim_
         # segment hint: with >1 slot the pack mixes 1-token decode rows
         # into every prefill step, and each pads to block_q — keep the
         # tile at the sublane minimum; a lone slot packs one prefill
-        # chunk per step, so the chunk itself is the segment
+        # chunk per step, so the chunk itself is the segment. With
+        # speculation on, decode segments are (K+1)-row verify chains.
+        seg_hint = (self._spec.k + 1 if self._spec is not None
+                    else (1 if b > 1 else pchunk))
         block_q = choose_varlen_blocks(
             bucket_pow2(budget, lo=8), hd, hd,
             group=self.mc.n_heads // self.mc.n_kv_heads, page=page,
-            segment_hint=1 if b > 1 else pchunk,
+            segment_hint=seg_hint,
         ).block_q
 
         def try_admit():
@@ -1322,29 +1613,6 @@ class Engine:
             ctx.cache = cache2  # commit past the sync (see dispatch)
             return toks_np
 
-        def plan_grown() -> StepPlan:
-            """Plan a packed step and materialize its pages; any slot
-            rollback — victim preemption, growth-fault requeue, or a
-            retry budget running out — invalidates the plan (a dead
-            slot's segment must not dispatch), so re-plan until a whole
-            growth pass stays stable."""
-            while True:
-                plan = sched.plan_step(budget, pchunk)
-                r0 = sched.rollbacks
-                for seg in plan.segments:
-                    end = min(seg.start + len(seg.tokens), self.sc.max_len)
-                    try:
-                        if end > alloc.seq_len(ctx.seq_of[seg.slot]):
-                            self._inj("page_alloc", sched.slots[seg.slot].rid)
-                            self._pool_grow(sched, alloc, ctx, seg.slot, end)
-                    except InjectedFault as e:
-                        self._note_fault(e)
-                        self._pool_fault_slot(sched, alloc, ctx, seg.slot)
-                    if sched.rollbacks != r0:
-                        break
-                if sched.rollbacks == r0:
-                    return plan
-
         try:
             try_admit()
             self.peak_active = sched.note_peak()
@@ -1359,12 +1627,20 @@ class Engine:
                     continue
                 self._watchdog.start_step()
                 try:
-                    if not any(sl.prefilling for sl in sched.slots):
+                    if self._spec is not None:
+                        # speculative rounds subsume both phases: verify
+                        # chains AND prefill chunks ride one packed step
+                        finished = self._spec_round(
+                            sched, alloc, ctx, budget=budget,
+                            pchunk=pchunk, block_q=block_q,
+                        )
+                    elif not any(sl.prefilling for sl in sched.slots):
                         toks_np = decode_chunk_phase()
                         finished = (sched.absorb_chunk(toks_np)
                                     if toks_np is not None else [])
                     else:
-                        plan = plan_grown()
+                        plan = self._plan_grown(sched, alloc, ctx,
+                                                budget, pchunk)
                         finished = (sched.commit(plan, dispatch(plan))
                                     if plan.segments else [])
                 except InjectedFault as e:

@@ -158,6 +158,10 @@ class Segment:
     tokens: np.ndarray  # token ids fed this step
     start: int  # absolute KV position of tokens[0]
     emits: bool  # does this segment's last row get sampled?
+    n_draft: int = 0  # trailing speculative rows: tokens[1:] are draft
+    # proposals to VERIFY (tokens[0] is the committed pending token);
+    # commit() keeps the longest accepted prefix and rolls kv back past
+    # the rest (DESIGN.md §3.9)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -214,6 +218,12 @@ class Scheduler:
         self.failed = 0  # requests terminal-FAILED (budget exhausted)
         self.expired = 0  # requests terminal-EXPIRED (deadline passed)
         self.rollbacks = 0  # preemptions + fault requeues (re-plan signal)
+        # speculative-decoding bookkeeping (DESIGN.md §3.9): aggregate and
+        # per-request drafted/accepted counters, filled by verify commits
+        self.spec_rounds = 0  # verify segments committed with n_draft > 0
+        self.spec_drafted = 0  # draft tokens proposed to the target
+        self.spec_accepted = 0  # draft tokens the target confirmed
+        self.spec_by_rid: Dict[int, Tuple[int, int]] = {}  # rid → (drafted, accepted)
         self._admit_counter = 0
         # time-to-first-token per request id, seconds from enqueue (every
         # request enqueues at construction) to the first token the request
@@ -467,8 +477,35 @@ class Scheduler:
                     break
         return finished
 
+    # ---- speculative draft budgeting (DESIGN.md §3.9) ----
+    def draft_quota(self, slot: int, k_max: int, *, max_len: int,
+                    per_row_s: Optional[float] = None) -> int:
+        """How many draft tokens `slot` may verify this step. Clamped so
+        the accepted prefix plus the bonus token can never exceed the
+        request's `max_new_tokens` or the cache's `max_len`, and — the
+        deadline bugfix — so a K-row verify step cannot overshoot a
+        deadline by K rows' worth of work: `expire_overdue` only runs
+        BETWEEN engine steps, so near the deadline the quota shrinks with
+        the remaining slack (`per_row_s` is the engine's measured
+        per-verify-row wall time)."""
+        sl = self.slots[slot]
+        if not sl.live or sl.prefilling:
+            return 0
+        k = min(int(k_max),
+                self.max_new_tokens - len(sl.out) - 1,
+                max_len - sl.kv - 1)
+        if k <= 0:
+            return 0
+        if sl.deadline is not None and per_row_s and per_row_s > 0:
+            slack = sl.deadline - self.now()
+            if slack <= 0:
+                return 0
+            k = min(k, max(0, int(slack / per_row_s) - 1))
+        return max(0, k)
+
     # ---- mixed-step planning (chunked-prefill continuous batching) ----
-    def plan_step(self, token_budget: int, prefill_chunk: int) -> StepPlan:
+    def plan_step(self, token_budget: int, prefill_chunk: int,
+                  drafts: Optional[Dict[int, np.ndarray]] = None) -> StepPlan:
         """One mixed step's packed work list.
 
         Decode slots first — every decoding slot contributes its pending
@@ -476,20 +513,22 @@ class Scheduler:
         wall of prefill can never starve decode. Remaining budget goes to
         prefilling slots' next prompt chunks in priority-then-request-id
         (FIFO within a class) order.
+
+        `drafts` (speculative decoding, DESIGN.md §3.9) maps decode slots
+        to proposed draft tokens. Draft rows are funded LAST, round-robin
+        across decode slots, from whatever budget prefill chunks left
+        over — draft rows count against `token_budget` but can never
+        starve a prefill chunk (acceptance is a throughput bonus, TTFT is
+        a latency promise). Values may be placeholders when the real
+        draft tokens live on device (the verify dispatch scatters them);
+        only the per-slot COUNT is planned here.
         """
-        segs: List[Segment] = []
         decoding = [
             s for s, sl in enumerate(self.slots)
             if sl.live and not sl.prefilling
         ]
-        budget = max(int(token_budget), len(decoding))
-        for s in decoding:
-            sl = self.slots[s]
-            segs.append(Segment(
-                slot=s, tokens=np.asarray([sl.pending], np.int32),
-                start=sl.kv, emits=True,
-            ))
-            budget -= 1
+        budget = max(int(token_budget), len(decoding)) - len(decoding)
+        pre_segs: List[Segment] = []
         prefilling = sorted(
             (s for s, sl in enumerate(self.slots) if sl.prefilling),
             key=lambda s: (-self.slots[s].priority, self.slots[s].rid),
@@ -501,33 +540,90 @@ class Scheduler:
             # ≥ 1: budget > 0 here, prefill_chunk ≥ 1, and a prefilling
             # slot always has unfed prompt left
             n = min(prefill_chunk, len(sl.prompt) - sl.fed, budget)
-            segs.append(Segment(
+            pre_segs.append(Segment(
                 slot=s,
                 tokens=np.asarray(sl.prompt[sl.fed:sl.fed + n], np.int32),
                 start=sl.fed,
                 emits=sl.fed + n == len(sl.prompt),
             ))
             budget -= n
+        extra: Dict[int, int] = {s: 0 for s in decoding}
+        if drafts:
+            gave = True
+            while budget > 0 and gave:
+                gave = False
+                for s in decoding:
+                    if budget <= 0:
+                        break
+                    if extra[s] < len(drafts.get(s, ())):
+                        extra[s] += 1
+                        budget -= 1
+                        gave = True
+        dec_segs: List[Segment] = []
+        for s in decoding:
+            sl = self.slots[s]
+            k = extra[s]
+            toks = [sl.pending]
+            if k:
+                toks.extend(int(t) for t in np.asarray(drafts[s])[:k])
+            dec_segs.append(Segment(
+                slot=s, tokens=np.asarray(toks, np.int32),
+                start=sl.kv, emits=True, n_draft=k,
+            ))
+        segs = dec_segs + pre_segs
         return StepPlan(
             segments=tuple(segs), n_tokens=sum(len(g.tokens) for g in segs)
         )
 
-    def commit(self, plan: StepPlan, sampled: np.ndarray) -> List[int]:
+    def commit(self, plan: StepPlan, sampled: np.ndarray,
+               n_acc: Optional[np.ndarray] = None) -> List[int]:
         """Apply one mixed step's sampled tokens ([n_slots], garbage at
         non-emitting slots). Returns finished slots (engine retires them
-        after freeing their memory)."""
+        after freeing their memory).
+
+        With `n_acc` (a speculative verify step, DESIGN.md §3.9),
+        `sampled` is [n_slots, R]: the target's greedy token at every
+        verify row. A decode segment commits the longest accepted prefix —
+        row j's token is appended for j = 0..n_acc[slot] (the last one is
+        the free "bonus" token from the first rejected row), stopping
+        early at EOS/max-tokens — and `kv` advances by exactly the tokens
+        committed, so the engine can roll the allocator back to it."""
         finished: List[int] = []
         for seg in plan.segments:
             sl = self.slots[seg.slot]
             if not sl.live:  # preempted after planning (engine re-plans, but stay safe)
                 continue
             n = len(seg.tokens)
+            if n_acc is not None and not sl.prefilling:
+                # verify segment: pending + accepted drafts + bonus token
+                k_ok = min(int(n_acc[seg.slot]), seg.n_draft)
+                consumed = 0
+                for j in range(k_ok + 1):
+                    t = int(sampled[seg.slot, j])
+                    sl.out.append(t)
+                    sl.pending = t
+                    consumed += 1
+                    if len(sl.out) == sl.resumed + 1 and sl.resumed == 0:
+                        self._mark_first_token(sl.rid)
+                    if self._done(sl.out):
+                        self.finish(sl.rid, sl.out)
+                        finished.append(seg.slot)
+                        break
+                sl.kv = seg.start + consumed  # rejected rows: kv rolls back
+                if seg.n_draft:
+                    acc = min(consumed, k_ok)
+                    self.spec_rounds += 1
+                    self.spec_drafted += seg.n_draft
+                    self.spec_accepted += acc
+                    d, a = self.spec_by_rid.get(sl.rid, (0, 0))
+                    self.spec_by_rid[sl.rid] = (d + seg.n_draft, a + acc)
+                continue
             sl.kv += n
             if sl.prefilling:
                 sl.fed += n
             if not seg.emits:
                 continue
-            t = int(sampled[seg.slot])
+            t = int(sampled[seg.slot]) if n_acc is None else int(sampled[seg.slot, 0])
             sl.out.append(t)
             sl.pending = t
             if len(sl.out) == sl.resumed + 1 and sl.resumed == 0:

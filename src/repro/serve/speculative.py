@@ -1,0 +1,216 @@
+"""Speculative decoding draft proposers (DESIGN.md §3.9).
+
+The engine verifies K proposed tokens per target step through ONE packed
+varlen dispatch (`Engine._verify_fn`): each speculation is a packed
+segment with explicit per-row `q_pos`, which the FLASH-D varlen kernel
+already supports — a draft chain is just a mid-sequence chunk. This
+module owns the OTHER half of the loop: where the K proposals come from.
+
+Two proposer kinds, selected by what `Engine(draft=...)` receives:
+
+  * `DraftModel` — a small model (e.g. `configs/qwen3_0_6b.py`) with its
+    own CONTIGUOUS KV cache, one slot per engine slot. Proposals are K
+    greedy decode steps under one jitted `lax.scan` and STAY ON DEVICE:
+    the engine scatters them into the verify pack inside the jitted step,
+    so a speculative round still costs exactly one host sync. The draft
+    cache needs no rollback machinery: positions past a slot's committed
+    length are simply stale (never read — the decode mask stops at the
+    tracked position), and accepted drafts ARE the committed tokens, so
+    after a round the draft KV below `min(kv, old + K)` is already
+    correct; `sync()` re-feeds whatever tail is missing and fully
+    re-prefills on slot reuse (rid change) or after a preemption rewind.
+
+  * any callable `fn(rid, tokens, k) -> np.ndarray` — a host-side
+    proposer fed the request's full visible stream (effective prompt +
+    every generated token, the last being the pending one). `OracleDraft`
+    is the benchmark/test instance: it proposes the known reference
+    continuation with a seeded per-token corruption rate, giving an
+    exactly controlled acceptance rate — greedy verify output is
+    token-identical at ANY accuracy, so benches can sweep acceptance
+    without training a real draft model.
+
+Either way the proposals are only ever *hints*: the target model's greedy
+argmax at every verify row decides what commits, so serving output is
+token-identical to non-speculative greedy decoding by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import ModelConfig, get_model
+from repro.models.transformer import prefill_lm
+
+__all__ = ["DraftModel", "OracleDraft", "SpecState"]
+
+
+@dataclasses.dataclass
+class SpecState:
+    """Engine-side speculative-decoding state: the draft proposer, the
+    static draft length K, and the measured per-verify-row wall time
+    (EWMA) that feeds the scheduler's deadline clamp (`draft_quota`)."""
+
+    k: int
+    draft: object  # DraftModel | callable(rid, tokens, k) -> np.ndarray
+    row_ewma: Optional[float] = None
+
+
+class DraftModel:
+    """Draft proposer backed by a small model with a contiguous KV cache.
+
+    Per-slot host state: `pos[s]` — how many leading positions of slot
+    `s`'s draft cache hold KV for the target's committed stream — and
+    `rid[s]`, the request the cache content belongs to. The protocol per
+    speculative round is `sync()` (catch every decoding slot's draft KV
+    up to the target's committed length), `propose()` (K greedy steps,
+    tokens stay on device), then after the engine commits the verify
+    results, `committed()` (advance `pos` past the accepted prefix —
+    those positions were written by `propose` with exactly the tokens
+    that committed)."""
+
+    def __init__(self, params, cfg: ModelConfig, *, max_batch: int,
+                 max_len: int):
+        self.params = params
+        self.cfg = cfg
+        self.api = get_model(cfg)
+        self.b = max_batch
+        self.max_len = max_len
+        self.cache = self.api.init_cache(max_batch, max_len, cfg)
+        self.pos = np.zeros(max_batch, np.int64)  # committed-valid KV length
+        self.rid = np.full(max_batch, -1, np.int64)  # cache content owner
+        self._last_k = 0
+        self._prefill = jax.jit(
+            lambda p, t, c, sp, ln: prefill_lm(
+                p, t, c, self.cfg, start_pos=sp, lengths=ln
+            )
+        )
+        self._propose_j = jax.jit(self._propose_fn, static_argnums=(4,))
+
+    def _propose_fn(self, params, cache, tok, pos, k: int):
+        """K greedy decode steps as one device program → drafts [B, K]."""
+
+        def body(carry, _):
+            cache, tok, pos = carry
+            logits, cache = self.api.decode_step(
+                params, cache, tok, pos, self.cfg
+            )
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return (cache, nxt, pos + 1), nxt
+
+        (cache, _, _), toks = jax.lax.scan(
+            body, (cache, tok, pos), None, length=k
+        )
+        return cache, toks.T  # [B, K]
+
+    def _write_slot(self, one_cache, slot: int) -> None:
+        # contiguous caches are stacked [n_blocks, batch, ...]: batch axis 1
+        self.cache = jax.tree.map(
+            lambda c, o: c.at[:, slot].set(o[:, 0]), self.cache, one_cache
+        )
+
+    def sync(self, sched) -> None:
+        """Bring every decoding slot's draft KV up to the target's
+        committed length. A slot serving a new request (or rewound past
+        the draft's valid length by a preemption resume) re-prefills its
+        whole committed stream; otherwise only the missing tail is fed
+        (`prefill_lm(start_pos=...)`). Device work only — no host sync."""
+        from repro.kernels.tuning import bucket_pow2  # lazy: no cycle
+
+        for s, sl in enumerate(sched.slots):
+            if not sl.live or sl.prefilling:
+                continue
+            fresh = self.rid[s] != sl.rid or self.pos[s] > sl.kv
+            start = 0 if fresh else int(self.pos[s])
+            if start == sl.kv:
+                self.rid[s] = sl.rid
+                continue
+            stream = sl.cache_tokens()  # token ids at positions [0, kv)
+            n = len(stream)
+            nb = bucket_pow2(max(n - start, 1), lo=8, hi=self.max_len)
+            padded = np.zeros((1, nb), np.int32)
+            padded[0, : n - start] = stream[start:]
+            view = (
+                self.api.init_cache(1, self.max_len, self.cfg)
+                if fresh
+                else jax.tree.map(lambda c: c[:, s : s + 1], self.cache)
+            )
+            _, view = self._prefill(
+                self.params, jnp.asarray(padded), view,
+                jnp.int32(start), jnp.asarray([n - start], jnp.int32),
+            )
+            self._write_slot(view, s)
+            self.pos[s] = n
+            self.rid[s] = sl.rid
+
+    def propose(self, sched, k: int) -> jax.Array:
+        """Greedy-propose `k` tokens for every decoding slot from its
+        pending token at its committed position. Returns a DEVICE [B, k]
+        array — the engine's verify step scatters it into the pack, so
+        draft tokens never round-trip through the host. Dead/prefilling
+        slots run masked garbage steps (their writes land at positions a
+        future occupant re-prefills over before ever reading)."""
+        tok = np.zeros((self.b,), np.int32)
+        pos = np.zeros((self.b,), np.int32)
+        for s, sl in enumerate(sched.slots):
+            if sl.live and not sl.prefilling:
+                tok[s] = sl.pending
+                pos[s] = sl.kv
+        self.cache, drafts = self._propose_j(
+            self.params, self.cache, jnp.asarray(tok), jnp.asarray(pos), int(k)
+        )
+        self._last_k = int(k)
+        return drafts
+
+    def committed(self, sched) -> None:
+        """Advance each synced slot's valid length past the round's
+        accepted prefix: `propose` wrote draft KV at positions
+        [old, old + K), and the accepted drafts ARE the committed tokens,
+        so positions below min(kv, old + K) already hold correct KV. The
+        bonus token's position (kv when a full K chain accepts) was never
+        fed to the draft — `sync` feeds that tail next round."""
+        for s, sl in enumerate(sched.slots):
+            if sl.live and not sl.prefilling and self.rid[s] == sl.rid:
+                self.pos[s] = min(sl.kv, int(self.pos[s]) + self._last_k)
+
+
+class OracleDraft:
+    """Host-callable proposer with an exactly controlled acceptance rate.
+
+    Proposes the known reference continuation of each request (the
+    non-speculative greedy output, computed once by the caller),
+    corrupting each token independently with probability `1 - accuracy`
+    to a guaranteed-wrong id (seeded). Acceptance then tracks `accuracy`
+    directly, and greedy verify output stays token-identical at any
+    setting — the harness for BENCH_spec.json's acceptance sweep and the
+    rollback-heavy property tests."""
+
+    def __init__(self, prompts: Sequence[np.ndarray],
+                 refs: Sequence[np.ndarray], vocab_size: int, *,
+                 accuracy: float = 1.0, seed: int = 0):
+        self.plen = {i: len(p) for i, p in enumerate(prompts)}
+        self.refs = {i: np.asarray(r, np.int64) for i, r in enumerate(refs)}
+        self.vocab = int(vocab_size)
+        self.accuracy = float(accuracy)
+        self.seed = int(seed)
+
+    def __call__(self, rid: int, tokens: np.ndarray, k: int) -> np.ndarray:
+        done = len(tokens) - self.plen[rid]  # output tokens emitted so far
+        ref = self.refs[rid]
+        prop = np.array(ref[done : done + k], np.int64)
+        if self.accuracy < 1.0 and len(prop):
+            # corruption is a pure function of (seed, rid, position): a
+            # re-proposal after rejection or preemption corrupts the same
+            # positions the same way, and a warm-up serve leaves the
+            # acceptance pattern of the next serve unchanged (benches
+            # time the SECOND run — it must replay the first exactly)
+            rng = np.random.default_rng((self.seed, rid, done))
+            flip = rng.random(len(prop)) >= self.accuracy
+            junk = rng.integers(0, self.vocab, len(prop))
+            junk = np.where(junk == prop, (junk + 1) % self.vocab, junk)
+            prop = np.where(flip, junk, prop)
+        return prop.astype(np.int32)

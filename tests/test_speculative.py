@@ -1,0 +1,451 @@
+"""Speculative decoding (DESIGN.md §3.9): greedy token identity, page
+rollback soundness, and draft-slot scheduling.
+
+The one invariant everything here pins: speculative serving is
+TOKEN-IDENTICAL to non-speculative greedy serving at ANY acceptance rate
+— the draft only ever proposes, the target's argmax at every verify row
+decides. `OracleDraft` makes acceptance a controlled dial (it corrupts
+the known reference continuation per-token with a seeded probability), so
+the property sweeps the whole rollback spectrum from 100 % accepted
+(self-draft) to 0 % (adversarial junk) across both serving loops
+(paged / mixed), both kernels (jnp / pallas varlen), and both KV dtypes
+(native / int8).
+
+Memory-soundness side: after every rejection rollback the allocator's
+full invariant check must pass (refcount conservation, reservation
+accounting), and the radix prefix tree must never index a page holding
+unaccepted draft KV — every cached chain stays a prefix of some
+request's COMMITTED token stream.
+
+Runs on the real `hypothesis` when installed and on the deterministic
+stub in `tests/conftest.py` otherwise (CI exercises both).
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import paper_llama
+from repro.kernels.tuning import choose_varlen_blocks, padded_rows
+from repro.models import get_model
+from repro.runtime.kvcache import PagedKVAllocator, PageError
+from repro.serve import (
+    DONE,
+    EXPIRED,
+    TERMINAL,
+    Engine,
+    FaultInjector,
+    OracleDraft,
+    Scheduler,
+    ServeConfig,
+)
+
+N_NEW = 8
+MODES = ("paged", "mixed")
+
+
+def _cfg(**kw):
+    return dataclasses.replace(
+        paper_llama.CONFIG, n_layers=2, d_model=48, n_heads=4, n_kv_heads=2,
+        d_ff=96, head_dim=12, vocab_size=64, vocab_pad_multiple=64, **kw,
+    )
+
+
+def _sc(mode: str, **kw) -> ServeConfig:
+    base = dict(max_batch=2, max_len=64, temperature=0.0,
+                kv_layout="paged", page_size=8)
+    if mode == "mixed":
+        base.update(step_mode="mixed")
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def spec_fixture():
+    cfg = _cfg()
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(1, cfg.vocab_size, (n,)).astype(np.int32)
+               for n in (5, 9, 13, 7)]
+    baselines = {
+        mode: Engine(params, cfg, _sc(mode)).serve(prompts, N_NEW)
+        for mode in MODES
+    }
+    return cfg, params, prompts, baselines
+
+
+# ---------------------------------------------------------------------------
+# the core property: spec == non-spec greedy, at any acceptance rate
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10**6),
+    accuracy=st.floats(min_value=0.0, max_value=1.0),
+    mode=st.sampled_from(MODES),
+    kv_dtype=st.sampled_from(["", "int8"]),
+    k=st.integers(min_value=1, max_value=4),
+)
+def test_spec_token_identity(spec_fixture, seed, accuracy, mode, kv_dtype, k):
+    """Any draft accuracy, either serving loop, either KV dtype: the
+    speculative output equals the non-speculative greedy output token for
+    token, and the allocator invariants hold afterwards. (int8 identity
+    is vs the int8 NON-spec baseline — quantization changes tokens, the
+    speculation must not change them further.)"""
+    cfg, params, prompts, baselines = spec_fixture
+    ref = (baselines[mode] if not kv_dtype else
+           Engine(params, cfg, _sc(mode, kv_dtype=kv_dtype))
+           .serve(prompts, N_NEW))
+    oracle = OracleDraft(prompts, ref, cfg.vocab_size,
+                         accuracy=accuracy, seed=seed)
+    eng = Engine(params, cfg,
+                 _sc(mode, kv_dtype=kv_dtype, spec_tokens=k), draft=oracle)
+    outs = eng.serve(prompts, N_NEW)
+    for i, (a, b) in enumerate(zip(ref, outs)):
+        np.testing.assert_array_equal(a, b, err_msg=f"req {i}")
+    eng._alloc.check(eng._paged_cache)
+    s = eng.stats()
+    assert s["spec_drafted"] == s["spec_accepted"] + s["spec_rejected"]
+    if accuracy == 1.0:
+        assert s["spec_acceptance_rate"] == 1.0
+    if accuracy == 0.0 and s["spec_drafted"] > 0:
+        assert s["spec_accepted"] == 0
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("attn_impl", ["flashd", "flashd_pallas"])
+def test_self_draft_identity(spec_fixture, mode, attn_impl):
+    """Target-as-its-own-draft accepts every token (the draft IS the
+    target), so acceptance is exactly 1.0 and output is still identical —
+    under both the jnp varlen mirror and the Pallas kernel."""
+    cfg0, _, prompts, _ = spec_fixture
+    cfg = dataclasses.replace(cfg0, attn_impl=attn_impl)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    ref = Engine(params, cfg, _sc(mode)).serve(prompts, N_NEW)
+    eng = Engine(params, cfg, _sc(mode, spec_tokens=3), draft=(params, cfg))
+    outs = eng.serve(prompts, N_NEW)
+    for a, b in zip(ref, outs):
+        np.testing.assert_array_equal(a, b)
+    s = eng.stats()
+    assert s["spec_acceptance_rate"] == 1.0 and s["spec_rounds"] > 0
+    # the whole point: each verify round commits > 1 token on average
+    assert s["spec_mean_accepted"] > 0
+    eng._alloc.check(eng._paged_cache)
+
+
+def test_draft_with_mismatched_vocab_is_safe(spec_fixture):
+    """A draft proposing ids outside the target's vocab (a real
+    vocab-mismatched draft model) must not corrupt output: OOB ids are
+    clamped before they can embed (an unclamped OOB `jnp.take` fills NaN
+    and would poison the whole packed step) and acceptance compares
+    against the clamped id actually fed — so the stream stays
+    token-identical whatever the draft proposes."""
+    cfg, params, prompts, baselines = spec_fixture
+
+    def junk_draft(rid, tokens, kk):
+        return np.full((kk,), cfg.vocab_size + 1000, np.int32)
+
+    eng = Engine(params, cfg, _sc("mixed", spec_tokens=3), draft=junk_draft)
+    outs = eng.serve(prompts, N_NEW)
+    for a, b in zip(baselines["mixed"], outs):
+        np.testing.assert_array_equal(a, b)
+    s = eng.stats()
+    assert s["spec_drafted"] > 0  # proposals were made and verified
+
+
+# ---------------------------------------------------------------------------
+# memory soundness: rollback invariants + prefix-cache purity
+# ---------------------------------------------------------------------------
+
+def test_allocator_invariants_after_every_rollback(spec_fixture, monkeypatch):
+    """Run a rejection-heavy serve with the allocator's full invariant
+    check wired into EVERY rollback call — refcounts, free-list and
+    reservation accounting must be consistent at each intermediate state,
+    not just at the end."""
+    cfg, params, prompts, baselines = spec_fixture
+    calls = []
+    orig = PagedKVAllocator.rollback
+
+    def checked(self, seq, new_len):
+        freed = orig(self, seq, new_len)
+        self.check()
+        calls.append(freed)
+        return freed
+
+    monkeypatch.setattr(PagedKVAllocator, "rollback", checked)
+    for mode in MODES:
+        oracle = OracleDraft(prompts, baselines[mode], cfg.vocab_size,
+                             accuracy=0.2, seed=3)
+        eng = Engine(params, cfg, _sc(mode, spec_tokens=4), draft=oracle)
+        outs = eng.serve(prompts, N_NEW)
+        for a, b in zip(baselines[mode], outs):
+            np.testing.assert_array_equal(a, b)
+    assert calls, "a 20%-accuracy draft must trigger rollbacks"
+    assert any(f > 0 for f in calls), "some rollback must free whole pages"
+
+
+def test_radix_tree_never_holds_draft_pages(spec_fixture):
+    """After a rejection-heavy serve with the prefix cache on, every
+    chain the radix tree indexes is a prefix of some request's COMMITTED
+    stream (prompt + emitted tokens) — unaccepted draft KV is freed, never
+    donated, so cached bytes stay a pure function of the token stream."""
+    cfg, params, prompts, baselines = spec_fixture
+    for mode in MODES:
+        oracle = OracleDraft(prompts, baselines[mode], cfg.vocab_size,
+                             accuracy=0.3, seed=9)
+        eng = Engine(params, cfg, _sc(mode, spec_tokens=4), draft=oracle)
+        outs = eng.serve(prompts, N_NEW)
+        streams = [np.concatenate([p, np.asarray(o, np.int64)])
+                   for p, o in zip(prompts, outs)]
+        chains = eng._alloc.cached_chains()
+        assert chains, "prefix cache should have indexed finished prompts"
+        for chain in chains:
+            ok = any(len(chain) <= len(s_)
+                     and np.array_equal(chain, s_[: len(chain)])
+                     for s_ in streams)
+            assert ok, f"cached chain {chain} is not a committed prefix"
+        # and warm reuse of those chains still serves identically
+        outs2 = eng.serve(prompts, N_NEW)
+        for a, b in zip(outs, outs2):
+            np.testing.assert_array_equal(a, b)
+        assert eng.stats()["hit_tokens"] > 0
+
+
+# ---------------------------------------------------------------------------
+# chaos: speculation under injected faults
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10**6),
+    rate=st.floats(min_value=0.05, max_value=0.20),
+    mode=st.sampled_from(MODES),
+)
+def test_chaos_with_speculation(spec_fixture, seed, rate, mode):
+    """Seeded fault injection with speculation on: every request reaches
+    a terminal state, DONE requests are token-identical to the fault-free
+    non-speculative baseline, and the pool invariants hold."""
+    cfg, params, prompts, baselines = spec_fixture
+    oracle = OracleDraft(prompts, baselines[mode], cfg.vocab_size,
+                         accuracy=0.6, seed=seed)
+    eng = Engine(params, cfg, _sc(mode, spec_tokens=3), draft=oracle,
+                 fault_injector=FaultInjector(rate=rate, seed=seed))
+    outs = eng.serve(prompts, N_NEW)
+    status = eng.stats()["request_status"]
+    assert set(status) == set(range(len(prompts)))
+    assert all(s in TERMINAL for s in status.values()), status
+    for i, base in enumerate(baselines[mode]):
+        if status[i] == DONE:
+            np.testing.assert_array_equal(base, outs[i])
+        else:
+            np.testing.assert_array_equal(base[: len(outs[i])], outs[i])
+    eng._alloc.check()
+
+
+# ---------------------------------------------------------------------------
+# deadlines: draft budgeting must not overshoot them
+# ---------------------------------------------------------------------------
+
+def test_deadline_expiry_under_speculation(spec_fixture):
+    """Deadline checks only run BETWEEN engine steps; with speculation on
+    an overdue request must still expire cleanly (status EXPIRED, partial
+    output a prefix of the reference) while undeadlined neighbors finish
+    token-identically."""
+    cfg, params, prompts, baselines = spec_fixture
+    for mode in MODES:
+        oracle = OracleDraft(prompts, baselines[mode], cfg.vocab_size,
+                             accuracy=1.0, seed=0)
+        eng = Engine(params, cfg, _sc(mode, spec_tokens=3), draft=oracle)
+        outs = eng.serve(prompts, N_NEW, deadlines=[None, 0.0, None, 0.0])
+        status = eng.stats()["request_status"]
+        assert status[1] == EXPIRED and status[3] == EXPIRED, (mode, status)
+        assert status[0] == DONE and status[2] == DONE
+        for i in (0, 2):
+            np.testing.assert_array_equal(baselines[mode][i], outs[i])
+        for i in (1, 3):
+            np.testing.assert_array_equal(
+                baselines[mode][i][: len(outs[i])], outs[i])
+        eng._alloc.check()
+
+
+def test_draft_quota_clamps():
+    """`draft_quota` never lets accepted-prefix + bonus token overshoot
+    max_new_tokens, max_len, or — the bugfix — a deadline (quota shrinks
+    with remaining slack / measured per-row seconds)."""
+    sched = Scheduler([np.asarray([1, 2, 3])], 6, 1, eos_id=-1)
+    rid, prompt = sched.take_head()
+    sched.admit_prefilling(0, rid, prompt)
+    assert sched.draft_quota(0, 4, max_len=32) == 0  # prefilling: no drafts
+    plan = sched.plan_step(8, 8)
+    sched.commit(plan, np.asarray([5], np.int32))  # prefill done, 1st token
+    sl = sched.slots[0]
+    assert not sl.prefilling
+    # plain clamp: k_max wins when there is room
+    assert sched.draft_quota(0, 2, max_len=32) == 2
+    # max_new_tokens: 1 emitted, 6 allowed → at most 5 more incl. bonus → 4
+    assert sched.draft_quota(0, 10, max_len=32) == 4
+    # max_len: kv=3, max_len=5 → one draft row + bonus fills the cache
+    assert sched.draft_quota(0, 10, max_len=5) == 1
+    assert sched.draft_quota(0, 10, max_len=4) == 0  # no room at all
+    # deadline clamp: 0.05 s slack at 0.01 s/row → ≤ 4 rows incl. bonus
+    sl.deadline = sched.now() + 0.05
+    assert sched.draft_quota(0, 10, max_len=32, per_row_s=0.01) <= 4
+    sl.deadline = sched.now() - 1.0  # already overdue → no drafts at all
+    assert sched.draft_quota(0, 10, max_len=32, per_row_s=0.01) == 0
+    # no per-row estimate yet (first round): deadline can't clamp
+    assert sched.draft_quota(0, 2, max_len=32) == 2
+
+
+def test_plan_step_draft_budgeting():
+    """Draft rows are funded LAST from leftover budget, round-robin
+    across decode slots — prefill chunks are never starved, and the
+    decode floor (one pending row per slot) is always granted."""
+    reqs = [np.asarray([1, 2]), np.asarray([3, 4]), np.asarray([5, 6, 7, 8])]
+    sched = Scheduler(reqs, 8, 3, eos_id=-1)
+    for s in range(3):
+        rid, prompt = sched.take_head()
+        sched.admit_prefilling(s, rid, prompt)
+    # finish slots 0 and 1's prefill so they decode; slot 2 keeps prefilling
+    plan = sched.plan_step(4, 2)
+    sched.commit(plan, np.asarray([9, 9, 9], np.int32))
+    assert not sched.slots[0].prefilling and not sched.slots[1].prefilling
+    assert sched.slots[2].prefilling
+    drafts = {0: np.asarray([1, 1, 1], np.int32),
+              1: np.asarray([2, 2], np.int32)}
+    # budget 6 = 2 decode floor + 2 prefill chunk + 2 leftover: the chunk
+    # is funded before any draft, leftovers split 1/1 round-robin
+    plan = sched.plan_step(6, 2, drafts=drafts)
+    by_slot = {g.slot: g for g in plan.segments}
+    assert len(by_slot[2].tokens) == 2 and by_slot[2].n_draft == 0
+    assert by_slot[0].n_draft == by_slot[1].n_draft == 1
+    assert plan.n_tokens == 6
+    # verify-segment layout: tokens[0] is the committed pending token
+    assert by_slot[0].tokens[0] == sched.slots[0].pending
+    assert list(by_slot[0].tokens[1:]) == [1]
+    # a fat budget funds every proposed draft but never invents rows
+    plan = sched.plan_step(50, 2, drafts=drafts)
+    by_slot = {g.slot: g for g in plan.segments}
+    assert by_slot[0].n_draft == 3 and by_slot[1].n_draft == 2
+    # zero leftover: decode floor + chunk only, drafts all dropped
+    plan = sched.plan_step(2, 2, drafts=drafts)
+    assert all(g.n_draft == 0 for g in plan.segments)
+
+
+def test_commit_accept_reject_prefix():
+    """`commit` with n_acc applies the longest-accepted-prefix rule: the
+    bonus token always lands, acceptance beyond n_draft is clamped, EOS
+    inside the accepted prefix truncates, and kv tracks exactly the
+    committed tokens so the engine can roll pages back to it."""
+    sched = Scheduler([np.asarray([1, 2])] * 2, 10, 2, eos_id=7)
+    for s in range(2):
+        rid, prompt = sched.take_head()
+        sched.admit_prefilling(s, rid, prompt)
+    plan = sched.plan_step(8, 4)
+    sched.commit(plan, np.asarray([5, 5], np.int32))
+    drafts = {0: np.asarray([11, 12, 13], np.int32),
+              1: np.asarray([21, 22, 23], np.int32)}
+    plan = sched.plan_step(50, 4, drafts=drafts)
+    # slot 0: accept 2 drafts + bonus; slot 1: reject at row 0 → bonus only
+    g = np.asarray([[11, 12, 33, 0], [44, 0, 0, 0]], np.int32)
+    sched.commit(plan, g, n_acc=np.asarray([2, 0]))
+    assert sched.slots[0].out[-3:] == [11, 12, 33]
+    assert sched.slots[1].out[-1] == 44 and len(sched.slots[1].out) == 2
+    # kv = segment start + rows consumed (pending + accepted drafts); the
+    # bonus token is the NEW pending — its KV is not in the cache yet
+    assert sched.slots[0].kv == 2 + 1 + 2
+    assert sched.slots[1].kv == 2 + 1
+    assert sched.spec_drafted == 6 and sched.spec_accepted == 2
+    # EOS inside the accepted prefix: commits up to EOS, finishes the slot
+    drafts = {0: np.asarray([7, 99], np.int32)}
+    plan = sched.plan_step(50, 4, drafts=drafts)
+    seg = next(gg for gg in plan.segments if gg.slot == 0)
+    assert seg.n_draft == 2
+    g = np.asarray([[7, 55, 66, 0], [0, 0, 0, 0]], np.int32)
+    finished = sched.commit(plan, g, n_acc=np.asarray([2, 0]))
+    assert 0 in finished
+    assert sched.slots[0].out[-1] == 7  # stopped at EOS, dropped the rest
+    assert sched.slots[0].kv == 5 + 1  # only the EOS row consumed
+
+
+# ---------------------------------------------------------------------------
+# small-segment varlen tuning (satellite): K+1-row verify chains must not
+# pad to a 128-row tile
+# ---------------------------------------------------------------------------
+
+def test_small_segment_block_q_and_row_waste():
+    bl = choose_varlen_blocks(
+        256, 64, 64, group=2, page=16, segment_hint=5
+    )
+    assert bl.block_q == 8  # pow2 bucket of 5, floored at the sublane min
+    assert padded_rows(5, bl.block_q) - 5 <= 3  # ≤ 3 wasted rows per chain
+    # a decode-only hint stays at the floor; a prefill-sized hint does not
+    assert choose_varlen_blocks(
+        256, 64, 64, group=2, page=16, segment_hint=1
+    ).block_q == 8
+    assert choose_varlen_blocks(
+        512, 64, 64, group=2, page=16, segment_hint=128
+    ).block_q >= 64
+    # padded_rows: exact multiples don't pad, zero-length packs zero rows
+    assert padded_rows(8, 8) == 8
+    assert padded_rows(9, 8) == 16
+    assert padded_rows(0, 8) == 0
+
+
+# ---------------------------------------------------------------------------
+# allocator rollback unit semantics
+# ---------------------------------------------------------------------------
+
+def test_allocator_rollback_unit():
+    """rollback() is the inverse of extend(): wholly-past-target pages
+    return to the free list AND to the sequence's reservation credit, the
+    boundary page survives, and out-of-range targets raise."""
+    alloc = PagedKVAllocator(n_pages=9, page_size=4)
+    alloc.admit(1, prompt_len=6, reserve_tokens=24)  # 2 pages live, 4 reserved
+    free0, res0 = alloc.free_pages, alloc._reserved[1]
+    alloc.extend(1, 14)  # grows to 4 pages, funded by 2 reservation credits
+    assert alloc._reserved[1] == res0 - 2
+    assert alloc.free_pages == free0  # reservation-funded: no net change
+    assert alloc.pages_in_use == 4 + 0  # (garbage page has refcount 0)
+    freed = alloc.rollback(1, 7)  # back inside page 1: pages 2,3 drop
+    assert freed == 2
+    assert alloc.free_pages == free0
+    assert alloc._reserved[1] == res0  # credits restored with the pages
+    assert alloc.pages_in_use == 2
+    assert alloc.seq_len(1) == 7 and len(alloc.table(1)) == 2
+    alloc.check()
+    assert alloc.rollback(1, 7) == 0  # no-op at the boundary
+    with pytest.raises(PageError):
+        alloc.rollback(1, 8)  # forward rollback is nonsense
+    with pytest.raises(PageError):
+        alloc.rollback(1, -1)
+    with pytest.raises(PageError):
+        alloc.rollback(2, 0)  # unknown sequence
+    # regrow after rollback: the restored credits fund it again
+    alloc.extend(1, 14)
+    alloc.rollback(1, 0)  # full rollback drops every page
+    assert alloc.seq_len(1) == 0 and alloc.table(1) == []
+    alloc.check()
+
+
+# ---------------------------------------------------------------------------
+# configuration gates
+# ---------------------------------------------------------------------------
+
+def test_spec_config_validation(spec_fixture):
+    cfg, params, _, _ = spec_fixture
+    with pytest.raises(ValueError, match="draft"):
+        Engine(params, cfg, _sc("mixed", spec_tokens=3))
+    with pytest.raises(ValueError, match="greedy"):
+        Engine(params, cfg, _sc("mixed", spec_tokens=3, temperature=0.8),
+               draft=(params, cfg))
+    with pytest.raises(ValueError, match="paged|packed"):
+        Engine(params, cfg,
+               ServeConfig(max_batch=2, max_len=64, temperature=0.0,
+                           spec_tokens=3),
+               draft=(params, cfg))
